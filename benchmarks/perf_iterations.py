@@ -1,0 +1,240 @@
+"""§Perf hillclimb driver: run tagged dry-run variants of the three selected
+(arch × shape) pairs and record before/after roofline terms.
+
+Pair selection (from the 40-pair baseline table, EXPERIMENTS.md §Roofline):
+  * gemma-2b × train_4k        — paper-representative: the UCFL mixing
+    collective dominates (collective-bound, tx 5.44s > tm 4.22s).
+  * deepseek-v3-671b × decode_32k — worst useful-FLOPs ratio (0.001):
+    naive MLA re-expands K/V from the latent every decoded token.
+  * nemotron-4-340b × decode_32k  — most collective-bound (tx 5.4× tm):
+    FSDP re-gathers weight shards for every decoded token.
+
+Each iteration is (hypothesis with napkin math, knob change) — the knobs are
+real framework features (mixing schedule, stream count, MLA absorption,
+serve-time 2D tensor parallelism), not ad-hoc hacks.  Results land as tagged
+artifacts next to the baselines and are summarized to
+benchmarks/results/perf_iterations.json; EXPERIMENTS.md §Perf is the
+narrative log.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations [--group NAME]
+
+MUST run standalone (forces 512 host devices via repro.launch.dryrun import).
+"""
+from __future__ import annotations
+
+# dryrun import must precede everything jax-touching (sets XLA_FLAGS)
+from repro.launch.dryrun import run_case  # noqa: E402
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# (name, arch, shape, kwargs, hypothesis)
+ITERATIONS = {
+    # ------------------------------------------------------------------
+    # Pair 1 — gemma-2b train_4k: the paper's own technique.  Baseline =
+    # gspmd einsum with k=4 streams: all-gather 188.8 GB/dev, tx 5.44 s.
+    # Napkin: P = 2.5B bf16 = 5 GB; client stack m=16 over "data"; the
+    # einsum makes GSPMD all-gather the stack (m·P/modelshards ≈ 5 GB ·16/16
+    # per dev plus remat recompute doubling).  Explicit streams psum moves
+    # only k weighted copies: volume ∝ k·P not m·P → predict tx ↓ ~2×
+    # at k=4 and the all-gather component ↓ ≥4×.
+    "mixing": [
+        ("k4_shardmap_streams", "gemma-2b", "train_4k",
+         dict(n_streams=4, schedule="shard_map_streams"),
+         "psum of k=4 weighted copies replaces the m=16 client-stack "
+         "all-gather: collective bytes ∝ k·P instead of m·P → tx ↓ ~2×"),
+        ("k1_fedavg_gspmd", "gemma-2b", "train_4k",
+         dict(n_streams=1, schedule="gspmd"),
+         "paper-faithful FedAvg (k=1): the collective lower bound the "
+         "paper trades against (its Fig.3 left end)"),
+        ("k16_unicast_gspmd", "gemma-2b", "train_4k",
+         dict(n_streams=16, schedule="gspmd"),
+         "full personalization (k=m=16): the paper's m-fold downlink — "
+         "collective term should grow toward m× the k=1 mixing volume"),
+        ("k16_shardmap_unicast", "gemma-2b", "train_4k",
+         dict(n_streams=16, schedule="shard_map_unicast"),
+         "explicit all-gather + local-mix at k=m: pins the unicast "
+         "protocol; expect ≈ gspmd k=16 volume (same information moves)"),
+        ("k4_no_remat", "gemma-2b", "train_4k",
+         dict(n_streams=4, schedule="shard_map_streams", remat=False),
+         "remat off: memory term ↓ (no recompute re-reads) at the price "
+         "of live activations; checks how much of tm is remat traffic"),
+    ],
+    # ------------------------------------------------------------------
+    # Pair 2 — deepseek-v3 decode_32k: worst useful-FLOPs ratio (0.001).
+    # Baseline tm = 1589 ms, all-gather 37.7 GB/dev.  Napkin: naive MLA
+    # expands kv = wkv_b(c_all) = (128, 32768, 128H, 256) bf16 = 274 GB
+    # per layer per step, re-read from HBM; absorbed path scores in the
+    # 512-dim latent: touches only c_all (4.3 GB global) → predict
+    # tm ↓ ≥10×.  serve_tp kills the FSDP weight gather (params 671B·2B /
+    # 256 chips = 5.2 GB stationary) → all-gather ↓ to activation size.
+    "mla": [
+        ("absorb", "deepseek-v3-671b", "decode_32k",
+         dict(overrides={"attn.mla_absorb": True}),
+         "absorbed MLA decode scores in latent space: kills the per-step "
+         "(B,S,H,256) K/V expansion → memory term ↓ ≥10×"),
+        ("absorb_servetp", "deepseek-v3-671b", "decode_32k",
+         dict(overrides={"attn.mla_absorb": True, "serve_tp": True}),
+         "absorb + weight-stationary 2D TP: FSDP weight all-gather "
+         "(37.7 GB/dev) → activation all-reduces (MBs) → collective ↓ ~10×"),
+    ],
+    # ------------------------------------------------------------------
+    # Pair 1, round 2 — the k-sweep REFUTED the first hypothesis: tx moves
+    # only 5407→5595 ms from k=1 to k=16, so the mixing is ~3% of tx; the
+    # 175 GiB all-gather + 71 GiB all-reduce are tensor-parallel activation
+    # collectives of the d_model/head_dim sharding (model axis = 16) that
+    # exist even under FedAvg.  New hypothesis: gemma-2b (5 GB params bf16 +
+    # 5 GB momentum) fits ONE chip — use client-per-chip placement
+    # (fl_client_axis="all": m=256 clients, weights replicated, batch 1
+    # seq/client).  TP collectives vanish; tx becomes ~purely the mixing:
+    # psum of k weighted copies ≈ 2·k·P = 40 GB at k=4 → predict tx
+    # 5445 → <1000 ms and the k-sweep finally traces the paper's trade-off.
+    "placement": [
+        ("cpc_k4", "gemma-2b", "train_4k",
+         dict(n_streams=4, overrides={"fl_client_axis": "all"}),
+         "client-per-chip (m=256, replicated weights): TP collectives "
+         "vanish; tx ≈ pure k=4 mixing ≈ 2·k·P ≈ 40 GB → tx ↓ ~6×"),
+        ("cpc_k1", "gemma-2b", "train_4k",
+         dict(n_streams=1, overrides={"fl_client_axis": "all"}),
+         "FedAvg under client-per-chip: the mixing lower bound (2·P)"),
+        ("cpc_k16", "gemma-2b", "train_4k",
+         dict(n_streams=16, overrides={"fl_client_axis": "all"}),
+         "k=16 streams under client-per-chip: tx should now scale ~k "
+         "(the paper's stream/downlink trade-off, visible at last)"),
+    ],
+    # ------------------------------------------------------------------
+    # Pairs 2+3, round 2 — absorb_servetp REFUTED the serve_tp-alone
+    # hypothesis: tx stayed ~920 ms with a 42.7 GiB all-gather.  Diagnosis
+    # from the HLO: decode token/pos inputs were replicated (P()), so GSPMD
+    # gathered the *batch-sharded cache* (61 layers × 0.6 GiB ≈ 42 GiB) to
+    # meet the replicated activations.  Fix: shard token/pos over "data"
+    # like the cache (now the default in build_decode_case).  Predict the
+    # remaining all-gather collapses to activation size → deepseek tx
+    # 919 → <100 ms; nemotron decode tx likewise.
+    "inputs": [
+        ("deepseek_absorb_fixed", "deepseek-v3-671b", "decode_32k",
+         dict(overrides={"attn.mla_absorb": True, "serve_tp": True}),
+         "absorb + serve_tp + batch-sharded decode inputs: cache gather "
+         "eliminated → tx ↓ ~10×"),
+        ("nemotron_servetp_fixed", "nemotron-4-340b", "decode_32k",
+         dict(overrides={"serve_tp": True}),
+         "serve_tp + batch-sharded decode inputs on the dense giant"),
+        ("nemotron_fixed_only", "nemotron-4-340b", "decode_32k",
+         dict(),
+         "input-sharding fix alone (no serve_tp): separates the two "
+         "effects — how much of the 154 GiB gather was the cache vs FSDP"),
+    ],
+    # ------------------------------------------------------------------
+    # Pairs 2+3, round 3 — round 2 refuted the input-sharding hypothesis:
+    # the 154 GiB gather is the FSDP *weight* gather over "data" (the
+    # cache already propagated batch sharding), and serve_tp alone CONFLICTS
+    # with batch-sharded caches (d_ff and batch both want "data": GSPMD
+    # re-gathers the 9.7 GB/dev cache every token → 278 GiB).  New layout
+    # hypothesis: batch REPLICATED + cache SEQUENCE-sharded over "data" +
+    # 2D-TP stationary weights.  Napkin (nemotron): weights/dev 2.7 GB ✓,
+    # cache/dev 9.7 GB ✓, per-token collectives = 96 layers × ~3 × 4.7 MB
+    # activation all-reduces + attention-softmax stats ≈ 1.4 GB →
+    # tx 3320 → ~30 ms (100×), tm 613 → ~20 ms (weights+cache one read).
+    "seqshard": [
+        ("nemotron_servetp_seq", "nemotron-4-340b", "decode_32k",
+         dict(overrides={"serve_tp": True}),
+         "2D-TP weights + seq-sharded cache + replicated batch: weight and "
+         "cache gathers both eliminated → tx ↓ ~100×, tm ↓ ~30×"),
+        ("deepseek_absorb_seq", "deepseek-v3-671b", "decode_32k",
+         dict(overrides={"attn.mla_absorb": True, "serve_tp": True}),
+         "same layout + absorbed MLA on the MoE giant: remaining 45 GiB "
+         "gather (weights over data) eliminated → tx 919 → <100 ms"),
+    ],
+    # ------------------------------------------------------------------
+    # Pairs 2+3, round 4 — round 3 halved nothing: the HLO shows ONE
+    # all-gather of f32[128,2048,8,192] (the seq-sharded cache, upcast to
+    # f32) per layer — XLA prefers gathering the cache to distributing the
+    # softmax.  Fix: `attn.seq_parallel` — a with_sharding_constraint pins
+    # the (B,Kh,G,1,S) logits to stay S-sharded, so GSPMD must run the
+    # partial-softmax (psum of per-head max/sum stats + the (B,H,hd)
+    # output partial ≈ 10 MB/layer).  Predict nemotron tx 3389 → <100 ms.
+    "seqpar": [
+        ("nemotron_seqpar", "nemotron-4-340b", "decode_32k",
+         dict(overrides={"serve_tp": True, "attn.seq_parallel": True}),
+         "distributed-softmax decode attention: cache gather (155 GiB) → "
+         "per-head stat psums (~1 GB) → tx ↓ ~30×"),
+        ("deepseek_seqpar", "deepseek-v3-671b", "decode_32k",
+         dict(overrides={"attn.mla_absorb": True, "serve_tp": True,
+                         "attn.seq_parallel": True}),
+         "same + absorbed MLA: latent cache stays sharded through the "
+         "absorbed logits einsum → tx 1518 → <150 ms"),
+    ],
+    # ------------------------------------------------------------------
+    # Extra — HBM-fit for the giants' train_4k (dry-run finding: temp
+    # memory 1.74 TB/dev deepseek, 0.93 TB/dev nemotron, ≫ 16 GiB HBM).
+    # Napkin: temps are activation/dispatch buffers ∝ tokens-in-flight;
+    # accumulating over 16 microbatches cuts tokens-in-flight 16× →
+    # predict temp ↓ ~16× (toward fit), flops unchanged, bytes ↑ slightly
+    # (weights re-read per slice: + params·(micro−1) ≈ +2.6 GB·15/dev).
+    "fit": [
+        ("deepseek_micro16", "deepseek-v3-671b", "train_4k",
+         dict(microbatch=16),
+         "16-way gradient accumulation: activation temps ↓ ~16×, weights "
+         "re-read per slice — memory-capacity fix, bandwidth-time cost"),
+        ("nemotron_micro16", "nemotron-4-340b", "train_4k",
+         dict(microbatch=16),
+         "same for nemotron: 0.93 TB/dev temps → ~60 GB/dev "
+         "(+ remat already on); remaining gap needs more chips"),
+    ],
+    # ------------------------------------------------------------------
+    # Pair 3 — nemotron-4 decode_32k: most collective-bound (tx 3.32 s =
+    # 5.4× tm).  Napkin: params 340B bf16 = 680 GB; FSDP over "data"=16
+    # re-gathers every layer's shard per token → ~165 GB/dev.  2D TP
+    # shards d_ff=73728 over 256 chips (288/chip) and d_model-contraction
+    # dims over "data"; weights never move, per-layer all-reduce = x
+    # (128×18432 bf16 = 4.5 MB) ×2 ×96 layers ≈ 0.9 GB → tx ↓ ~100×.
+    "decode_tp": [
+        ("servetp", "nemotron-4-340b", "decode_32k",
+         dict(overrides={"serve_tp": True}),
+         "weight-stationary 2D TP: replace per-token FSDP weight gather "
+         "with activation all-reduces → collective term ↓ ~100×"),
+        ("servetp_long", "nemotron-4-340b", "long_500k",
+         dict(overrides={"serve_tp": True}),
+         "same placement under the 512k-window single sequence: checks "
+         "the win holds when the cache, not the batch, dominates"),
+    ],
+}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
+                   default="all")
+    args = p.parse_args(argv)
+    os.makedirs(RESULTS, exist_ok=True)
+    groups = list(ITERATIONS) if args.group == "all" else [args.group]
+    path = os.path.join(RESULTS, "perf_iterations.json")
+    summary = []
+    if os.path.exists(path):
+        with open(path) as f:
+            summary = json.load(f)
+    done = {(s["group"], s["name"]) for s in summary}
+    for g in groups:
+        for name, arch, shape, kw, hypothesis in ITERATIONS[g]:
+            if (g, name) in done:
+                print(f"skip {g}/{name} (already recorded)")
+                continue
+            print(f"--- {g}/{name}: {hypothesis}")
+            res = run_case(arch, shape, tag=f"{g}_{name}", **kw)
+            summary.append({"group": g, "name": name, "arch": arch,
+                            "shape": shape, "hypothesis": hypothesis,
+                            "result": {k: res[k] for k in
+                                       ("t_compute", "t_memory",
+                                        "t_collective", "bottleneck",
+                                        "collectives",
+                                        "useful_flops_ratio")}})
+            with open(path, "w") as f:
+                json.dump(summary, f, indent=1)
+    print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

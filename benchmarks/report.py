@@ -1,0 +1,171 @@
+"""Regenerate EXPERIMENTS.md data sections from benchmark artifacts.
+
+Reads benchmarks/dryrun_artifacts/*/*.json, benchmarks/results/paper_*.json
+and benchmarks/results/perf_iterations.json; rewrites the §Paper, §Dry-run
+and §Roofline bodies of EXPERIMENTS.md between the AUTOGEN markers.  §Perf
+is narrative (hand-written hypothesis log) and is left untouched.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+HERE = os.path.dirname(__file__)
+ARTIFACT_DIR = os.path.join(HERE, "dryrun_artifacts")
+RESULTS_DIR = os.path.join(HERE, "results")
+EXPERIMENTS = os.path.join(HERE, "..", "EXPERIMENTS.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["olmoe-1b-7b", "gemma-2b", "mamba2-780m", "zamba2-2.7b",
+              "stablelm-3b", "deepseek-v3-671b", "gemma2-27b",
+              "nemotron-4-340b", "whisper-tiny", "paligemma-3b"]
+
+
+def _key(r):
+    return (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99,
+            SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9)
+
+
+def load_mesh(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, mesh, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if len(base.split("__")) != 2:
+            continue  # tagged perf artifacts
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=_key)
+    return rows
+
+
+def _ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_section() -> str:
+    out = ["Every (arch × shape) lowers **and** compiles on both production "
+           "meshes; `memory_analysis()` / `cost_analysis()` per case are in "
+           "`benchmarks/dryrun_artifacts/<mesh>/<arch>__<shape>.json`.",
+           "",
+           "Peak mem = argument+output+temp from `memory_analysis()`.  Cases "
+           "over the 16 GiB v5e HBM budget are real findings, not compile "
+           "failures: train_4k for the giants (deepseek-v3-671b, "
+           "nemotron-4-340b) needs gradient-accumulation microbatching or "
+           "more chips (DeepSeek-V3 itself trained on 2048 devices — our "
+           "256/512-chip mesh is the assignment's, so the dry-run records "
+           "the overshoot honestly; see §Perf for the microbatching knob).",
+           ""]
+    for mesh, label in (("pod16x16", "single-pod 16×16 (256 chips)"),
+                        ("pod2x16x16", "multi-pod 2×16×16 (512 chips)")):
+        rows = load_mesh(mesh)
+        out += [f"### {label} — {len(rows)}/40 compiled", "",
+                "| arch | shape | compile s | peak mem GiB/dev | "
+                "dominant collective (GiB/dev) |",
+                "|---|---|---|---|---|"]
+        for r in rows:
+            coll = r.get("collectives", {})
+            top = max(coll, key=coll.get) if coll else "-"
+            top_s = f"{top} ({_gb(coll[top])})" if coll and coll[top] else "—"
+            peak = r.get("peak_memory_per_device")
+            out.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{r.get('compile_seconds', 0):.0f} | "
+                f"{_gb(peak) if peak else '?'} | {top_s} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def roofline_section() -> str:
+    rows = load_mesh("pod16x16")
+    out = ["Terms per §Roofline spec: `t = X / (chips × peak)` with "
+           "197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip; "
+           "cost_analysis() is per-device post-GSPMD.  MODEL_FLOPS = "
+           "6·N_active·D (train) / 2·N_active·D (serve).", "",
+           "| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | useful-FLOPs ratio |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_ms(r['t_compute'])} | "
+            f"{_ms(r['t_memory'])} | {_ms(r['t_collective'])} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} |")
+    bott = {}
+    for r in rows:
+        bott[r["bottleneck"]] = bott.get(r["bottleneck"], 0) + 1
+    out += ["", f"Bottleneck census: {bott}. Decode shapes are "
+            "memory-bound (weights+cache re-read per token), train/prefill "
+            "of small-TP-friendly archs go collective-bound — the mixing "
+            "and activation all-reduces dominate; see §Perf."]
+    return "\n".join(out)
+
+
+def paper_section() -> str:
+    path = os.path.join(RESULTS_DIR, "paper_full.json")
+    if not os.path.exists(path):
+        return "(paper_full.json not yet produced)"
+    with open(path) as f:
+        res = json.load(f)
+    out = ["Synthetic-data reruns of the paper's three scenarios "
+           "(DESIGN.md §1: orderings are the claim, not absolute digits). "
+           "m=20 users, 30 rounds, 2 trials (paper: 5).", ""]
+    scen_names = {
+        "emnist_label_shift": "EMNIST label shift (Dirichlet 0.4)",
+        "emnist_covariate_shift": "EMNIST label+covariate shift (4 rotations)",
+        "cifar_concept_shift": "CIFAR concept shift (4 label permutations)"}
+    out += ["| scenario | local | fedavg | oracle | cfl | fedfomo | "
+            "ucfl k=2 | ucfl k=4 | ucfl full |", "|---|" + "---|" * 8]
+    algs = ["local", "fedavg", "oracle", "cfl", "fedfomo",
+            "ucfl_k2", "ucfl_k4", "ucfl"]
+    for scen, title in scen_names.items():
+        if scen not in res:
+            continue
+        a = res[scen]["algorithms"]
+        cells = [f"{a[x]['final_mean']:.3f}" if x in a else "—" for x in algs]
+        out.append(f"| {title} (mean) | " + " | ".join(cells) + " |")
+        cells = [f"{a[x]['final_worst']:.3f}" if x in a else "—" for x in algs]
+        out.append(f"| {title} (worst user, Table I) | " +
+                   " | ".join(cells) + " |")
+    if "comm_efficiency" in res:
+        out += ["", "Fig.3 (accuracy at equal analytic time budget; "
+                "ρ/straggler model per system):", "",
+                "| system | " + " | ".join(
+                    ["fedavg", "ucfl_k4", "ucfl", "fedfomo", "cfl"]) + " |",
+                "|---|" + "---|" * 5]
+        for sysname, data in res["comm_efficiency"].items():
+            row = [f"{data['algorithms'][a]['acc_at_budget']:.3f}"
+                   if a in data["algorithms"] else "—"
+                   for a in ["fedavg", "ucfl_k4", "ucfl", "fedfomo", "cfl"]]
+            out.append(f"| {sysname} | " + " | ".join(row) + " |")
+    return "\n".join(out)
+
+
+MARKERS = {"Paper": paper_section, "Dry-run": dryrun_section,
+           "Roofline": roofline_section}
+
+
+def main():
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    for name, fn in MARKERS.items():
+        begin, end = f"<!-- AUTOGEN {name} -->", f"<!-- /AUTOGEN {name} -->"
+        if begin not in text:
+            continue
+        body = fn()
+        pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                             re.DOTALL)
+        text = pattern.sub(f"{begin}\n{body}\n{end}", text)
+    with open(EXPERIMENTS, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md sections regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Emit the §Roofline markdown table from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "dryrun_artifacts")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, mesh, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if "__" not in base:
+            continue
+        parts = base.split("__")
+        if len(parts) != 2:
+            continue               # tagged perf-iteration artifacts
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.2f}"
+
+
+def table(mesh: str) -> str:
+    rows = load(mesh)
+    out = [f"### Roofline — {mesh} ({rows[0]['chips'] if rows else '?'} chips)",
+           "",
+           "| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | useful-FLOPs ratio | MODEL_FLOPS |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} | "
+            f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} | "
+            f"{r['model_flops_global']:.2e} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--mesh", default="pod16x16")
+    args = p.parse_args(argv)
+    print(table(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

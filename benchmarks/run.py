@@ -1,0 +1,130 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+kernel microbenches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Quick mode (default) keeps everything CPU-tractable; --full matches the
+paper's scale (see benchmarks/paper_experiments.py) and takes ~1h on one
+core.  The roofline table (dry-run derived) is emitted by
+``python -m benchmarks.roofline_table``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def bench_kernels(rows):
+    """Kernel microbenches: oracle (jnp, XLA-compiled — the measurable
+    number on CPU) and the Pallas kernel in interpret mode (correctness
+    path; TPU is the perf target)."""
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    w = jax.random.uniform(key, (4, 16))
+    theta = jax.random.normal(key, (16, 1 << 20))
+    us, _ = timeit(jax.jit(ref.mixing_aggregate_ref), w, theta)
+    rows.append(("kernel.mixing_aggregate.ref_16x1M", us,
+                 f"GBps={theta.nbytes/us*1e6/1e9:.1f}"))
+    g = jax.random.normal(key, (16, 1 << 18))
+    us, _ = timeit(jax.jit(ref.pairwise_sqdist_ref), g)
+    rows.append(("kernel.pairwise_sqdist.ref_16x256k", us,
+                 f"GBps={g.nbytes/us*1e6/1e9:.1f}"))
+    q = jax.random.normal(key, (1, 8, 1024, 64))
+    k = jax.random.normal(key, (1, 8, 1024, 64))
+    v = jax.random.normal(key, (1, 8, 1024, 64))
+    us, _ = timeit(jax.jit(lambda a, b, c: ref.flash_attention_ref(
+        a, b, c, causal=True)), q, k, v)
+    flops = 4 * 8 * 1024 * 1024 * 64 / 2
+    rows.append(("kernel.flash_attention.ref_1k", us,
+                 f"GFLOPs={flops/us*1e6/1e9:.1f}"))
+    # interpret-mode kernel (small shape): correctness-path latency
+    us, _ = timeit(lambda: ops.mixing_aggregate(w, theta[:, :4096]),
+                   warmup=1, iters=1)
+    rows.append(("kernel.mixing_aggregate.pallas_interpret_4k", us,
+                 "interpret=True"))
+
+
+def bench_fl_round(rows):
+    """Steady-state FL round latency (paper's simulation engine)."""
+    from repro.data.federated import scenario_label_shift
+    from repro.fl import FLConfig, run_federated
+    key = jax.random.PRNGKey(0)
+    fed = scenario_label_shift(key, n=800, m=8)
+    fl = FLConfig(rounds=2, local_steps=5, batch_size=32, eval_every=10)
+    t0 = time.time()
+    run_federated("fedavg", fed, fl=fl)
+    rows.append(("fl.round.fedavg_m8", (time.time() - t0) / 2 * 1e6,
+                 "incl_compile"))
+
+
+def bench_paper_tables(rows, full: bool):
+    """Fig.2 / Table I / Fig.3 quick reproductions -> derived = accuracies."""
+    from benchmarks.paper_experiments import main as paper_main
+    argv = [] if full else ["--quick", "--skip-comm"]
+    results = paper_main(argv)
+    for scen, data in results.items():
+        if scen == "comm_efficiency":
+            for sysname, sdata in data.items():
+                best = max(sdata["algorithms"],
+                           key=lambda a: sdata["algorithms"][a]["final_mean"])
+                rows.append((f"fig3.{sysname}.best_alg", 0.0, best))
+            continue
+        algs = data["algorithms"]
+        for alg, a in algs.items():
+            rows.append((f"fig2.{scen}.{alg}", a["wall_seconds"] * 1e6,
+                         f"mean={a['final_mean']:.3f}"))
+            rows.append((f"table1.{scen}.{alg}", 0.0,
+                         f"worst={a['final_worst']:.3f}"))
+
+
+def bench_train_step(rows):
+    """Mesh train-step latency on host mesh (smoke config)."""
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import (build_train_step, init_stacked_params,
+                                    make_optimizer)
+    cfg = get_smoke_config("stablelm-3b")
+    mesh = make_host_mesh()
+    m = 4
+    key = jax.random.PRNGKey(0)
+    params = init_stacked_params(key, cfg, m)
+    opt = make_optimizer(cfg)
+    opt_state = opt.init(params)
+    batch = {"tokens": jax.random.randint(key, (m, 2, 64), 0, cfg.vocab_size)}
+    w = jnp.full((1, m), 1.0 / m)
+    assign = jnp.zeros((m,), jnp.int32)
+    step = jax.jit(build_train_step(cfg, mesh, remat=False))
+    us, out = timeit(lambda: step(params, opt_state, batch, w, assign)[2])
+    rows.append(("launch.train_step.smoke_m4", us,
+                 f"loss={float(out['loss']):.3f}"))
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    args = p.parse_args(argv)
+    rows = []
+    bench_kernels(rows)
+    bench_train_step(rows)
+    bench_fl_round(rows)
+    bench_paper_tables(rows, args.full)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Communication/learning trade-off (paper §III-B + Fig.3): sweep the number
+of personalized streams, print accuracy AND wall-clock time under the three
+system models, plus the silhouette guidance for picking m_t.
+
+    PYTHONPATH=src python examples/comm_tradeoff.py
+"""
+import jax
+import numpy as np
+
+from repro.core import kmeans, mixing_matrix, silhouette_score
+from repro.data.federated import scenario_covariate_shift
+from repro.fl import FLConfig, SYSTEMS, downlink_cost, run_federated
+
+
+def main():
+    key = jax.random.PRNGKey(1)
+    m = 12
+    fed = scenario_covariate_shift(key, n=2000, m=m)
+    fl = FLConfig(rounds=12, local_steps=5, batch_size=32, eval_every=11)
+
+    print("streams  mean_acc  worst_acc   t/round (slow-UL, fast-UL, wired)")
+    hist = {}
+    for alg, k in [("fedavg", 1), ("ucfl_k2", 2), ("ucfl_k4", 4),
+                   ("ucfl", m)]:
+        h = run_federated(alg, fed, fl=fl)
+        hist[alg] = h
+        times = []
+        for s in SYSTEMS.values():
+            ns, nu = downlink_cost(alg.split("_k")[0], m, n_streams=k)
+            times.append(s.round_time(m, n_streams=ns, n_unicasts=nu))
+        print(f"{k:7d}  {h.mean_acc[-1]:.3f}     {h.worst_acc[-1]:.3f}     "
+              + "  ".join(f"{t:5.1f}" for t in times))
+
+    # silhouette-guided m_t (paper: silhouette over the w_i rows)
+    w = hist["ucfl"].extra["mixing_matrix"]
+    print("\nsilhouette score by k (pick the max):")
+    for k in (2, 3, 4, 6):
+        plan = kmeans(jax.numpy.asarray(w), k, key=key)
+        s = silhouette_score(jax.numpy.asarray(w), plan.assignment, k)
+        print(f"  k={k}: {float(s):.3f}")
+
+
+if __name__ == "__main__":
+    main()

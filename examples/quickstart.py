@@ -1,0 +1,68 @@
+"""Quickstart: the paper's technique in ~60 lines.
+
+Five clients with heterogeneous linear-regression data; run the similarity
+pre-round, build the Eq.6 mixing matrix, reduce to 2 personalized streams,
+and compare FedAvg vs user-centric aggregation on one round of local models.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (kmeans, mixing_matrix, silhouette_score,
+                        similarity_round, stream_aggregate,
+                        user_centric_aggregate, fedavg_weights)
+
+key = jax.random.PRNGKey(0)
+
+# --- five clients, two latent groups (w* = +w or -w) ----------------------
+m, d, n_i = 5, 16, 200
+w_true = jax.random.normal(key, (d,))
+groups = jnp.array([0, 0, 0, 1, 1])
+datasets = []
+for i in range(m):
+    ki = jax.random.fold_in(key, i)
+    x = jax.random.normal(ki, (n_i, d))
+    sign = 1.0 if int(groups[i]) == 0 else -1.0
+    y = x @ (sign * w_true) + 0.1 * jax.random.normal(ki, (n_i,))
+    datasets.append({"x": x, "y": y})
+
+
+def loss_fn(params, data):
+    pred = data["x"] @ params["w"]
+    return jnp.mean((pred - data["y"]) ** 2)
+
+
+# --- paper §III-A: similarity pre-round ------------------------------------
+probe = {"w": jnp.zeros((d,))}
+delta, sigma2, n = similarity_round(loss_fn, probe, datasets)
+W = mixing_matrix(delta, sigma2, n)
+print("mixing matrix W (row-stochastic):")
+print(np.round(np.asarray(W), 3))
+
+# --- paper §III-B: stream reduction ----------------------------------------
+plan = kmeans(W, 2, key=key)
+print("\nstream assignment:", np.asarray(plan.assignment),
+      " true groups:", np.asarray(groups))
+print("silhouette(k=2):",
+      float(silhouette_score(W, plan.assignment, 2)))
+
+# --- one round: local models then aggregation -------------------------------
+def local_model(data):
+    xtx = data["x"].T @ data["x"] + 1e-3 * jnp.eye(d)
+    return jnp.linalg.solve(xtx, data["x"].T @ data["y"])
+
+locals_ = {"w": jnp.stack([local_model(ds) for ds in datasets])}
+fedavg = user_centric_aggregate(locals_, fedavg_weights(n))
+ucfl = stream_aggregate(locals_, plan)
+
+def client_mse(stacked):
+    return [float(loss_fn({"w": stacked["w"][i]}, datasets[i]))
+            for i in range(m)]
+
+print("\nper-client MSE:")
+print("  fedavg:", np.round(client_mse(fedavg), 3))
+print("  ucfl-2:", np.round(client_mse(ucfl), 3))
+print("\nFedAvg averages the two conflicting groups away; the user-centric"
+      "\nstreams recover per-group models from the gradient similarity.")

@@ -1,0 +1,14 @@
+"""End-to-end driver (deliverable b): federated LM training on an assigned
+architecture through the SAME step builder the production dry-run lowers.
+
+Default runs a CPU-sized preset; --preset lm-100m trains a ~100M-param model
+(hardware permitting) and --preset full the assigned config.
+
+    PYTHONPATH=src python examples/train_lm.py --arch stablelm-3b --steps 30
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(0 if main() is not None else 1)

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (restore, restore_train_state, save,
+                                         save_train_state)
+
+__all__ = ["restore", "restore_train_state", "save", "save_train_state"]

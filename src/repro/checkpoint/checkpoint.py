@@ -1,0 +1,65 @@
+"""msgpack checkpointing for nested dict/list pytrees of jnp/np arrays.
+
+Arrays are encoded as {"__nd__": {dtype, shape, data-bytes}}; scalars and
+strings pass through.  NamedTuple leaves (caches) are not checkpointable by
+design — persist params / optimizer state / metadata only.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj: Any) -> Any:
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        return {"__nd__": {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                           "data": arr.tobytes()}}
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    raise TypeError(f"cannot checkpoint leaf of type {type(obj)}")
+
+
+def _decode(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if "__nd__" in obj and set(obj) == {"__nd__"}:
+            nd = obj["__nd__"]
+            arr = np.frombuffer(nd["data"], dtype=np.dtype(nd["dtype"]))
+            return jnp.asarray(arr.reshape(nd["shape"]))
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+
+
+def save_train_state(path: str, step: int, params: Any, opt_state: Any,
+                     extra: Any = None) -> None:
+    save(path, {"step": step, "params": params, "opt_state": opt_state,
+                "extra": extra})
+
+
+def restore_train_state(path: str):
+    t = restore(path)
+    return t["step"], t["params"], t["opt_state"], t.get("extra")

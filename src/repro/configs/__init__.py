@@ -1,0 +1,12 @@
+from repro.configs.base import (AttentionConfig, EncoderConfig, HybridConfig,
+                                MLAConfig, ModelConfig, MoEConfig, SSMConfig,
+                                VisionConfig, active_param_count, param_count,
+                                reduced)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config, get_smoke_config
+
+__all__ = [
+    "AttentionConfig", "EncoderConfig", "HybridConfig", "MLAConfig",
+    "ModelConfig", "MoEConfig", "SSMConfig", "VisionConfig",
+    "active_param_count", "param_count", "reduced",
+    "ARCH_IDS", "all_configs", "get_config", "get_smoke_config",
+]

@@ -1,0 +1,36 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, reduced
+
+_MODULES = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return reduced(get_config(arch))
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

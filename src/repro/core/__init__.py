@@ -1,0 +1,28 @@
+"""The paper's primary contribution: user-centric aggregation for FL.
+
+similarity  — pre-training round statistics (Δ, σ², n)
+mixing      — Eq. 6 collaboration coefficients
+streams     — k-means stream reduction + silhouette guidance
+aggregation — Eq. 5 pytree mixing (unicast / streams / fedavg)
+distributed — explicit shard_map collective schedules for the mesh
+theory      — Theorem 1 bound + bound-minimizing weights (beyond paper)
+"""
+from repro.core.aggregation import (downlink_models, fedavg_aggregate,
+                                    mix_pytree, stream_aggregate,
+                                    user_centric_aggregate)
+from repro.core.mixing import effective_samples, fedavg_weights, mixing_matrix
+from repro.core.similarity import (client_gradients, delta_matrix,
+                                   flatten_pytree, full_gradient,
+                                   sigma_estimates, similarity_round)
+from repro.core.streams import (StreamPlan, kmeans, select_num_streams,
+                                silhouette_score)
+from repro.core.theory import bound_minimizing_weights, theorem1_bound
+
+__all__ = [
+    "downlink_models", "fedavg_aggregate", "mix_pytree", "stream_aggregate",
+    "user_centric_aggregate", "effective_samples", "fedavg_weights",
+    "mixing_matrix", "client_gradients", "delta_matrix", "flatten_pytree",
+    "full_gradient", "sigma_estimates", "similarity_round", "StreamPlan",
+    "kmeans", "select_num_streams", "silhouette_score",
+    "bound_minimizing_weights", "theorem1_bound",
+]

@@ -1,0 +1,106 @@
+"""Explicit shard_map collective schedules for user-centric aggregation.
+
+The pjit einsum in `aggregation.py` lets GSPMD choose collectives (the
+baseline we roofline).  These schedules pin the communication pattern:
+
+  * `mix_unicast_shard_map`  — all-gather the client-stacked params over the
+    client axis, mix locally with the full W.  Receive volume ≈ (m-1)/m · mP
+    per client group: the paper's m-fold downlink.
+  * `mix_streams_shard_map`  — each shard sends its k weighted copies into a
+    psum; every shard then selects its assigned stream.  Volume ∝ k·P: the
+    paper's group-broadcast protocol, and the §Perf lever.
+
+Both operate on a params pytree whose leaves have leading client dim m
+sharded over `axis`; inside shard_map each shard holds m/axis_size clients.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # jax>=0.4.35 exposes shard_map at jax.shard_map
+    from jax import shard_map as _shard_map_mod
+    shard_map = _shard_map_mod.shard_map if hasattr(_shard_map_mod, "shard_map") \
+        else _shard_map_mod
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+def _leaf_specs(params: Any, inner_spec_fn) -> Any:
+    return jax.tree_util.tree_map(lambda l: inner_spec_fn(l), params)
+
+
+def mix_unicast_shard_map(mesh, axis: str, params: Any, w: jnp.ndarray) -> Any:
+    """θ_i ← Σ_j W[i,j] θ_j via all-gather over `axis` + local mix.
+
+    params leaves: (m, ...) sharded P(axis, ...); w: (m, m) replicated.
+    """
+    m = w.shape[0]
+    size = mesh.shape[axis]
+    mm = m // size
+
+    def body(w_rep, p_local):
+        idx = jax.lax.axis_index(axis)
+        gathered = jax.tree_util.tree_map(
+            lambda l: jax.lax.all_gather(l, axis, axis=0, tiled=True), p_local)
+        w_rows = jax.lax.dynamic_slice_in_dim(w_rep, idx * mm, mm, 0)  # (mm, m)
+        return jax.tree_util.tree_map(
+            lambda g: jnp.tensordot(w_rows.astype(jnp.float32),
+                                    g.astype(jnp.float32),
+                                    axes=(1, 0)).astype(g.dtype), gathered)
+
+    pspec = jax.tree_util.tree_map(
+        lambda l: P(axis, *([None] * (l.ndim - 1))), params)
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), pspec),
+                   out_specs=pspec, check_vma=False)
+    return fn(w, params)
+
+
+def mix_streams_shard_map(mesh, axis: str, params: Any,
+                          centroids: jnp.ndarray,
+                          assignment: jnp.ndarray) -> Any:
+    """θ_i ← θ̂_{a(i)}, θ̂ = Ŵ θ via one psum of k weighted copies.
+
+    centroids: (k, m); assignment: (m,) int32.  Volume ∝ k·P (k streams).
+    """
+    k, m = centroids.shape
+    size = mesh.shape[axis]
+    mm = m // size
+
+    def body(w_rep, assign, p_local):
+        idx = jax.lax.axis_index(axis)
+        w_cols = jax.lax.dynamic_slice_in_dim(w_rep, idx * mm, mm, 1)  # (k, mm)
+        contrib = jax.tree_util.tree_map(
+            lambda l: jnp.tensordot(w_cols.astype(jnp.float32),
+                                    l.astype(jnp.float32), axes=(1, 0)),
+            p_local)                                            # (k, ...)
+        mixed = jax.lax.psum(contrib, axis)                     # all shards: (k, ...)
+        my_assign = jax.lax.dynamic_slice_in_dim(assign, idx * mm, mm, 0)
+        return jax.tree_util.tree_map(
+            lambda l, ref: jnp.take(l, my_assign, axis=0).astype(ref.dtype),
+            mixed, p_local)
+
+    pspec = jax.tree_util.tree_map(
+        lambda l: P(axis, *([None] * (l.ndim - 1))), params)
+    fn = shard_map(body, mesh=mesh, in_specs=(P(), P(), pspec),
+                   out_specs=pspec, check_vma=False)
+    return fn(centroids, assignment, params)
+
+
+def mix_einsum(params: Any, w: jnp.ndarray, assignment=None) -> Any:
+    """pjit/GSPMD baseline: plain einsum mix (+ optional stream selection).
+    Inputs stay in the param dtype (collectives move bf16); fp32 accumulate."""
+    def leaf(l):
+        out = jax.lax.dot_general(w.astype(l.dtype), l,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return out.astype(l.dtype)
+    mixed = jax.tree_util.tree_map(leaf, params)
+    if assignment is None:
+        return mixed
+    return jax.tree_util.tree_map(
+        lambda l: jnp.take(l, assignment, axis=0), mixed)

@@ -1,0 +1,36 @@
+"""User-centric mixing coefficients (paper Eq. 6).
+
+    w_{i,j} ∝ (n_j / n_i) · exp( −Δ_{i,j} / (2 σ_i σ_j) ),   normalized over j.
+
+Properties the paper leans on (and our tests assert):
+  * homogeneous clients (Δ→0, equal n) ⇒ W → uniform ⇒ UCFL ≡ FedAvg;
+  * n_i → ∞ relative to others ⇒ row i → e_i (local learning);
+  * W is row-stochastic (each row is a personalized aggregation rule).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mixing_matrix(delta: jnp.ndarray, sigma2: jnp.ndarray,
+                  n: jnp.ndarray) -> jnp.ndarray:
+    """W (m, m), row-stochastic, from Δ (m,m), σ² (m,), dataset sizes n (m,)."""
+    sigma = jnp.sqrt(jnp.maximum(sigma2.astype(jnp.float32), 1e-12))
+    denom = 2.0 * sigma[:, None] * sigma[None, :]
+    # log-space for stability: log w_ij = log n_j - Δ_ij / (2 σ_i σ_j) + const_i
+    logits = jnp.log(n.astype(jnp.float32))[None, :] - \
+        delta.astype(jnp.float32) / denom
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    w = jnp.exp(logits)
+    return w / jnp.sum(w, axis=1, keepdims=True)
+
+
+def fedavg_weights(n: jnp.ndarray) -> jnp.ndarray:
+    """The FedAvg special case: every row is n / Σn."""
+    w = n.astype(jnp.float32) / jnp.sum(n)
+    return jnp.broadcast_to(w[None, :], (n.shape[0], n.shape[0]))
+
+
+def effective_samples(w: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """1 / Σ_j w_ij²/n_j — the variance-reduction term of Theorem 1 per user."""
+    return 1.0 / jnp.sum(w ** 2 / jnp.maximum(n[None, :], 1.0), axis=1)

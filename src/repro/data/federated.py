@@ -1,0 +1,133 @@
+"""Federated partitioners: the paper's three heterogeneity protocols.
+
+All partitioners return a `FederatedData` with *stacked* client arrays
+(m, n_max, ...) plus per-client sizes, so client updates vmap/jit cleanly.
+Invalid tail slots repeat valid samples (sampling is by index mod n_i, so
+padding is never drawn with higher probability).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import synthetic_cifar, synthetic_emnist
+
+
+class FederatedData(NamedTuple):
+    x: jnp.ndarray          # (m, n_max, H, W, C)
+    y: jnp.ndarray          # (m, n_max)
+    n: jnp.ndarray          # (m,) true client dataset sizes
+    x_val: jnp.ndarray      # (m, n_val, H, W, C)
+    y_val: jnp.ndarray      # (m, n_val)
+    group: jnp.ndarray      # (m,) ground-truth cluster id (oracle baseline)
+
+    @property
+    def m(self) -> int:
+        return self.x.shape[0]
+
+
+def _dirichlet_partition(rng: np.random.Generator, labels: np.ndarray,
+                         m: int, alpha: float, n_classes: int):
+    """Class-wise proportional split: client weights ~ Dir(alpha) per class."""
+    idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
+    client_idx = [[] for _ in range(m)]
+    for idxs in idx_by_class:
+        rng.shuffle(idxs)
+        w = rng.dirichlet([alpha] * m)
+        cuts = (np.cumsum(w) * len(idxs)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idxs, cuts)):
+            client_idx[i].extend(part.tolist())
+    for ci in client_idx:
+        rng.shuffle(ci)
+    return client_idx
+
+
+def _stack_clients(x: np.ndarray, y: np.ndarray, client_idx, val_frac: float):
+    m = len(client_idx)
+    # guarantee a minimum of 8 train + 4 val samples per client
+    sizes = [max(len(ci), 12) for ci in client_idx]
+    n_val = max(4, int(min(sizes) * val_frac))
+    n_train = [max(s - n_val, 8) for s in sizes]
+    n_max = max(n_train)
+    xs, ys, xv, yv, ns = [], [], [], [], []
+    for ci, nt in zip(client_idx, n_train):
+        ci = np.asarray(ci if len(ci) >= 12 else
+                        np.resize(np.asarray(ci, int), 12), int)
+        tr, va = ci[:nt], ci[nt:nt + n_val]
+        if len(va) < n_val:
+            va = np.resize(ci, n_val)
+        pad = np.resize(tr, n_max)              # repeat to n_max
+        xs.append(x[pad]); ys.append(y[pad])
+        xv.append(x[va]); yv.append(y[va])
+        ns.append(len(tr))
+    return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+            jnp.asarray(np.stack(xv)), jnp.asarray(np.stack(yv)),
+            jnp.asarray(np.array(ns), jnp.float32))
+
+
+def rotate_images(x: jnp.ndarray, quarter_turns: int) -> jnp.ndarray:
+    return jnp.rot90(x, k=quarter_turns, axes=(-3, -2))
+
+
+# ---------------------------------------------------------------------------
+# the paper's three scenarios
+
+
+def scenario_label_shift(key, *, n: int = 10000, m: int = 20,
+                         alpha: float = 0.4, n_classes: int = 47,
+                         val_frac: float = 0.15, seed: int = 0) -> FederatedData:
+    """EMNIST-like, Dirichlet(0.4) label shift across 20 users (paper §IV-A.1)."""
+    data = synthetic_emnist(key, n, n_classes)
+    rng = np.random.default_rng(seed)
+    y_np = np.asarray(data["y"])
+    client_idx = _dirichlet_partition(rng, y_np, m, alpha, n_classes)
+    xs, ys, xv, yv, ns = _stack_clients(np.asarray(data["x"]), y_np,
+                                        client_idx, val_frac)
+    return FederatedData(xs, ys, ns, xv, yv, jnp.zeros((m,), jnp.int32))
+
+
+def scenario_covariate_shift(key, *, n: int = 20000, m: int = 40,
+                             alpha: float = 0.4, n_classes: int = 47,
+                             n_groups: int = 4, val_frac: float = 0.15,
+                             seed: int = 1) -> FederatedData:
+    """EMNIST-like label shift + per-group rotations {0,90,180,270}°
+    (paper §IV-A.2; paper uses n=100k, m=100 — scaled for CPU, same protocol)."""
+    base = scenario_label_shift(key, n=n, m=m, alpha=alpha,
+                                n_classes=n_classes, val_frac=val_frac,
+                                seed=seed)
+    group = jnp.asarray(np.arange(m) % n_groups, jnp.int32)
+    x = jnp.stack([rotate_images(base.x[i], int(group[i])) for i in range(m)])
+    xv = jnp.stack([rotate_images(base.x_val[i], int(group[i]))
+                    for i in range(m)])
+    return base._replace(x=x, x_val=xv, group=group)
+
+
+def scenario_concept_shift(key, *, n: int = 10000, m: int = 20,
+                           n_classes: int = 10, n_groups: int = 4,
+                           val_frac: float = 0.15, seed: int = 2
+                           ) -> FederatedData:
+    """CIFAR-like, per-group random label permutation (paper §IV-A.3)."""
+    data = synthetic_cifar(key, n, n_classes)
+    rng = np.random.default_rng(seed)
+    # IID split (concept shift only): round-robin
+    order = rng.permutation(n)
+    client_idx = [order[i::m].tolist() for i in range(m)]
+    xs, ys, xv, yv, ns = _stack_clients(np.asarray(data["x"]),
+                                        np.asarray(data["y"]),
+                                        client_idx, val_frac)
+    group = jnp.asarray(np.arange(m) % n_groups, jnp.int32)
+    perms = np.stack([rng.permutation(n_classes) for _ in range(n_groups)])
+    perms_j = jnp.asarray(perms, jnp.int32)
+    ys = jax.vmap(lambda g, yy: perms_j[g][yy])(group, ys)
+    yv = jax.vmap(lambda g, yy: perms_j[g][yy])(group, yv)
+    return FederatedData(xs, ys, ns, xv, yv, group)
+
+
+SCENARIOS = {
+    "emnist_label_shift": scenario_label_shift,
+    "emnist_covariate_shift": scenario_covariate_shift,
+    "cifar_concept_shift": scenario_concept_shift,
+}

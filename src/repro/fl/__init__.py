@@ -1,0 +1,7 @@
+from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
+                           WIRELESS_SLOW_UL, downlink_cost, harmonic)
+from repro.fl.simulator import (FLConfig, History, evaluate, run_federated)
+
+__all__ = ["SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
+           "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",
+           "History", "evaluate", "run_federated"]

@@ -1,0 +1,60 @@
+"""Communication/straggler time model (paper §IV-C).
+
+Time unit = T_dl (one model broadcast on the downlink).
+  * uplink per round: ρ = T_ul/T_dl ∈ [1, 4]   (clients upload in parallel)
+  * downlink per round: one T_dl per distinct model stream (group broadcast);
+    client-side personalization (FedFOMO) needs unicasts — one per
+    (client, candidate model) pair.
+  * compute: shifted exponential per client; the round waits for the slowest:
+    E[max] = T_min + H_m/μ (H_m the m-th harmonic number).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def harmonic(m: int) -> float:
+    return sum(1.0 / i for i in range(1, m + 1))
+
+
+@dataclass(frozen=True)
+class SystemModel:
+    rho: float = 4.0            # T_ul / T_dl
+    t_min: float = 1.0          # min compute time, units of T_dl
+    inv_mu: float = 1.0         # 1/μ: mean extra straggler delay (0 = reliable)
+    name: str = "wireless-slow-ul"
+
+    def compute_time(self, m: int) -> float:
+        return self.t_min + self.inv_mu * harmonic(m) if self.inv_mu else self.t_min
+
+    def round_time(self, m: int, *, n_streams: int = 1,
+                   n_unicasts: int = 0) -> float:
+        return self.compute_time(m) + self.rho + n_streams + n_unicasts
+
+
+# the three systems of Fig. 3
+WIRELESS_SLOW_UL = SystemModel(rho=4.0, t_min=1.0, inv_mu=1.0,
+                               name="wireless rho=4, unreliable")
+WIRELESS_FAST_UL = SystemModel(rho=2.0, t_min=1.0, inv_mu=0.0,
+                               name="wireless rho=2, reliable")
+WIRED = SystemModel(rho=1.0, t_min=1.0, inv_mu=0.0, name="wired rho=1")
+
+SYSTEMS = {"wireless_slow": WIRELESS_SLOW_UL,
+           "wireless_fast": WIRELESS_FAST_UL,
+           "wired": WIRED}
+
+
+def downlink_cost(algorithm: str, m: int, n_streams: int = 1,
+                  fomo_candidates: int = 5):
+    """(n_streams, n_unicasts) per round for each algorithm family."""
+    if algorithm in ("fedavg", "cfl", "oracle"):
+        # cfl/oracle: one broadcast per cluster; caller passes n_streams
+        return n_streams, 0
+    if algorithm == "local":
+        return 0, 0
+    if algorithm.startswith("ucfl"):
+        return n_streams, 0
+    if algorithm == "fedfomo":
+        return 0, m * fomo_candidates
+    raise ValueError(algorithm)

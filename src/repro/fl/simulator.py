@@ -1,0 +1,322 @@
+"""Federated learning simulator: vmap-over-clients round engine.
+
+Runs the paper's algorithms on stacked client data (`FederatedData`):
+
+    fedavg | local | oracle | ucfl (full personalization) | ucfl_k<k> |
+    cfl (Sattler et al.) | fedfomo (Zhang et al.)
+
+Client placement here is the host `vmap` mode of DESIGN.md §3 (paper-scale
+m=20..100, LeNet).  The mesh-placed variants live in repro/launch.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (fedavg_weights, kmeans, mixing_matrix,
+                        silhouette_score, stream_aggregate,
+                        user_centric_aggregate)
+from repro.core.similarity import flatten_pytree
+from repro.core.streams import StreamPlan
+from repro.data.federated import FederatedData
+from repro.fl.comm import SystemModel, downlink_cost
+from repro.models import lenet
+from repro.optim import apply_updates, sgd
+
+
+@dataclass
+class FLConfig:
+    local_steps: int = 10
+    batch_size: int = 64
+    lr: float = 0.1
+    momentum: float = 0.9
+    rounds: int = 60
+    sigma_batches: int = 5
+    eval_every: int = 5
+    fomo_candidates: int = 5
+    cfl_eps1: float = 0.04
+    cfl_eps2: float = 0.06
+    cfl_min_rounds: int = 10
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+
+def make_client_update(loss_fn: Callable, opt, fl: FLConfig):
+    """Returns f(params_i, opt_i, data_i, n_i, key) -> (params_i', opt_i')
+    running `local_steps` SGD steps on mini-batches drawn from client i."""
+
+    def client_update(params_i, opt_i, x_i, y_i, n_i, key):
+        n_slots = x_i.shape[0]
+
+        def step(carry, k):
+            p, o = carry
+            idx = jax.random.randint(k, (fl.batch_size,), 0, 1 << 30) % \
+                jnp.maximum(n_i.astype(jnp.int32), 1)
+            idx = idx % n_slots
+            batch = {"x": x_i[idx], "y": y_i[idx]}
+            grads, _ = jax.grad(loss_fn, has_aux=True)(p, batch)
+            upd, o = opt.update(grads, o, p)
+            return (apply_updates(p, upd), o), None
+
+        keys = jax.random.split(key, fl.local_steps)
+        (p, o), _ = jax.lax.scan(step, (params_i, opt_i), keys)
+        return p, o
+
+    return client_update
+
+
+def _stack(params, m: int):
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape).copy(), params)
+
+
+def full_client_gradients(loss_fn, params, fed: FederatedData) -> jnp.ndarray:
+    """ĝ_i over each client's (padded) dataset; (m, D) float32."""
+
+    def one(x_i, y_i):
+        g, _ = jax.grad(loss_fn, has_aux=True)(params, {"x": x_i, "y": y_i})
+        return flatten_pytree(g)
+
+    return jax.vmap(one)(fed.x, fed.y)
+
+
+def sigma2_estimates(loss_fn, params, fed: FederatedData, k_batches: int
+                     ) -> jnp.ndarray:
+    """Eq. 7 on contiguous K-way splits of each client's data."""
+    n_max = fed.x.shape[1]
+    bs = n_max // k_batches
+
+    def one(x_i, y_i):
+        gfull, _ = jax.grad(loss_fn, has_aux=True)(
+            params, {"x": x_i, "y": y_i})
+        gfull = flatten_pytree(gfull)
+        devs = []
+        for k in range(k_batches):
+            sl = {"x": x_i[k * bs:(k + 1) * bs], "y": y_i[k * bs:(k + 1) * bs]}
+            gk, _ = jax.grad(loss_fn, has_aux=True)(params, sl)
+            devs.append(jnp.sum((flatten_pytree(gk) - gfull) ** 2))
+        return jnp.mean(jnp.stack(devs))
+
+    return jax.vmap(one)(fed.x, fed.y)
+
+
+@functools.lru_cache(maxsize=8)
+def _eval_fn(apply_acc: Callable):
+    return jax.jit(jax.vmap(lambda p, x, y: apply_acc(p, {"x": x, "y": y})))
+
+
+def evaluate(apply_acc: Callable, stacked_params, fed: FederatedData
+             ) -> Tuple[float, float]:
+    """(mean, worst) validation accuracy across clients, personalized models."""
+    accs = _eval_fn(apply_acc)(stacked_params, fed.x_val, fed.y_val)
+    return float(jnp.mean(accs)), float(jnp.min(accs))
+
+
+# ---------------------------------------------------------------------------
+# the round engine
+
+
+@dataclass
+class History:
+    rounds: List[int] = field(default_factory=list)
+    mean_acc: List[float] = field(default_factory=list)
+    worst_acc: List[float] = field(default_factory=list)
+    time: List[float] = field(default_factory=list)
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+
+def run_federated(algorithm: str, fed: FederatedData, *,
+                  fl: FLConfig = FLConfig(),
+                  model_init: Optional[Callable] = None,
+                  loss_fn: Callable = lenet.loss_fn,
+                  acc_fn: Callable = lenet.accuracy,
+                  system: Optional[SystemModel] = None,
+                  seed: int = 0) -> History:
+    """Run one algorithm on one scenario; returns accuracy/time history.
+
+    algorithm: fedavg | local | oracle | ucfl | ucfl_k<int> | cfl | fedfomo
+    """
+    m = fed.m
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    if model_init is None:
+        in_size, channels = fed.x.shape[2], fed.x.shape[4]
+        n_classes = int(jnp.max(fed.y)) + 1
+        model_init = lambda k: lenet.init_params(
+            k, lenet.LeNetConfig(in_size=in_size, in_channels=channels,
+                                 n_classes=max(n_classes, 10)))
+    params0 = model_init(kinit)
+    opt = sgd(fl.lr, momentum=fl.momentum)
+    client_update = make_client_update(loss_fn, opt, fl)
+    vmapped_update = jax.jit(jax.vmap(client_update))
+
+    stacked = _stack(params0, m)
+    opt_state = jax.vmap(opt.init)(stacked)
+
+    # --- pre-round: mixing coefficients (UCFL family) ---------------------
+    w, plan, n_streams = None, None, 1
+    if algorithm.startswith("ucfl"):
+        grads = full_client_gradients(loss_fn, params0, fed)
+        from repro.core.similarity import delta_matrix
+        delta = delta_matrix(grads)
+        sigma2 = sigma2_estimates(loss_fn, params0, fed, fl.sigma_batches)
+        w = mixing_matrix(delta, sigma2, fed.n)
+        if algorithm == "ucfl":
+            n_streams = m
+        else:
+            k = int(algorithm.split("_k")[1])
+            plan = kmeans(w, k, key=jax.random.PRNGKey(seed + 1))
+            n_streams = k
+    elif algorithm == "oracle":
+        n_streams = int(jnp.max(fed.group)) + 1
+    elif algorithm == "fedavg":
+        n_streams = 1
+
+    # CFL state (host-side orchestration)
+    cfl_clusters = np.zeros(m, dtype=int)
+
+    history = History()
+    t_accum = 0.0
+    comm_log: List[Tuple[int, int]] = []   # per-round (n_streams, n_unicasts)
+    sys_model = system
+    fomo_val_loss = jax.jit(jax.vmap(
+        lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0], in_axes=(None, 0, 0)))
+
+    for rnd in range(fl.rounds):
+        key, kround = jax.random.split(key)
+        ckeys = jax.random.split(kround, m)
+        prev = stacked
+        stacked, opt_state = vmapped_update(stacked, opt_state, fed.x, fed.y,
+                                            fed.n, ckeys)
+
+        # --- aggregation ---------------------------------------------------
+        if algorithm == "fedavg":
+            stacked = user_centric_aggregate(stacked, fedavg_weights(fed.n))
+        elif algorithm == "local":
+            pass
+        elif algorithm == "oracle":
+            stacked = _groupwise_fedavg(stacked, fed.n, np.asarray(fed.group))
+        elif algorithm == "ucfl" and plan is None:
+            stacked = user_centric_aggregate(stacked, w)
+        elif algorithm.startswith("ucfl"):
+            stacked = stream_aggregate(stacked, plan)
+        elif algorithm == "cfl":
+            stacked, cfl_clusters = _cfl_round(
+                stacked, prev, fed.n, cfl_clusters, rnd, fl)
+            n_streams = int(cfl_clusters.max()) + 1
+        elif algorithm == "fedfomo":
+            stacked = _fedfomo_round(stacked, prev, fed, fomo_val_loss,
+                                     fl.fomo_candidates, kround)
+        else:
+            raise ValueError(algorithm)
+
+        ns, nu = downlink_cost(algorithm.split("_k")[0], m,
+                               n_streams=n_streams,
+                               fomo_candidates=fl.fomo_candidates)
+        comm_log.append((ns, nu))
+        if sys_model is not None:
+            t_accum += sys_model.round_time(m, n_streams=ns, n_unicasts=nu)
+
+        if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
+            mean_acc, worst_acc = evaluate(acc_fn, stacked, fed)
+            history.rounds.append(rnd)
+            history.mean_acc.append(mean_acc)
+            history.worst_acc.append(worst_acc)
+            history.time.append(t_accum)
+
+    history.extra["comm_per_round"] = comm_log   # any SystemModel's time
+    # axis is recoverable offline: cumsum of round_time(m, *comm_log[r])
+    if w is not None:
+        history.extra["mixing_matrix"] = np.asarray(w)
+    if algorithm == "cfl":
+        history.extra["clusters"] = cfl_clusters.copy()
+    return history
+
+
+# ---------------------------------------------------------------------------
+# CFL (Sattler et al. 2020) — hierarchical bipartition on update cosine sim
+
+
+def _groupwise_fedavg(stacked, n, group: np.ndarray):
+    m = len(group)
+    wmat = np.zeros((m, m), np.float32)
+    nn = np.asarray(n)
+    for g in np.unique(group):
+        idx = np.where(group == g)[0]
+        wg = nn[idx] / nn[idx].sum()
+        for i in idx:
+            wmat[i, idx] = wg
+    return user_centric_aggregate(stacked, jnp.asarray(wmat))
+
+
+def _cfl_round(stacked, prev, n, clusters: np.ndarray, rnd: int, fl: FLConfig):
+    """Per-cluster FedAvg + Sattler bipartition criterion."""
+    deltas = jax.vmap(lambda a, b: flatten_pytree(
+        jax.tree_util.tree_map(lambda x, y: x - y, a, b)))(stacked, prev)
+    deltas = np.asarray(deltas)
+    norms = np.linalg.norm(deltas, axis=1)
+    new_clusters = clusters.copy()
+    if rnd >= fl.cfl_min_rounds:
+        for c in np.unique(clusters):
+            idx = np.where(clusters == c)[0]
+            if len(idx) < 4:
+                continue
+            mean_delta = deltas[idx].mean(0)
+            if (np.linalg.norm(mean_delta) < fl.cfl_eps1 * norms[idx].mean()
+                    and norms[idx].max() > fl.cfl_eps2 * norms[idx].mean()):
+                sub = _cosine_bipartition(deltas[idx])
+                nxt = new_clusters.max() + 1
+                new_clusters[idx[sub == 1]] = nxt
+    stacked = _groupwise_fedavg(stacked, n, new_clusters)
+    return stacked, new_clusters
+
+
+def _cosine_bipartition(d: np.ndarray) -> np.ndarray:
+    norm = d / (np.linalg.norm(d, axis=1, keepdims=True) + 1e-9)
+    sim = norm @ norm.T
+    i, j = np.unravel_index(np.argmin(sim), sim.shape)
+    return (sim[:, j] > sim[:, i]).astype(int)
+
+
+# ---------------------------------------------------------------------------
+# FedFOMO (Zhang et al. 2020) — client-side first-order model optimization
+
+
+def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
+                   n_candidates: int, key):
+    m = fed.m
+    # loss of every candidate model on every client's validation set
+    losses = np.zeros((m, m), np.float32)
+    flat = jax.vmap(flatten_pytree)(stacked)
+    flat_prev = jax.vmap(flatten_pytree)(prev)
+    for j in range(m):
+        pj = jax.tree_util.tree_map(lambda l: l[j], stacked)
+        losses[:, j] = np.asarray(val_loss_fn(pj, fed.x_val, fed.y_val))
+    prev_losses = np.zeros((m,), np.float32)
+    for i in range(m):
+        pi = jax.tree_util.tree_map(lambda l: l[i], prev)
+        prev_losses[i] = float(val_loss_fn(pi, fed.x_val[i:i + 1],
+                                           fed.y_val[i:i + 1])[0])
+    dist = np.asarray(jnp.linalg.norm(
+        flat[None, :, :] - flat_prev[:, None, :], axis=-1)) + 1e-9
+    wmat = np.maximum((prev_losses[:, None] - losses) / dist, 0.0)
+    # keep top candidates per client (paper samples M models)
+    if n_candidates < m:
+        thresh = np.sort(wmat, axis=1)[:, -n_candidates][:, None]
+        wmat = np.where(wmat >= thresh, wmat, 0.0)
+    rows = wmat.sum(1, keepdims=True)
+    wmat = np.where(rows > 0, wmat / np.maximum(rows, 1e-9), 0.0)
+    wj = jnp.asarray(wmat)
+    # θ_i ← θ_i^prev + Σ_j w_ij (θ_j − θ_i^prev)
+    mixed = user_centric_aggregate(stacked, wj)
+    keep = jnp.asarray(1.0 - wmat.sum(1))
+    return jax.tree_util.tree_map(
+        lambda mx, pv: mx + keep.reshape((-1,) + (1,) * (pv.ndim - 1)) * pv,
+        mixed, prev)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: user-centric PS aggregation  Y = W Θ.
+
+W: (k, m) mixing rules (resident in VMEM — tiny), Θ: (m, D) client-stacked
+flat params with D up to billions.  The kernel streams Θ through VMEM in
+(m, DBLK) tiles and emits (k, DBLK) tiles — a skinny matmul with O(k)
+arithmetic intensity, i.e. deliberately HBM-bandwidth-bound (DESIGN.md §5):
+one pass over HBM is the roofline, and this tiling achieves it.
+
+DBLK is MXU/VREG aligned (multiple of 128 lanes); m and k are padded to the
+8-sublane boundary by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_DBLK = 2048
+
+
+def _kernel(w_ref, theta_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)          # (k, m)
+    t = theta_ref[...].astype(jnp.float32)      # (m, DBLK)
+    out_ref[...] = jnp.dot(
+        w, t, preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dblk", "interpret"))
+def mixing_aggregate(w: jnp.ndarray, theta: jnp.ndarray, *,
+                     dblk: int = DEFAULT_DBLK,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Y = W @ Θ.  w: (k, m); theta: (m, D) -> (k, D) in theta.dtype."""
+    k, m = w.shape
+    m2, d = theta.shape
+    assert m == m2, (w.shape, theta.shape)
+    pad_d = (-d) % dblk
+    if pad_d:
+        theta = jnp.pad(theta, ((0, 0), (0, pad_d)))
+    grid = (theta.shape[1] // dblk,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, m), lambda i: (0, 0)),        # W resident
+            pl.BlockSpec((m, dblk), lambda i: (0, i)),     # Θ tile
+        ],
+        out_specs=pl.BlockSpec((k, dblk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, theta.shape[1]), theta.dtype),
+        interpret=interpret,
+    )(w, theta)
+    return out[:, :d] if pad_d else out

@@ -1,0 +1,60 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container kernels run with interpret=True (the TPU lowering is
+the target; interpret executes the same kernel body).  `INTERPRET` flips
+automatically off when a TPU backend is present.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mixing_aggregate import mixing_aggregate as _mix
+from repro.kernels.pairwise_sqdist import gram_matrix as _gram
+from repro.kernels.pairwise_sqdist import pairwise_sqdist as _sqdist
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_rows(a: jnp.ndarray, mult: int = 8):
+    pad = (-a.shape[0]) % mult
+    return (jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), pad)
+
+
+def mixing_aggregate(w: jnp.ndarray, theta: jnp.ndarray, *,
+                     dblk: int = 2048) -> jnp.ndarray:
+    """Y = W Θ; k/m padded to the TPU sublane boundary, result cropped."""
+    k, m = w.shape
+    pk, pm = (-k) % 8, (-m) % 8
+    w2 = jnp.pad(w, ((0, pk), (0, pm)))
+    theta2 = jnp.pad(theta, ((0, pm), (0, 0)))
+    out = _mix(w2, theta2, dblk=dblk, interpret=INTERPRET)
+    return out[:k]
+
+
+def pairwise_sqdist(g: jnp.ndarray, *, dblk: int = 2048) -> jnp.ndarray:
+    m = g.shape[0]
+    g2, _ = _pad_rows(g)
+    return _sqdist(g2, dblk=dblk, interpret=INTERPRET)[:m, :m]
+
+
+def gram_matrix(g: jnp.ndarray, *, dblk: int = 2048) -> jnp.ndarray:
+    m = g.shape[0]
+    g2, _ = _pad_rows(g)
+    return _gram(g2, dblk=dblk, interpret=INTERPRET)[:m, :m]
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    qblk: int = 128, kblk: int = 128) -> jnp.ndarray:
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  qblk=qblk, kblk=kblk, interpret=INTERPRET)
+
+
+__all__ = ["mixing_aggregate", "pairwise_sqdist", "gram_matrix",
+           "flash_attention", "ref", "INTERPRET"]

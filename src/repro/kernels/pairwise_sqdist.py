@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: pairwise squared distances between client gradients.
+
+Computes the Gram matrix G Gᵀ of (m, D) stacked gradients by streaming D
+through VMEM in (m, DBLK) tiles and accumulating the (m, m) product across
+grid steps (output block is revisited every step — the canonical Pallas
+accumulation pattern).  Δ is then assembled from the Gram diagonal:
+Δ_ij = G_ii + G_jj − 2 G_ij.  One HBM pass instead of the naive O(m²)
+re-reads of each g_i (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_DBLK = 2048
+
+
+def _gram_kernel(g_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)          # (m, DBLK)
+    out_ref[...] += jnp.dot(g, g.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("dblk", "interpret"))
+def gram_matrix(g: jnp.ndarray, *, dblk: int = DEFAULT_DBLK,
+                interpret: bool = False) -> jnp.ndarray:
+    """(m, D) -> (m, m) float32 Gram matrix, D-tiled single HBM pass."""
+    m, d = g.shape
+    pad_d = (-d) % dblk
+    if pad_d:
+        g = jnp.pad(g, ((0, 0), (0, pad_d)))
+    grid = (g.shape[1] // dblk,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, dblk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(g)
+
+
+def pairwise_sqdist(g: jnp.ndarray, *, dblk: int = DEFAULT_DBLK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Δ_ij = ||g_i − g_j||² via the Gram kernel."""
+    gram = gram_matrix(g, dblk=dblk, interpret=interpret)
+    sq = jnp.diag(gram)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mixing_aggregate_ref(w: jnp.ndarray, theta: jnp.ndarray) -> jnp.ndarray:
+    """PS-side user-centric aggregation: (k,m) x (m,D) -> (k,D), fp32 accum."""
+    out = jnp.dot(w.astype(jnp.float32), theta.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(theta.dtype)
+
+
+def pairwise_sqdist_ref(g: jnp.ndarray) -> jnp.ndarray:
+    """Δ_ij = ||g_i − g_j||², (m,D) -> (m,m) float32."""
+    gf = g.astype(jnp.float32)
+    sq = jnp.sum(gf * gf, axis=1)
+    gram = gf @ gf.T
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """Reference SDPA.  q: (B,H,Sq,hd); k,v: (B,Kh,Sk,hd); GQA G=H/Kh."""
+    B, H, Sq, hd = q.shape
+    Kh, Sk = k.shape[1], k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Kh, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / math.sqrt(hd)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)   # aligned to sequence end
+    k_pos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    logits = jnp.where(valid[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,2 @@
+# Launcher package: mesh.py / sharding.py / steps.py are import-safe (no jax
+# device-state side effects); dryrun.py must run as its own process.

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production meshes, print memory/cost analysis, dump roofline artifacts.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import, including jax).  Artifacts land in benchmarks/dryrun_artifacts/
+<mesh>/<arch>__<shape>[__tag].json and are consumed by repro.roofline and
+benchmarks/roofline_table.py.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import INPUT_SHAPES, build_case
+from repro.models.scan import layer_grouping
+from repro.roofline.analysis import (model_flops, parse_collective_bytes,
+                                     roofline)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "dryrun_artifacts")
+
+
+def _get(d, *names, default=0.0):
+    for n in names:
+        if d and n in d:
+            return float(d[n])
+    return default
+
+
+def _compile_case(cfg, mesh, shape_name, kw):
+    case = build_case(cfg, mesh, shape_name, **kw)
+    jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings,
+                     donate_argnums=case.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    return case, compiled
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    return (_get(cost, "flops"),
+            _get(cost, "bytes accessed", "bytes accessed operand 0"),
+            coll, hlo)
+
+
+def extrapolated_costs(cfg, mesh, shape_name, kw):
+    """XLA's HLO cost analysis counts a while-loop body ONCE (trip count is
+    ignored), so the layer-scanned step undercounts flops/bytes/collectives.
+    Costs of the *python-loop* variant are exactly affine in depth, and
+    shallow loop graphs compile fast — so compile loop variants at 2 and 3
+    pattern blocks and extrapolate the slope to the real depth."""
+    if cfg.family == "audio":
+        return None                      # whisper uses the loop path anyway
+    n_pre, period, groups = layer_grouping(cfg)
+    if groups <= 3:
+        return None
+    vals = {}
+    kw_loop = dict(kw)
+    kw_loop["loop"] = True
+    for g in (2, 3):
+        cfg_g = dataclasses.replace(cfg, n_layers=n_pre + g * period)
+        _, compiled = _compile_case(cfg_g, mesh, shape_name, kw_loop)
+        vals[g] = _costs(compiled)[:3]
+    def lin(f2, f3):
+        slope = f3 - f2
+        return f2 + (groups - 2) * slope
+    flops = lin(vals[2][0], vals[3][0])
+    byts = lin(vals[2][1], vals[3][1])
+    coll = {k: lin(float(vals[2][2][k]), float(vals[3][2][k]))
+            for k in vals[2][2]}
+    return flops, byts, coll
+
+
+def apply_overrides(cfg, overrides: dict):
+    """dataclasses.replace with dotted paths, e.g. {"attn.mla_absorb": True}."""
+    for path, value in (overrides or {}).items():
+        parts = path.split(".")
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: value})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = apply_overrides(sub, {".".join(parts[1:]): value})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             schedule: str = "gspmd", n_streams: int = 4,
+             remat: bool = True, microbatch: int = 1, tag: str = "",
+             verbose: bool = True, save: bool = True,
+             overrides: dict = None) -> dict:
+    cfg = apply_overrides(get_config(arch), overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.devices.size
+    shape = INPUT_SHAPES[shape_name]
+    kw = {}
+    if shape.kind == "train":
+        kw = dict(schedule=schedule, n_streams=n_streams, remat=remat,
+                  microbatch=microbatch)
+    t0 = time.time()
+    case, compiled = _compile_case(cfg, mesh, shape_name, kw)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    flops_raw, bytes_raw, coll_raw, hlo = _costs(compiled)
+    extra = extrapolated_costs(cfg, mesh, shape_name, kw)
+    if extra is not None:
+        flops_dev, bytes_dev, coll = extra
+    else:
+        flops_dev, bytes_dev, coll = flops_raw, bytes_raw, coll_raw
+    if microbatch > 1 and shape.kind == "train":
+        # XLA cost analysis counts the accumulation scan body once; the
+        # in-loop flops/bytes scale ×microbatch (weights re-read per slice).
+        # Collectives are left unscaled: the mixing collective runs once
+        # outside the loop (in-loop TP activation reduces are undercounted
+        # — noted in the artifact).
+        flops_dev *= microbatch
+        bytes_dev *= microbatch
+    coll_total = float(sum(coll.values()))
+    peak_mem = None
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            peak_mem = (peak_mem or 0.0) + float(v)
+
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    terms = roofline(arch, shape_name, mesh_name, chips, flops_dev, bytes_dev,
+                     coll_total, mf, peak_mem)
+    result = terms.as_dict()
+    result.update({
+        "collectives": coll,
+        "raw_flops_per_device": flops_raw,
+        "raw_bytes_per_device": bytes_raw,
+        "extrapolated": extra is not None,
+        "microbatch": microbatch,
+        "compile_seconds": t_compile,
+        "memory_analysis": str(mem),
+        "meta": case.meta,
+        "n_hlo_lines": hlo.count("\n"),
+    })
+    if verbose:
+        print(f"== {arch} × {shape_name} × {mesh_name} "
+              f"(compile {t_compile:.0f}s) ==")
+        print(mem)
+        print({"flops/device": flops_dev, "bytes/device": bytes_dev,
+               "extrapolated": extra is not None})
+        print("collective bytes/device:", coll)
+        print(f"roofline: compute {terms.t_compute*1e3:.2f}ms  "
+              f"memory {terms.t_memory*1e3:.2f}ms  "
+              f"collective {terms.t_collective*1e3:.2f}ms  "
+              f"-> {terms.bottleneck}; useful-flops ratio "
+              f"{terms.useful_flops_ratio:.3f}")
+    if save:
+        os.makedirs(os.path.join(ARTIFACT_DIR, mesh_name), exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(ARTIFACT_DIR, mesh_name,
+                            f"{arch}__{shape_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true",
+                   help="every (arch × shape) on the selected mesh")
+    p.add_argument("--schedule", default="gspmd",
+                   choices=("gspmd", "shard_map_streams", "shard_map_unicast"))
+    p.add_argument("--streams", type=int, default=4)
+    p.add_argument("--microbatch", type=int, default=1)
+    p.add_argument("--no-remat", action="store_true")
+    p.add_argument("--tag", default="")
+    p.add_argument("--skip-existing", action="store_true")
+    args = p.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    failures = []
+    for a, s in combos:
+        suffix = f"__{args.tag}" if args.tag else ""
+        path = os.path.join(ARTIFACT_DIR, mesh_name, f"{a}__{s}{suffix}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {a} × {s} (artifact exists)")
+            continue
+        try:
+            run_case(a, s, multi_pod=args.multi_pod, schedule=args.schedule,
+                     n_streams=args.streams, remat=not args.no_remat,
+                     microbatch=args.microbatch, tag=args.tag)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            traceback.print_exc()
+            failures.append((a, s, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

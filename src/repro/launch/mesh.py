@@ -1,0 +1,65 @@
+"""Production mesh construction (DESIGN.md §7).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run forces 512 host devices (in dryrun.py, before any
+import); the single-pod mesh then uses the first 256.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+# v5e-class hardware constants (roofline + memory planning)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run via "
+            "launch/dryrun.py which forces XLA_FLAGS host device count")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for CPU examples/tests (same code path as production)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def data_axes(mesh: Mesh):
+    """The batch-sharding axes of a mesh (pod folds into data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def client_axes(mesh: Mesh, cfg) -> tuple:
+    """Mesh axes carrying the FL client dimension (DESIGN.md §3).
+
+    "all" = client-per-chip placement (§Perf): weights replicated, every
+    mesh axis carries clients — no tensor-parallel collectives remain and
+    the mixing collective is the entire communication, exactly the paper's
+    PS deployment.  Only for archs whose params+opt fit one chip.
+    """
+    if cfg.fl_client_axis == "pod":
+        return ("pod",) if "pod" in mesh.axis_names else ()
+    if cfg.fl_client_axis == "all":
+        return tuple(mesh.axis_names)
+    return data_axes(mesh)
+
+
+def n_clients(mesh: Mesh, cfg) -> int:
+    n = 1
+    for a in client_axes(mesh, cfg):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,79 @@
+"""Serving driver: prefill + batched decode through the production step
+builders, on the host mesh at reduced scale (the dry-run lowers the same
+functions at mesh scale).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import scan as scan_mod
+from repro.models import transformer as T
+from repro.launch.steps import init_model_params, _use_scan
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mamba2-780m")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--tokens", type=int, default=16)
+    p.add_argument("--cache-len", type=int, default=128)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model_params(key, cfg)
+    use_scan = _use_scan(cfg)
+    B = args.batch
+
+    batch = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder.n_ctx, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.vision.n_tokens, cfg.vision.embed_dim))
+    prefix = cfg.vision.n_tokens if cfg.family == "vlm" else 0
+
+    caches = T.make_caches(cfg, B, args.cache_len, jnp.float32)
+    if use_scan:
+        caches = scan_mod.stack_caches(caches, cfg)
+        prefill = jax.jit(lambda p, b, c: scan_mod.prefill(p, cfg, b, c))
+        decode = jax.jit(lambda p, t, c, pos: scan_mod.decode_step(
+            p, cfg, t, c, pos))
+    else:
+        prefill = jax.jit(lambda p, b, c: T.prefill(p, cfg, b, c))
+        decode = jax.jit(lambda p, t, c, pos: T.decode_step(p, cfg, t, c, pos))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch, caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    print(f"prefill {args.prompt_len} tokens x{B}: {time.time()-t0:.2f}s")
+
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        pos = jnp.full((B,), prefix + args.prompt_len + i, jnp.int32)
+        logits, caches = decode(params, tok, caches, pos)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    dt = time.time() - t0
+    toks = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"decoded {args.tokens-1} steps x{B} in {dt:.2f}s "
+          f"({(args.tokens-1)*B/max(dt,1e-9):.1f} tok/s)")
+    print("sample:", toks[0][:16])
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Partitioning rules: params / optimizer state / batches / caches → PartitionSpec.
+
+Strategy (DESIGN.md §3, §7):
+  * tensor parallel over "model": attention heads (or head_dim when the head
+    count does not divide), MoE expert dim (expert parallelism), FFN hidden,
+    vocab — chosen per-leaf by name-keyed rules with divisibility fallbacks;
+  * FSDP over "data" for pod-placed giants (second divisible dim per leaf);
+  * the FL client dim (leading axis of stacked params) is sharded over the
+    client axes; scan-stacked layer groups add a replicated leading dim.
+
+Everything here is pure metadata: functions map pytrees of arrays or
+ShapeDtypeStructs to pytrees of PartitionSpec.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import client_axes, data_axes
+
+# dims preferred for "model" sharding, per param name (indices into the
+# leaf's *base* shape, tried in order; first divisible wins)
+_MODEL_DIM_PREF = {
+    "embed": (0, 1), "pos_emb": (1,), "lm_head": (1, 0),
+    "wq": (1, 2, 0), "wk": (1, 2, 0), "wv": (1, 2, 0), "wo": (0, 1),
+    "wq_a": (1, 0), "wq_b": (1, 0), "wkv_a": (1, 0), "wkv_b": (1, 0),
+    "up": (1, 0), "gate": (1, 0), "down": (0, 1),
+    "router": (1,),
+    "w_up": (0, 2), "w_gate": (0, 2), "w_down": (0, 1),
+    "in_proj": (1, 0), "out_proj": (0, 1),
+    "vision_proj": (1, 0),
+    "cross_k": (), "cross_v": (),
+}
+_REPLICATED = {"scale", "bias", "conv_w", "conv_b", "A_log", "D", "dt_bias",
+               "norm_scale", "q_norm", "kv_norm", "q_scale", "k_scale"}
+
+
+def _key_name(k) -> Optional[str]:
+    if isinstance(k, DictKey):
+        return str(k.key)
+    if isinstance(k, GetAttrKey):
+        return str(k.name)
+    return None
+
+
+def _path_names(path) -> list:
+    return [n for n in (_key_name(k) for k in path) if n is not None]
+
+
+def _base_spec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool, serve_tp: bool = False) -> list:
+    """Per-dim axis assignment for an unstacked param leaf."""
+    spec = [None] * len(shape)
+    msize = mesh.shape["model"]
+    if name in _REPLICATED or not shape:
+        return spec
+    prefs = _MODEL_DIM_PREF.get(name, tuple(np.argsort(shape)[::-1]))
+    model_dim = None
+    for d in prefs:
+        if d < len(shape) and shape[d] % msize == 0:
+            model_dim = d
+            break
+    if model_dim is not None:
+        spec[model_dim] = "model"
+    if serve_tp and "data" in mesh.axis_names:
+        # weight-stationary 2D TP (§Perf): widen the TP dim to
+        # ("data","model") when jointly divisible, else put "data" on the
+        # next preferred dim.  Weights never move; activations all-reduce.
+        dsize = mesh.shape["data"]
+        if model_dim is not None and shape[model_dim] % (msize * dsize) == 0:
+            spec[model_dim] = ("data", "model")
+        else:
+            for d in list(prefs) + sorted(range(len(shape)),
+                                          key=lambda d: -shape[d]):
+                if d < len(shape) and d != model_dim and \
+                        shape[d] % dsize == 0 and shape[d] >= dsize:
+                    spec[d] = "data"
+                    break
+    elif fsdp and "data" in mesh.axis_names:
+        dsize = mesh.shape["data"]
+        # largest remaining divisible dim carries the FSDP shard
+        order = sorted(range(len(shape)), key=lambda d: -shape[d])
+        for d in order:
+            if d != model_dim and shape[d] % dsize == 0 and shape[d] >= dsize:
+                spec[d] = "data"
+                break
+    return spec
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh, *,
+                client_stacked: bool = False, serve: bool = False) -> Any:
+    """PartitionSpec pytree for (possibly client-stacked, possibly
+    scan-stacked) params or mirrored optimizer-state trees."""
+    serve_tp = serve and cfg.serve_tp and cfg.fl_client_axis == "pod"
+    fsdp = cfg.fl_client_axis == "pod" and not serve_tp
+    caxes = client_axes(mesh, cfg)
+    # client-per-chip placement: the client dim consumes every axis, so
+    # weight feature dims must stay replicated
+    replicate_inner = client_stacked and "model" in caxes
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        prefix = []
+        skip = 0
+        if client_stacked:
+            prefix.append(caxes if caxes else None)
+            skip += 1
+        if "scan_layers" in names:
+            prefix.append(None)
+            skip += 1
+        base_shape = leaf.shape[skip:]
+        if name == "step" or not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return P()
+        inner = [None] * len(base_shape) if replicate_inner else \
+            _base_spec(name, base_shape, mesh, fsdp, serve_tp)
+        return P(*prefix, *inner)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(batch: Any, cfg: ModelConfig, mesh: Mesh, *,
+                client_dim: bool = False) -> Any:
+    """Batch sharding: leading client dim over client axes; otherwise the
+    batch dim over all data axes.  batch=1 leaves (long_500k) replicate."""
+    caxes = client_axes(mesh, cfg)
+    daxes = data_axes(mesh)
+
+    def spec(leaf):
+        dims = [None] * leaf.ndim
+        if client_dim:
+            if caxes and leaf.shape[0] % int(np.prod([mesh.shape[a] for a in caxes])) == 0:
+                dims[0] = caxes
+            # per-client batch dim: shard over remaining data axes (pod mode)
+            rem = tuple(a for a in daxes if a not in caxes)
+            if rem and leaf.ndim > 1 and \
+                    leaf.shape[1] % int(np.prod([mesh.shape[a] for a in rem])) == 0:
+                dims[1] = rem if len(rem) > 1 else rem[0]
+        else:
+            total = int(np.prod([mesh.shape[a] for a in daxes]))
+            if leaf.shape[0] % total == 0 and leaf.shape[0] >= total:
+                dims[0] = daxes if len(daxes) > 1 else daxes[0]
+        return P(*dims)
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(caches: Any, cfg: ModelConfig, mesh: Mesh, *,
+                batch: int, seq_shard: bool = False) -> Any:
+    """KV/SSM cache sharding for serving.
+
+    Batch dim over data axes when divisible; otherwise (long_500k, batch=1)
+    the sequence dim is sharded over data and heads/feature dims over model.
+
+    seq_shard=True (the serve_tp layout for pod-placed giants, §Perf):
+    batch stays replicated — the cache SEQUENCE dim is sharded over "data"
+    so it coexists with weights jointly sharded over ("data","model");
+    batch-sharding the cache there forces GSPMD to re-gather it every
+    token (measured 278 GiB/token on nemotron).
+    """
+    daxes = data_axes(mesh)
+    dtotal = int(np.prod([mesh.shape[a] for a in daxes]))
+    msize = mesh.shape["model"]
+    batch_shardable = (not seq_shard) and batch % dtotal == 0 \
+        and batch >= dtotal
+    d_for_batch = daxes if len(daxes) > 1 else daxes[0]
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if leaf.ndim == 0:
+            return P()
+        # scan-stacked caches carry a leading (n_groups,) dim — replicated
+        skip = 1 if "scan" in names else 0
+        b_dim, s_dim = skip, skip + 1
+        dims = [None] * leaf.ndim
+        if batch_shardable and leaf.ndim > b_dim:
+            dims[b_dim] = d_for_batch
+        if name == "pos":                       # (B, C) int positions
+            if not batch_shardable and leaf.ndim > s_dim and \
+                    leaf.shape[s_dim] % dtotal == 0:
+                dims[s_dim] = d_for_batch
+            return P(*dims)
+        # feature dims: prefer heads/feature over model, seq over data
+        if name in ("k", "v", "cross_k", "cross_v", "conv", "state"):
+            # find a trailing dim divisible by model size (heads, ranks, hd)
+            for d in range(leaf.ndim - 1, s_dim, -1):
+                if leaf.shape[d] % msize == 0 and leaf.shape[d] >= msize:
+                    dims[d] = "model"
+                    break
+            if not batch_shardable and leaf.ndim > s_dim and name != "state" \
+                    and leaf.shape[s_dim] % dtotal == 0 \
+                    and leaf.shape[s_dim] >= dtotal:
+                dims[s_dim] = d_for_batch     # shard the seq/window dim
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

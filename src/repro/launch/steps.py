@@ -1,0 +1,383 @@
+"""Step builders: FL-integrated train_step and serve prefill/decode steps.
+
+train_step is one federated round at mesh scale (DESIGN.md §2):
+  1. every client (leading dim of the stacked params, sharded over the
+     client axes) takes one local SGD step on its batch shard;
+  2. the user-centric aggregation mixes client models across the client
+     axis — `w` is (k, m) (k=1 FedAvg, k=m unicast UCFL, 1<k<m streams)
+     and `assignment` maps clients to streams.
+
+The mixing `schedule` selects the collective implementation:
+  gspmd               einsum, XLA chooses collectives (baseline)
+  shard_map_streams   explicit psum of k weighted copies (§Perf)
+  shard_map_unicast   explicit all-gather + local mix     (§Perf)
+
+serve steps are standard single-model (stream-0) prefill / decode.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.distributed import (mix_einsum, mix_streams_shard_map,
+                                    mix_unicast_shard_map)
+from repro.launch.mesh import client_axes, data_axes, n_clients
+from repro.launch.sharding import (batch_specs, cache_specs, param_specs,
+                                   to_shardings)
+from repro.models import scan as scan_mod
+from repro.models import transformer as T
+from repro.optim import apply_updates, sgd
+
+
+# ---------------------------------------------------------------------------
+# shapes
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+    long_context: bool = False
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode", long_context=True),
+}
+
+
+def _use_scan(cfg: ModelConfig) -> bool:
+    return cfg.family != "audio"
+
+
+def _loss_fn(cfg: ModelConfig, *, remat: bool) -> Callable:
+    if _use_scan(cfg):
+        return lambda p, b: scan_mod.loss_fn(p, cfg, b, remat=remat)
+    return lambda p, b: T.loss_fn(p, cfg, b)
+
+
+def init_model_params(key, cfg: ModelConfig):
+    """Single-model params, scan-stacked when applicable."""
+    params = T.init_params(key, cfg)
+    if _use_scan(cfg):
+        params = scan_mod.stack_layer_params(params, cfg)
+    return params
+
+
+def init_stacked_params(key, cfg: ModelConfig, m: int):
+    """Client-stacked params: every leaf gains a leading (m,) dim."""
+    params = init_model_params(key, cfg)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape), params)
+
+
+def init_stacked_params_loop(key, cfg: ModelConfig, m: int):
+    """As init_stacked_params but without scan-stacking (loop path)."""
+    params = T.init_params(key, cfg)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# batches
+
+
+def train_batch_struct(cfg: ModelConfig, shape: InputShape, m: int,
+                       tok_dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch // m
+    s = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {}
+    if cfg.family == "vlm":
+        nv = cfg.vision.n_tokens
+        batch["vision_embeds"] = sds((m, b, nv, cfg.vision.embed_dim),
+                                     cfg.cdtype)
+        batch["tokens"] = sds((m, b, s - nv), tok_dtype)
+    elif cfg.family == "audio":
+        batch["audio_embeds"] = sds((m, b, cfg.encoder.n_ctx, cfg.d_model),
+                                    cfg.cdtype)
+        batch["tokens"] = sds((m, b, s), tok_dtype)
+    else:
+        batch["tokens"] = sds((m, b, s), tok_dtype)
+    return batch
+
+
+def serve_batch_struct(cfg: ModelConfig, shape: InputShape
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch = {}
+    if cfg.family == "vlm":
+        nv = cfg.vision.n_tokens
+        batch["vision_embeds"] = sds((b, nv, cfg.vision.embed_dim), cfg.cdtype)
+        batch["tokens"] = sds((b, s - nv), jnp.int32)
+    elif cfg.family == "audio":
+        batch["audio_embeds"] = sds((b, cfg.encoder.n_ctx, cfg.d_model),
+                                    cfg.cdtype)
+        batch["tokens"] = sds((b, s), jnp.int32)
+    else:
+        batch["tokens"] = sds((b, s), jnp.int32)
+    return batch
+
+
+def sample_batch(key, struct: Dict[str, jax.ShapeDtypeStruct], vocab: int):
+    """Materialize a random batch matching a struct (examples/tests)."""
+    out = {}
+    for k, s in struct.items():
+        if k == "tokens":
+            out[k] = jax.random.randint(key, s.shape, 0, vocab, s.dtype)
+        else:
+            out[k] = jax.random.normal(key, s.shape, s.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# train step
+
+
+@dataclass
+class TrainCase:
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def make_optimizer(cfg: ModelConfig):
+    """Paper optimizer (SGD η=.1 β=.9); giants drop momentum to fit HBM
+    (DESIGN.md §4) and keep state in the param dtype."""
+    if cfg.fl_client_axis == "pod":
+        return sgd(0.1, momentum=0.0)
+    return sgd(0.1, momentum=0.9, state_dtype="param")
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, *, n_streams: int = 0,
+                     schedule: str = "gspmd", remat: bool = True,
+                     mix_every: int = 1, loop: bool = False,
+                     microbatch: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch, w, assignment).
+    loop=True uses the unscanned per-layer python loop (dry-run cost
+    extrapolation; numerically identical).
+    microbatch>1 accumulates gradients over that many slices of the
+    per-client batch dim (fp32 accumulator) — the activation-memory knob
+    for the giant archs whose train_4k temps overshoot HBM."""
+    m = n_clients(mesh, cfg)
+    caxes = client_axes(mesh, cfg)
+    opt = make_optimizer(cfg)
+    loss_fn = (lambda p, b: T.loss_fn(p, cfg, b)) if loop else \
+        _loss_fn(cfg, remat=remat)
+
+    def total_loss(stacked, batch):
+        losses, metrics = jax.vmap(lambda p, b: loss_fn(p, b))(stacked, batch)
+        return jnp.sum(losses), metrics
+
+    def grads_of(params, batch):
+        if microbatch == 1:
+            return jax.value_and_grad(total_loss, has_aux=True)(params, batch)
+        # (m, b, ...) -> (micro, m, b/micro, ...) without data movement
+        def split(l):
+            mm, b = l.shape[:2]
+            return l.reshape((mm, microbatch, b // microbatch) + l.shape[2:]
+                             ).swapaxes(0, 1)
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, batch_i):
+            g_acc, loss_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                total_loss, has_aux=True)(params, batch_i)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss), metrics
+
+        g0 = jax.tree_util.tree_map(
+            lambda l: jnp.zeros(l.shape, jnp.float32), params)
+        (g, loss), metrics = jax.lax.scan(body, (g0, 0.0), mb)
+        # per-client loss is a batch mean: average the slice means
+        g = jax.tree_util.tree_map(
+            lambda x, p: (x / microbatch).astype(p.dtype), g, params)
+        return (loss / microbatch,
+                jax.tree_util.tree_map(lambda x: jnp.mean(x), metrics)), g
+
+    def mix(params, w, assignment):
+        if schedule == "gspmd" or not caxes:
+            return mix_einsum(params, w,
+                              None if w.shape[0] == w.shape[1] else assignment)
+        axis = caxes[0] if len(caxes) == 1 else caxes
+        if schedule == "shard_map_streams":
+            return mix_streams_shard_map(mesh, axis, params, w, assignment)
+        if schedule == "shard_map_unicast":
+            full_w = jnp.take(w, assignment, axis=0)  # (m, m) rows per client
+            return mix_unicast_shard_map(mesh, axis, params, full_w)
+        raise ValueError(schedule)
+
+    def train_step(params, opt_state, batch, w, assignment):
+        (loss, metrics), grads = grads_of(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        params = mix(params, w, assignment)
+        return params, opt_state, {"loss": loss / m,
+                                   "ce": jnp.mean(metrics["ce"])}
+
+    return train_step
+
+
+def build_train_case(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
+                     n_streams: int = 4, schedule: str = "gspmd",
+                     remat: bool = True, loop: bool = False,
+                     microbatch: int = 1) -> TrainCase:
+    """Everything dryrun.py needs to lower a train_4k-style case."""
+    m = n_clients(mesh, cfg)
+    k = max(1, min(n_streams, m))
+    opt = make_optimizer(cfg)
+
+    init = init_stacked_params_loop if loop else init_stacked_params
+    params_sds = jax.eval_shape(
+        functools.partial(init, cfg=cfg, m=m), jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = train_batch_struct(cfg, shape, m)
+    w_sds = jax.ShapeDtypeStruct((k, m), jnp.float32)
+    assign_sds = jax.ShapeDtypeStruct((m,), jnp.int32)
+
+    pspec = param_specs(params_sds, cfg, mesh, client_stacked=True)
+    ospec = param_specs(opt_sds, cfg, mesh, client_stacked=True)
+    bspec = batch_specs(batch_sds, cfg, mesh, client_dim=True)
+
+    fn = build_train_step(cfg, mesh, n_streams=k, schedule=schedule,
+                          remat=remat, loop=loop, microbatch=microbatch)
+    in_specs = (pspec, ospec, bspec, P(), P())
+    out_specs = (pspec, ospec, None)
+    return TrainCase(
+        fn=fn,
+        args=(params_sds, opt_sds, batch_sds, w_sds, assign_sds),
+        in_shardings=to_shardings(in_specs, mesh),
+        out_shardings=to_shardings(out_specs, mesh),
+        donate_argnums=(0, 1),
+        meta={"m_clients": m, "n_streams": k, "schedule": schedule,
+              "microbatch": microbatch},
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+
+
+def _cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    return shape.seq_len
+
+
+def build_prefill_case(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                       *, loop: bool = False) -> TrainCase:
+    """Prefill: (params, batch) -> (last_logits, caches)."""
+    long_ctx = shape.long_context
+    use_scan = _use_scan(cfg) and not loop
+
+    def prefill_fn(params, batch):
+        bsz = batch["tokens"].shape[0]
+        caches = T.make_caches(cfg, bsz, _cache_len(cfg, shape), cfg.cdtype,
+                               long_context=long_ctx)
+        if use_scan:
+            caches = scan_mod.stack_caches(caches, cfg)
+            return scan_mod.prefill(params, cfg, batch, caches,
+                                    long_context=long_ctx)
+        return T.prefill(params, cfg, batch, caches, long_context=long_ctx)
+
+    init = T.init_params if loop else \
+        functools.partial(init_model_params, cfg=cfg)
+    params_sds = jax.eval_shape(
+        (lambda k: T.init_params(k, cfg)) if loop else init,
+        jax.random.PRNGKey(0))
+    batch_sds = serve_batch_struct(cfg, shape)
+    serve_tp = cfg.serve_tp and cfg.fl_client_axis == "pod"
+    pspec = param_specs(params_sds, cfg, mesh, client_stacked=False,
+                        serve=True)
+    bspec = batch_specs(batch_sds, cfg, mesh, client_dim=False)
+    out_caches_sds = jax.eval_shape(prefill_fn, params_sds, batch_sds)[1]
+    cspec = cache_specs(out_caches_sds, cfg, mesh, batch=shape.global_batch,
+                        seq_shard=serve_tp)
+    in_specs = (pspec, bspec)
+    out_specs = (None, cspec)
+    return TrainCase(
+        fn=prefill_fn, args=(params_sds, batch_sds),
+        in_shardings=to_shardings(in_specs, mesh),
+        out_shardings=to_shardings(out_specs, mesh),
+        donate_argnums=(),
+        meta={"kind": "prefill"},
+    )
+
+
+def build_decode_case(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                      *, loop: bool = False) -> TrainCase:
+    """Decode: (params, caches, token, pos) -> (logits, caches).
+
+    The cache stands for `shape.seq_len` tokens of context; for long_500k
+    attention archs it is the sliding-window ring buffer (sub-quadratic
+    adaptation, DESIGN.md §6) and for SSM archs the O(1) state.
+    """
+    b = shape.global_batch
+    long_ctx = shape.long_context
+    use_scan = _use_scan(cfg) and not loop
+    cache_len = _cache_len(cfg, shape)
+
+    def make_cache_struct():
+        caches = T.make_caches(cfg, b, cache_len, cfg.cdtype,
+                               long_context=long_ctx)
+        return scan_mod.stack_caches(caches, cfg) if use_scan else caches
+
+    def decode_fn(params, caches, token, pos):
+        if use_scan:
+            return scan_mod.decode_step(params, cfg, token, caches, pos,
+                                        long_context=long_ctx)
+        return T.decode_step(params, cfg, token, caches, pos,
+                             long_context=long_ctx)
+
+    params_sds = jax.eval_shape(
+        (lambda k: T.init_params(k, cfg)) if loop else
+        functools.partial(init_model_params, cfg=cfg), jax.random.PRNGKey(0))
+    caches_sds = jax.eval_shape(make_cache_struct)
+    token_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    serve_tp = cfg.serve_tp and cfg.fl_client_axis == "pod"
+    pspec = param_specs(params_sds, cfg, mesh, client_stacked=False,
+                        serve=True)
+    cspec = cache_specs(caches_sds, cfg, mesh, batch=b, seq_shard=serve_tp)
+    # token/pos batch-sharded like the caches (replicated inputs make GSPMD
+    # gather the huge cache to meet the activations); under the serve_tp
+    # layout batch is replicated and the cache is sequence-sharded instead.
+    if serve_tp:
+        tspec = {"t": P(), "p": P()}
+    else:
+        tspec = batch_specs({"t": token_sds, "p": pos_sds}, cfg, mesh,
+                            client_dim=False)
+    in_specs = (pspec, cspec, tspec["t"], tspec["p"])
+    out_specs = (None, cspec)
+    return TrainCase(
+        fn=decode_fn, args=(params_sds, caches_sds, token_sds, pos_sds),
+        in_shardings=to_shardings(in_specs, mesh),
+        out_shardings=to_shardings(out_specs, mesh),
+        donate_argnums=(1,),
+        meta={"kind": "decode", "cache_len": cache_len},
+    )
+
+
+def build_case(cfg: ModelConfig, mesh: Mesh, shape_name: str, **kw) -> TrainCase:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_case(cfg, mesh, shape, **kw)
+    loop = kw.get("loop", False)
+    if shape.kind == "prefill":
+        return build_prefill_case(cfg, mesh, shape, loop=loop)
+    return build_decode_case(cfg, mesh, shape, loop=loop)

@@ -1,0 +1,6 @@
+from repro.models import transformer, lenet
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      loss_fn, make_caches, prefill)
+
+__all__ = ["transformer", "lenet", "decode_step", "forward", "init_params",
+           "loss_fn", "make_caches", "prefill"]

@@ -1,0 +1,346 @@
+"""Attention: GQA/MQA, MLA (DeepSeek), logit softcap, sliding windows, caches.
+
+Cache design (DESIGN.md §6): every attention layer's cache is a ring buffer of
+``cache_len`` slots with an absolute-position array ``pos`` (-1 = empty).  A
+linear cache is the special case ``cache_len >= seq_len``; the long_500k
+sliding-window decode uses ``cache_len == window``.  Masks are derived from
+stored absolute positions, which makes ring/linear/windowed decode uniform.
+
+MLA caches the *compressed* kv latent (kv_lora_rank + rope head) — the memory
+win of the method; decode supports both the naive (re-expand) path and the
+absorbed-matmul path (``absorb=True``), the latter being a §Perf optimization.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_apply, dense_init, softcap
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray            # (B, C, Kh, hd)  or MLA: c_kv (B, C, r)
+    v: jnp.ndarray            # (B, C, Kh, hd)  or MLA: k_rope (B, C, rope_dim)
+    pos: jnp.ndarray          # (B, C) int32 absolute positions, -1 empty
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    a = cfg.attn
+    if a.mla is not None:
+        k = jnp.zeros((batch, cache_len, a.mla.kv_lora_rank), dtype)
+        v = jnp.zeros((batch, cache_len, a.mla.qk_rope_head_dim), dtype)
+    else:
+        k = jnp.zeros((batch, cache_len, a.n_kv_heads, a.head_dim), dtype)
+        v = jnp.zeros_like(k)
+    pos = jnp.full((batch, cache_len), -1, jnp.int32)
+    return KVCache(k, v, pos)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False):
+    a = cfg.attn
+    d = cfg.d_model
+    dt = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    if a.mla is not None and not cross:
+        m = a.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "wq_a": dense_init(ks[0], d, m.q_lora_rank, dt),
+            "q_norm": jnp.zeros((m.q_lora_rank,), dt),
+            "wq_b": dense_init(ks[1], m.q_lora_rank, (a.n_heads, qk_dim), dt),
+            "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+            "kv_norm": jnp.zeros((m.kv_lora_rank,), dt),
+            "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                                (a.n_heads, m.qk_nope_head_dim + m.v_head_dim), dt),
+            "wo": dense_init(ks[4], a.n_heads * m.v_head_dim, d, dt),
+        }
+    p = {
+        "wq": dense_init(ks[0], d, (a.n_heads, a.head_dim), dt),
+        "wk": dense_init(ks[1], d, (a.n_kv_heads, a.head_dim), dt),
+        "wv": dense_init(ks[2], d, (a.n_kv_heads, a.head_dim), dt),
+        "wo": dense_init(ks[3], a.n_heads * a.head_dim, d, dt),
+    }
+    if a.qk_norm:
+        p["q_scale"] = jnp.zeros((a.head_dim,), dt)
+        p["k_scale"] = jnp.zeros((a.head_dim,), dt)
+    return p
+
+
+def _rms(x, scale):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# masks
+
+
+def mask_bias(q_pos, k_pos, *, kind: str = "causal",
+              window: Optional[int] = None, prefix_len: int = 0):
+    """(..., Sq, Sk) additive bias from absolute positions.
+
+    kind: causal | full; window restricts to k > q - window; prefix_len makes
+    the first `prefix_len` positions bidirectional (PaliGemma prefix-LM).
+    k_pos == -1 marks empty cache slots (always masked).
+    """
+    q = q_pos[..., :, None].astype(jnp.int32)
+    k = k_pos[..., None, :].astype(jnp.int32)
+    valid = k >= 0
+    if kind == "causal":
+        ok = k <= q
+        if prefix_len:
+            ok = ok | (k < prefix_len)
+        valid = valid & ok
+    if window is not None:
+        valid = valid & (k > q - window)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, cap, cdtype, *, scale=None, seq_axis=None):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,Kh,hd') with H % Kh == 0; bias: (B,Sq,Sk).
+
+    seq_axis: mesh axis name carrying the KV-sequence shard (serve_tp
+    decode).  Constraining the logits to stay sharded on Sk makes GSPMD
+    run a distributed softmax (psum of per-head max/sum stats + the
+    (B,H,hd) output partial) instead of all-gathering the cache.
+    """
+    from jax.sharding import PartitionSpec as P  # local: models stay light
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    scale = (1.0 / math.sqrt(hd)) if scale is None else scale
+    qg = q.reshape(B, Sq, Kh, G, hd)
+    # NOTE (§Perf pair 3): also pinning the k/v operands here makes XLA
+    # gather the cache TWICE (300 GiB measured) — the SPMD dot partitioner
+    # will not distribute a decode softmax on this einsum; the structural
+    # fix is an explicit shard_map flash-decode schedule (the TPU-side
+    # role of kernels/flash_attention.py), not a constraint nudge.
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = logits + bias[:, None, None, :, :]
+    if seq_axis is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, P(None, None, None, None, seq_axis))
+    probs = jax.nn.softmax(logits, axis=-1).astype(cdtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                     preferred_element_type=cdtype)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+# q-chunked attention: live memory O(chunk * Sk) instead of O(Sq * Sk).
+# This is the XLA-level analogue of the Pallas flash kernel (which is the
+# TPU-target implementation of the same hot spot, repro/kernels); prefill_32k
+# and train_4k would otherwise materialize petabyte logits.
+Q_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, kind: str, window, prefix_len,
+                  cap, cdtype, scale=None, chunk: int = Q_CHUNK,
+                  remat: bool = True, seq_axis=None):
+    """Same contract as _sdpa but masks are built per q-chunk from positions.
+    q: (B,Sq,H,hd); k,v: (B,Sk,Kh,hd'); q_pos: (B,Sq); k_pos: (B,Sk)."""
+    B, Sq, H, hd = q.shape
+    if Sq <= chunk:
+        bias = mask_bias(q_pos, k_pos, kind=kind, window=window,
+                         prefix_len=prefix_len)
+        return _sdpa(q, k, v, bias, cap, cdtype, scale=scale,
+                     seq_axis=seq_axis)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=0)
+    nch = q.shape[1] // chunk
+    qs = q.reshape(B, nch, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, nch, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        qc, pc = xs
+        bias = mask_bias(pc, k_pos, kind=kind, window=window,
+                         prefix_len=prefix_len)
+        out = _sdpa(qc, k, v, bias, cap, cdtype, scale=scale)
+        return carry, out
+
+    fn = jax.checkpoint(body) if remat else body
+    # unroll: keeps HLO cost analysis exact (while-loop bodies are counted
+    # once by XLA); memory stays bounded via the per-chunk checkpoint.
+    _, outs = jax.lax.scan(fn, (), (qs, ps), unroll=True)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nch * chunk, H, -1)
+    return out[:, :Sq] if pad else out
+
+
+def _cache_update(cache: KVCache, k_new, v_new, positions) -> KVCache:
+    """Write new entries at slot = pos % cache_len (ring buffer).
+
+    Sequences advance in LOCKSTEP (positions identical across the batch —
+    true for this serving design; ragged batches would use a paged cache).
+    That makes every write a contiguous dynamic_update_slice on the slot
+    axis, which GSPMD handles in place for donated buffers — a vmap-scatter
+    here materializes full cache copies (measured 100+ GiB at prefill_32k).
+    Ring wrap only ever happens in single-token decode (S == 1 <= C).
+
+    S > C (a prefill longer than a sliding-window ring, e.g. gemma2's 4096
+    local window under prefill_32k): only the trailing C tokens survive;
+    they replace the whole ring, rolled so the ``slot = pos % C`` invariant
+    holds for subsequent decode writes.
+    """
+    C = cache.pos.shape[1]
+    S = positions.shape[1]
+    if S > C:
+        k_new, v_new = k_new[:, -C:], v_new[:, -C:]
+        positions = positions[:, -C:]
+        shift = (positions[0, 0] % C).astype(jnp.int32)
+        roll = lambda a: jnp.roll(a, shift, axis=1)  # noqa: E731
+        return KVCache(roll(k_new), roll(v_new),
+                       roll(positions.astype(jnp.int32)))
+    start = (positions[0, 0] % C).astype(jnp.int32)
+
+    def upd(buf, new):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, start, axis=1)
+
+    return KVCache(upd(cache.k, k_new), upd(cache.v, v_new),
+                   upd(cache.pos, positions.astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# standard / GQA attention
+
+
+def attention(params, cfg: ModelConfig, x, positions, *,
+              cache: Optional[KVCache] = None,
+              window: Optional[int] = None,
+              mask_kind: str = "causal",
+              prefix_len: int = 0,
+              kv_input=None):
+    """Self- or cross-attention.  Returns (out, new_cache).
+
+    x: (B, S, d); positions: (B, S) absolute positions of x's tokens.
+    kv_input: encoder output for cross-attention (no cache, full mask).
+    """
+    a = cfg.attn
+    cd = cfg.cdtype
+    if a.mla is not None and kv_input is None:
+        return _mla_attention(params, cfg, x, positions, cache=cache,
+                              window=window, absorb=a.mla_absorb)
+    q = dense_apply(params["wq"], x, cd)                     # (B,S,H,hd)
+    kv_src = x if kv_input is None else kv_input
+    k = dense_apply(params["wk"], kv_src, cd)
+    v = dense_apply(params["wv"], kv_src, cd)
+    if a.qk_norm:
+        q = _rms(q, params["q_scale"])
+        k = _rms(k, params["k_scale"])
+    if kv_input is None and cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, a.rope_theta, a.rope_fraction)
+        k = apply_rope(k, positions, a.rope_theta, a.rope_fraction)
+
+    cap = a.attn_logit_softcap
+    if kv_input is not None:
+        Sk = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32),
+                                 (x.shape[0], Sk))
+        out = _sdpa_chunked(q, k, v, positions, k_pos, kind="full",
+                            window=None, prefix_len=0, cap=cap, cdtype=cd)
+        new_cache = cache
+    elif cache is not None:
+        new_cache = _cache_update(cache, k, v, positions)
+        if k.shape[1] > cache.pos.shape[1]:
+            # Prefill longer than the ring: early queries need keys the ring
+            # has already evicted — attend over the in-flight keys (the
+            # window mask enforces locality); the ring stores the tail.
+            out = _sdpa_chunked(q, k, v, positions, positions,
+                                kind=mask_kind, window=window,
+                                prefix_len=prefix_len, cap=cap, cdtype=cd)
+        else:
+            seq_axis = "data" if (a.seq_parallel and q.shape[1] == 1) else None
+            out = _sdpa_chunked(q, new_cache.k, new_cache.v, positions,
+                                new_cache.pos, kind=mask_kind, window=window,
+                                prefix_len=prefix_len, cap=cap, cdtype=cd,
+                                seq_axis=seq_axis)
+        cache = new_cache
+    else:
+        out = _sdpa_chunked(q, k, v, positions, positions, kind=mask_kind,
+                            window=window, prefix_len=prefix_len, cap=cap,
+                            cdtype=cd)
+        new_cache = None
+    out = out.reshape(*out.shape[:2], -1)
+    return dense_apply(params["wo"], out, cd), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+
+
+def _mla_qkv(params, cfg: ModelConfig, x, positions):
+    a, m, cd = cfg.attn, cfg.attn.mla, cfg.cdtype
+    cq = _rms(dense_apply(params["wq_a"], x, cd), params["q_norm"])
+    q = dense_apply(params["wq_b"], cq, cd)                  # (B,S,H,nope+rope)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, a.rope_theta)
+    kv = dense_apply(params["wkv_a"], x, cd)                 # (B,S,r+rope)
+    c_kv = _rms(kv[..., : m.kv_lora_rank], params["kv_norm"])
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions, a.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[..., 0, :]
+
+
+def _mla_attention(params, cfg: ModelConfig, x, positions, *,
+                   cache: Optional[KVCache], window: Optional[int],
+                   absorb: bool = False):
+    a, m, cd = cfg.attn, cfg.attn.mla, cfg.cdtype
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions)
+    if cache is not None:
+        in_flight = c_kv.shape[1] > cache.pos.shape[1]
+        cache = _cache_update(cache, c_kv, k_rope, positions)
+        if in_flight:   # prefill longer than the ring (see attention())
+            c_all, r_all, k_pos = c_kv, k_rope, positions
+        else:
+            c_all, r_all, k_pos = cache.k, cache.v, cache.pos
+    else:
+        c_all, r_all, k_pos = c_kv, k_rope, positions
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    if absorb:
+        # Absorbed path (decode): score in latent space, never expand K/V.
+        bias = mask_bias(positions, k_pos, kind="causal", window=window)
+        wkv = params["wkv_b"].astype(cd)                     # (r,H,nope+v)
+        wk = wkv[..., : m.qk_nope_head_dim]                  # (r,H,nope)
+        wv = wkv[..., m.qk_nope_head_dim:]                   # (r,H,v)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, wk)     # (B,S,H,r)
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_all,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhp,bsp->bhqs", q_rope, r_all,
+                            preferred_element_type=jnp.float32)
+        logits = (s_nope + s_rope) * scale + bias[:, None, :, :]
+        if a.seq_parallel and S == 1 and cache is not None:
+            from jax.sharding import PartitionSpec as P
+            logits = jax.lax.with_sharding_constraint(
+                logits, P(None, None, None, "data"))
+        probs = jax.nn.softmax(logits, axis=-1).astype(cd)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_all)   # (B,S,H,r)
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, wv)
+    else:
+        # Naive path: expand K/V from the latent (paper-faithful reference).
+        kv = dense_apply(params["wkv_b"], c_all, cd)         # (B,Sk,H,nope+v)
+        k_nope = kv[..., : m.qk_nope_head_dim]
+        v = kv[..., m.qk_nope_head_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                      (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _sdpa_chunked(q, k, v, positions, k_pos, kind="causal",
+                            window=window, prefix_len=0,
+                            cap=a.attn_logit_softcap, cdtype=cd, scale=scale)
+    out = out.reshape(B, S, a.n_heads * m.v_head_dim)
+    return dense_apply(params["wo"], out, cd), cache

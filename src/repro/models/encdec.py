@@ -1,0 +1,202 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, n_ctx, d_model) supplied by input_specs().
+Encoder: bidirectional self-attention, sinusoidal positions.  Decoder:
+causal self-attention + cross-attention, learned positions.  Cross K/V are
+computed once at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (KVCache, attn_init, attention, init_cache,
+                                    _sdpa_chunked, mask_bias)
+from repro.models.layers import (dense_apply, embedding_init, mlp_apply,
+                                 mlp_init, norm_apply, norm_init,
+                                 sinusoidal_positions)
+from repro.models.transformer import _unembed
+
+
+def encdec_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    enc_cfg = cfg.encoder
+    # enc layers take 2 keys, dec layers 3 (attn, cross, mlp), +2 embeddings
+    ks = jax.random.split(key, 2 * enc_cfg.n_layers + 3 * cfg.n_layers + 4)
+    ki = iter(range(len(ks)))
+    d, dt = cfg.d_model, cfg.pdtype
+
+    def enc_layer():
+        return {
+            "norm1": norm_init(cfg.norm, d, dt),
+            "attn": attn_init(ks[next(ki)], cfg),
+            "norm2": norm_init(cfg.norm, d, dt),
+            "mlp": mlp_init(ks[next(ki)], d, cfg.d_ff, cfg.gated_mlp, dt),
+        }
+
+    def dec_layer():
+        return {
+            "norm1": norm_init(cfg.norm, d, dt),
+            "attn": attn_init(ks[next(ki)], cfg),
+            "norm_x": norm_init(cfg.norm, d, dt),
+            "cross": attn_init(ks[next(ki)], cfg, cross=True),
+            "norm2": norm_init(cfg.norm, d, dt),
+            "mlp": mlp_init(ks[next(ki)], d, cfg.d_ff, cfg.gated_mlp, dt),
+        }
+
+    return {
+        "embed": embedding_init(ks[next(ki)], cfg.vocab_size, d, dt),
+        "pos_emb": embedding_init(ks[next(ki)], cfg.max_seq_len, d, dt),
+        "enc_layers": [enc_layer() for _ in range(enc_cfg.n_layers)],
+        "enc_final_norm": norm_init(cfg.norm, d, dt),
+        "layers": [dec_layer() for _ in range(cfg.n_layers)],
+        "final_norm": norm_init(cfg.norm, d, dt),
+    }
+
+
+def encode(params, cfg: ModelConfig, audio_embeds) -> jnp.ndarray:
+    """audio_embeds: (B, n_ctx, d) stub frontend output."""
+    cd = cfg.cdtype
+    x = audio_embeds.astype(cd)
+    pos = sinusoidal_positions(x.shape[1], cfg.d_model).astype(cd)
+    x = x + pos[None]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    for lp in params["enc_layers"]:
+        h = norm_apply(cfg.norm, lp["norm1"], x, cd)
+        y, _ = attention(lp["attn"], cfg, h, positions, mask_kind="full")
+        x = x + y
+        h = norm_apply(cfg.norm, lp["norm2"], x, cd)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, cd)
+    return norm_apply(cfg.norm, params["enc_final_norm"], x, cd)
+
+
+def _dec_block(lp, cfg: ModelConfig, x, positions, enc_out, cache, *,
+               window=None):
+    cd = cfg.cdtype
+    h = norm_apply(cfg.norm, lp["norm1"], x, cd)
+    y, cache = attention(lp["attn"], cfg, h, positions, cache=cache,
+                         window=window)
+    x = x + y
+    h = norm_apply(cfg.norm, lp["norm_x"], x, cd)
+    y, _ = attention(lp["cross"], cfg, h, positions, kv_input=enc_out)
+    x = x + y
+    h = norm_apply(cfg.norm, lp["norm2"], x, cd)
+    return x + mlp_apply(lp["mlp"], h, cfg.activation, cd), cache
+
+
+def _dec_embed(params, cfg, tokens, positions):
+    cd = cfg.cdtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = x + jnp.take(params["pos_emb"],
+                     jnp.clip(positions, 0, cfg.max_seq_len - 1),
+                     axis=0).astype(cd)
+    return x
+
+
+def decode_hidden(params, cfg: ModelConfig, tokens, enc_out) -> jnp.ndarray:
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _dec_embed(params, cfg, tokens, positions)
+    for lp in params["layers"]:
+        x, _ = _dec_block(lp, cfg, x, positions, enc_out, None)
+    return x
+
+
+def decode(params, cfg: ModelConfig, tokens, enc_out) -> jnp.ndarray:
+    return _unembed(params, cfg, decode_hidden(params, cfg, tokens, enc_out))
+
+
+def encdec_loss_fn(params, cfg: ModelConfig, batch):
+    from repro.models.transformer import _ce_from_hidden
+    enc_out = encode(params, cfg, batch["audio_embeds"])
+    hidden = decode_hidden(params, cfg, batch["tokens"], enc_out)
+    ce = _ce_from_hidden(params, cfg, hidden, batch["tokens"])
+    return ce, {"ce": ce, "aux": jnp.zeros(()), "loss": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving: cross-KV cached at prefill
+
+
+def encdec_make_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    enc_ctx = cfg.encoder.n_ctx
+    a = cfg.attn
+    caches = []
+    for _ in range(cfg.n_layers):
+        caches.append({
+            "self": init_cache(cfg, batch, cache_len, dtype),
+            "cross_k": jnp.zeros((batch, enc_ctx, a.n_kv_heads, a.head_dim), dtype),
+            "cross_v": jnp.zeros((batch, enc_ctx, a.n_kv_heads, a.head_dim), dtype),
+        })
+    return caches
+
+
+def _cross_kv(lp, cfg, enc_out):
+    cd = cfg.cdtype
+    k = dense_apply(lp["cross"]["wk"], enc_out, cd)
+    v = dense_apply(lp["cross"]["wv"], enc_out, cd)
+    return k, v
+
+
+def _cross_attend(lp, cfg, h, ck, cv):
+    cd = cfg.cdtype
+    q = dense_apply(lp["cross"]["wq"], h, cd)
+    B, Sq = h.shape[:2]
+    q_pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    k_pos = jnp.broadcast_to(jnp.arange(ck.shape[1], dtype=jnp.int32),
+                             (B, ck.shape[1]))
+    out = _sdpa_chunked(q, ck, cv, q_pos, k_pos, kind="full", window=None,
+                        prefix_len=0, cap=cfg.attn.attn_logit_softcap,
+                        cdtype=cd)
+    out = out.reshape(*out.shape[:2], -1)
+    return dense_apply(lp["cross"]["wo"], out, cd)
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch, caches, *,
+                   long_context: bool = False):
+    """Encode audio, fill cross-KV caches, run prompt tokens through decoder."""
+    enc_out = encode(params, cfg, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _dec_embed(params, cfg, tokens, positions)
+    cd = cfg.cdtype
+    new_caches = []
+    window = cfg.attn.long_context_window if long_context else None
+    for lp, c in zip(params["layers"], caches):
+        ck, cv = _cross_kv(lp, cfg, enc_out)
+        h = norm_apply(cfg.norm, lp["norm1"], x, cd)
+        y, sc = attention(lp["attn"], cfg, h, positions, cache=c["self"],
+                          window=window)
+        x = x + y
+        h = norm_apply(cfg.norm, lp["norm_x"], x, cd)
+        x = x + _cross_attend(lp, cfg, h, ck, cv)
+        h = norm_apply(cfg.norm, lp["norm2"], x, cd)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, cd)
+        new_caches.append({"self": sc, "cross_k": ck, "cross_v": cv})
+    return _unembed(params, cfg, x[:, -1:]), new_caches
+
+
+def encdec_decode_step(params, cfg: ModelConfig, token, caches, pos, *,
+                       long_context: bool = False):
+    positions = pos[:, None].astype(jnp.int32)
+    x = _dec_embed(params, cfg, token, positions)
+    cd = cfg.cdtype
+    new_caches = []
+    window = cfg.attn.long_context_window if long_context else None
+    for lp, c in zip(params["layers"], caches):
+        h = norm_apply(cfg.norm, lp["norm1"], x, cd)
+        y, sc = attention(lp["attn"], cfg, h, positions, cache=c["self"],
+                          window=window)
+        x = x + y
+        h = norm_apply(cfg.norm, lp["norm_x"], x, cd)
+        x = x + _cross_attend(lp, cfg, h, c["cross_k"], c["cross_v"])
+        h = norm_apply(cfg.norm, lp["norm2"], x, cd)
+        x = x + mlp_apply(lp["mlp"], h, cfg.activation, cd)
+        new_caches.append({"self": sc, "cross_k": c["cross_k"],
+                           "cross_v": c["cross_v"]})
+    return _unembed(params, cfg, x), new_caches

@@ -1,0 +1,152 @@
+"""Shared building blocks: norms, dense layers, activations, RoPE, MLPs.
+
+All modules are functional: ``*_init(key, ...) -> params`` (nested dicts) and
+``*_apply(params, x, ...) -> y``.  Params are stored in ``param_dtype`` and
+cast to ``compute_dtype`` at use; norm/softmax statistics run in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def _normal(key, shape, dtype, stddev):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out, dtype, *, scale: float = 1.0):
+    """Truncated-normal-ish fan-in init; d_out may be a tuple (fused heads)."""
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    return _normal(key, shape, dtype, scale / math.sqrt(d_in))
+
+
+def dense_apply(w, x, cdtype):
+    """x @ w where w may have >2 dims: (d_in, a, b, ...) contracts x's last dim."""
+    w = w.astype(cdtype)
+    x = x.astype(cdtype)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=cdtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def norm_init(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.zeros((dim,), dtype)}   # gemma-style (1+scale)
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_apply(kind: str, params, x, cdtype):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        y = y * (1.0 + params["scale"].astype(jnp.float32))
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(cdtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def activation(kind: str, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "geglu":          # the gated branch uses gelu
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":          # squared ReLU (Nemotron / Primer)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str, cdtype):
+    up = dense_apply(params["up"], x, cdtype)
+    if "gate" in params:
+        gate = activation(act, dense_apply(params["gate"], x, cdtype))
+        h = gate * up
+    else:
+        h = activation(act, up)
+    return dense_apply(params["down"], h, cdtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / positions
+
+
+def embedding_init(key, vocab: int, dim: int, dtype):
+    return _normal(key, (vocab, dim), dtype, 1.0 / math.sqrt(dim))
+
+
+def embedding_lookup(table, tokens, cdtype):
+    return jnp.take(table, tokens, axis=0).astype(cdtype)
+
+
+def sinusoidal_positions(n_ctx: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(n_ctx)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def rope_frequencies(head_dim: int, theta: float, fraction: float = 1.0):
+    rot_dim = int(head_dim * fraction)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_frequencies(head_dim, theta, fraction)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., s, rot/2)
+    sin = jnp.sin(ang)[..., None, :]                              # (..., s, 1, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., : rot_dim // 2], xr[..., rot_dim // 2:]
+    r1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin)
+    r2 = (x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin)
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+    return jnp.concatenate([out, xp], axis=-1) if rot_dim < head_dim else out
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts: top-k routing with GShard-style capacity dispatch.
+
+Token groups of ``group_size`` bound the dispatch one-hot to
+(G, gs, E, C) with C = ceil(gs * top_k * capacity_factor / E) — the memory
+knob that keeps the einsum-based dispatch shardable (groups over the data
+axes, experts over the model axis; GSPMD turns the dispatch/combine einsums
+into the expert-parallel all-to-all).  Over-capacity tokens are dropped, as
+in Switch/GShard; the aux load-balance loss discourages that.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation, dense_apply, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.pdtype
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": (s * jax.random.normal(ks[0], (d, m.n_experts), jnp.float32)
+                   ).astype(dt),
+        "w_gate": (s * jax.random.normal(ks[1], (m.n_experts, d, m.d_expert),
+                                         jnp.float32)).astype(dt),
+        "w_up": (s * jax.random.normal(ks[2], (m.n_experts, d, m.d_expert),
+                                       jnp.float32)).astype(dt),
+        "w_down": ((1.0 / math.sqrt(m.d_expert)) *
+                   jax.random.normal(ks[3], (m.n_experts, m.d_expert, d),
+                                     jnp.float32)).astype(dt),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.n_shared_experts * m.d_expert,
+                               cfg.gated_mlp, dt)
+    return p
+
+
+def _dispatch_tensors(gates, idx, n_experts: int, capacity: int, cdtype):
+    """GShard top-k dispatch.  gates/idx: (G, gs, k).
+
+    Returns dispatch (G,gs,E,C) in cdtype and combine (G,gs,E,C) in float32.
+    Position of a token within its expert buffer accumulates across the k
+    routing slots so that slot-1 choices queue behind slot-0 choices.
+    """
+    G, gs, k = idx.shape
+    base_count = jnp.zeros((G, n_experts), jnp.int32)
+    dispatch = jnp.zeros((G, gs, n_experts, capacity), jnp.bool_)
+    combine = jnp.zeros((G, gs, n_experts, capacity), jnp.float32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(idx[..., j], n_experts, dtype=jnp.int32)
+        prio = jnp.cumsum(onehot, axis=1) - onehot              # tokens ahead
+        pos = prio + base_count[:, None, :]                     # (G,gs,E)
+        keep = (onehot > 0) & (pos < capacity)
+        pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
+        sel = keep.astype(jnp.float32)[..., None] * pos_oh      # (G,gs,E,C)
+        dispatch = dispatch | (sel > 0)
+        combine = combine + gates[..., j][..., None, None].astype(jnp.float32) * sel
+        base_count = base_count + jnp.sum(onehot, axis=1)
+    return dispatch.astype(cdtype), combine
+
+
+def moe_apply(params, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m, cd = cfg.moe, cfg.cdtype
+    B, S, d = x.shape
+    n_tok = B * S
+    gs = min(m.group_size, n_tok)
+    pad = (-n_tok) % gs
+    xt = x.reshape(n_tok, d)
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, d), xt.dtype)], axis=0)
+    G = xt.shape[0] // gs
+    xg = xt.reshape(G, gs, d)
+
+    logits = dense_apply(params["router"], xg, jnp.float32)     # (G,gs,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, math.ceil(gs * m.top_k * m.capacity_factor / m.n_experts))
+    dispatch, combine = _dispatch_tensors(gates, idx, m.n_experts, capacity, cd)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg,
+                    preferred_element_type=cd)                  # (G,E,C,d)
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cd),
+                    preferred_element_type=cd)
+    if cfg.gated_mlp:
+        gate = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cd),
+                          preferred_element_type=cd)
+        h = activation(cfg.activation, gate) * up
+    else:
+        h = activation(cfg.activation, up)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(cd),
+                    preferred_element_type=cd)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(cd), ye,
+                   preferred_element_type=cd)
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:n_tok]
+    y = y.reshape(B, S, d)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    frac_routed = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / m.top_k                                   # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(frac_routed * mean_prob) * m.router_aux_coef
+
+    if m.n_shared_experts:
+        y = y + mlp_apply(params["shared"], x, cfg.activation, cd)
+    return y, aux

@@ -1,0 +1,222 @@
+"""Scan-over-layers execution: O(1)-size HLO for deep stacks + remat.
+
+The per-layer params list is regrouped into a repeating pattern block of
+`period` sub-layers (period = attention layer_pattern length, the hybrid
+attn_every cycle, or 1), stacked across groups, and driven by lax.scan.
+Required for the multi-pod dry-run: a 96-layer python loop over a
+512-device SPMD graph is intractable to compile; the scanned form traces
+one pattern block (DESIGN.md §7).
+
+`forward` here is numerically identical to transformer.forward (tests
+assert allclose); `remat=True` wraps the scan body in jax.checkpoint —
+the activation-checkpointing knob used by the launcher for train_4k.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (_block_apply, _embed_inputs, _unembed)
+
+
+def layer_grouping(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_prefix, period, n_groups): layers n_prefix..L scan in pattern
+    blocks of `period` sub-layers."""
+    n_pre = 0
+    if cfg.moe is not None and cfg.moe.n_dense_layers:
+        n_pre = cfg.moe.n_dense_layers
+    if cfg.family == "hybrid":
+        period = cfg.hybrid.attn_every
+    elif cfg.attn is not None:
+        period = len(cfg.attn.layer_pattern)
+    else:
+        period = 1
+    rest = cfg.n_layers - n_pre
+    while rest % period:      # fall back to a period that divides
+        period -= 1
+    return n_pre, period, rest // period
+
+
+def stack_layer_params(params: Dict[str, Any], cfg: ModelConfig
+                       ) -> Dict[str, Any]:
+    """Regroup params["layers"] for scanning.  Returns a new params dict with
+    "prefix_layers" (list) and "scan_layers" (tuple of `period` pytrees, each
+    leaf stacked to leading dim n_groups)."""
+    n_pre, period, groups = layer_grouping(cfg)
+    layers = params["layers"]
+    prefix = layers[:n_pre]
+    rest = layers[n_pre:]
+    slots = []
+    for j in range(period):
+        per_group = [rest[g * period + j] for g in range(groups)]
+        slots.append(jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *per_group))
+    out = {k: v for k, v in params.items() if k != "layers"}
+    out["prefix_layers"] = prefix
+    out["scan_layers"] = tuple(slots)
+    return out
+
+
+def unstack_layer_params(params: Dict[str, Any], cfg: ModelConfig
+                         ) -> Dict[str, Any]:
+    """Inverse of stack_layer_params."""
+    n_pre, period, groups = layer_grouping(cfg)
+    layers = list(params["prefix_layers"])
+    slots = params["scan_layers"]
+    for g in range(groups):
+        for j in range(period):
+            layers.append(jax.tree_util.tree_map(lambda l: l[g], slots[j]))
+    out = {k: v for k, v in params.items()
+           if k not in ("prefix_layers", "scan_layers")}
+    out["layers"] = layers
+    return out
+
+
+def stack_caches(caches: List[Any], cfg: ModelConfig) -> Dict[str, Any]:
+    n_pre, period, groups = layer_grouping(cfg)
+    prefix = caches[:n_pre]
+    rest = caches[n_pre:]
+    slots = []
+    for j in range(period):
+        per_group = [rest[g * period + j] for g in range(groups)]
+        slots.append(jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *per_group))
+    return {"prefix": prefix, "scan": tuple(slots)}
+
+
+def _make_body(cfg: ModelConfig, shared, n_pre: int, period: int, *,
+               positions, prefix_len: int, decode: bool, long_context: bool,
+               with_cache: bool):
+    """scan body over one pattern block of `period` sub-layers."""
+
+    def body(x, slices):
+        if with_cache:
+            param_slices, cache_slices = slices
+        else:
+            param_slices, cache_slices = slices, (None,) * period
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for j in range(period):
+            i = n_pre + j            # representative index (kind is periodic)
+            sh = shared if (shared is not None
+                            and cfg.layer_kind(i) == "attn") else None
+            x, aux, c = _block_apply(
+                param_slices[j], sh, cfg, i, x, positions,
+                cache=cache_slices[j], decode=decode, prefix_len=prefix_len,
+                long_context=long_context)
+            aux_total = aux_total + aux
+            new_caches.append(c)
+        out = (x, aux_total)
+        return out, tuple(new_caches) if with_cache else None
+
+    return body
+
+
+def forward_hidden(params: Dict[str, Any], cfg: ModelConfig,
+                   batch: Dict[str, jnp.ndarray], *, remat: bool = False
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scanned stack forward up to (excluding) final norm/unembed."""
+    n_pre, period, groups = layer_grouping(cfg)
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, lp in enumerate(params["prefix_layers"]):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") \
+            else None
+        x, aux, _ = _block_apply(lp, sh, cfg, i, x, positions,
+                                 prefix_len=prefix_len)
+        aux_total = aux_total + aux
+
+    body = _make_body(cfg, shared, n_pre, period, positions=positions,
+                      prefix_len=prefix_len, decode=False,
+                      long_context=False, with_cache=False)
+
+    def scan_fn(carry, slices):
+        x, aux = carry
+        (x, aux_step), _ = body(x, slices)
+        return (x, aux + aux_step), None
+
+    fn = jax.checkpoint(scan_fn) if remat else scan_fn
+    (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total),
+                                     params["scan_layers"])
+    return x, aux_total
+
+
+def forward(params: Dict[str, Any], cfg: ModelConfig,
+            batch: Dict[str, jnp.ndarray], *, remat: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scanned training forward.  Returns (logits, aux_loss)."""
+    x, aux_total = forward_hidden(params, cfg, batch, remat=remat)
+    return _unembed(params, cfg, x), aux_total
+
+
+def loss_fn(params: Dict[str, Any], cfg: ModelConfig,
+            batch: Dict[str, jnp.ndarray], *, remat: bool = False):
+    """Scanned next-token CE loss (mirrors transformer.loss_fn)."""
+    from repro.models.transformer import _ce_from_hidden
+    hidden, aux = forward_hidden(params, cfg, batch, remat=remat)
+    ce = _ce_from_hidden(params, cfg, hidden, batch["tokens"])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch, caches: Dict[str, Any], *,
+            long_context: bool = False):
+    """Scanned prefill.  `caches` from stack_caches."""
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    shared = params.get("shared_attn")
+    n_pre, period, groups = layer_grouping(cfg)
+    new_prefix = []
+    for i, (lp, c) in enumerate(zip(params["prefix_layers"], caches["prefix"])):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") \
+            else None
+        x, _, c2 = _block_apply(lp, sh, cfg, i, x, positions, cache=c,
+                                prefix_len=prefix_len,
+                                long_context=long_context)
+        new_prefix.append(c2)
+
+    body = _make_body(cfg, shared, n_pre, period, positions=positions,
+                      prefix_len=prefix_len, decode=False,
+                      long_context=long_context, with_cache=True)
+
+    def scan_fn(carry, slices):
+        (x2, aux), new_c = body(carry[0], slices)
+        return (x2, carry[1]), new_c
+
+    (x, _), new_scan = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)),
+        (params["scan_layers"], caches["scan"]))
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, {"prefix": new_prefix, "scan": new_scan}
+
+
+def decode_step(params, cfg: ModelConfig, token, caches: Dict[str, Any],
+                pos, *, long_context: bool = False):
+    """Scanned single-token decode."""
+    positions = pos[:, None].astype(jnp.int32)
+    x, positions, _ = _embed_inputs(params, cfg, {"tokens": token}, positions)
+    shared = params.get("shared_attn")
+    n_pre, period, groups = layer_grouping(cfg)
+    new_prefix = []
+    for i, (lp, c) in enumerate(zip(params["prefix_layers"], caches["prefix"])):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") \
+            else None
+        x, _, c2 = _block_apply(lp, sh, cfg, i, x, positions, cache=c,
+                                decode=True, long_context=long_context)
+        new_prefix.append(c2)
+
+    body = _make_body(cfg, shared, n_pre, period, positions=positions,
+                      prefix_len=0, decode=True, long_context=long_context,
+                      with_cache=True)
+
+    def scan_fn(carry, slices):
+        (x2, aux), new_c = body(carry[0], slices)
+        return (x2, carry[1]), new_c
+
+    (x, _), new_scan = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)),
+        (params["scan_layers"], caches["scan"]))
+    return _unembed(params, cfg, x), {"prefix": new_prefix, "scan": new_scan}

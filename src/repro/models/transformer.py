@@ -1,0 +1,295 @@
+"""Decoder-stack assembly for dense / moe / ssm / hybrid / vlm families.
+
+The whisper enc-dec backbone reuses these blocks from ``encdec.py``.  All
+entry points are functional and jit/pjit-friendly:
+
+    params                    = init_params(key, cfg)
+    logits, aux               = forward(params, cfg, batch)
+    loss, metrics             = loss_fn(params, cfg, batch)
+    caches                    = make_caches(cfg, batch, cache_len, dtype)
+    logits, caches            = prefill(params, cfg, tokens, caches)
+    logits, caches            = decode_step(params, cfg, token, caches, pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache, attn_init, attention, init_cache
+from repro.models.layers import (dense_apply, dense_init, embedding_init,
+                                 embedding_lookup, mlp_apply, mlp_init,
+                                 norm_apply, norm_init, softcap)
+from repro.models.moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def _layer_init(key, cfg: ModelConfig, i: int) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    kind = cfg.layer_kind(i)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.norm, cfg.d_model, cfg.pdtype)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg)
+        return p
+    p["norm2"] = norm_init(cfg.norm, cfg.d_model, cfg.pdtype)
+    if cfg.family == "hybrid" and cfg.hybrid.shared_block:
+        return p  # attn/mlp weights live in params["shared_attn"]
+    p["attn"] = attn_init(ks[0], cfg)
+    if cfg.is_moe_layer(i):
+        p["moe"] = moe_init(ks[1], cfg)
+    elif cfg.moe is not None:   # deepseek dense-first layers
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.moe.dense_d_ff,
+                            cfg.gated_mlp, cfg.pdtype)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                            cfg.pdtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_init
+        return encdec_init(key, cfg)
+    ks = jax.random.split(key, cfg.n_layers + 6)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "layers": [_layer_init(ks[1 + i], cfg, i) for i in range(cfg.n_layers)],
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[-1], cfg.d_model, cfg.vocab_size,
+                                  cfg.pdtype)
+    if cfg.family == "hybrid" and cfg.hybrid.shared_block:
+        p["shared_attn"] = {
+            "attn": attn_init(ks[-2], cfg),
+            "mlp": mlp_init(ks[-3], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                            cfg.pdtype),
+        }
+    if cfg.family == "vlm":
+        p["vision_proj"] = dense_init(ks[-4], cfg.vision.embed_dim,
+                                      cfg.d_model, cfg.pdtype)
+    if cfg.pos_embedding == "learned":
+        p["pos_emb"] = embedding_init(ks[-5], cfg.max_seq_len, cfg.d_model,
+                                      cfg.pdtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+
+def make_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype, *,
+                long_context: bool = False) -> List[Any]:
+    """Per-layer decode caches: KVCache for attention, SSMCache for SSM.
+
+    With ``long_context`` every attention layer's cache is bounded by the
+    sliding window (ring buffer) — the sub-quadratic long_500k adaptation.
+    """
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_make_caches
+        w = cfg.attn.long_context_window if long_context else cache_len
+        return encdec_make_caches(cfg, batch, min(cache_len, w), dtype)
+    caches: List[Any] = []
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == "ssm":
+            caches.append(ssm_mod.init_ssm_cache(cfg, batch, dtype))
+        else:
+            w = cfg.attn_window(i)
+            if long_context:
+                w = min(w, cfg.attn.long_context_window) if w \
+                    else cfg.attn.long_context_window
+            clen = min(cache_len, w) if w is not None else cache_len
+            caches.append(init_cache(cfg, batch, clen, dtype))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# blocks
+
+
+def _block_apply(params, shared, cfg: ModelConfig, i: int, x, positions, *,
+                 cache=None, decode=False, prefix_len=0,
+                 long_context=False) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    """Pre-norm residual block.  Returns (x, aux_loss, new_cache)."""
+    cd = cfg.cdtype
+    aux = jnp.zeros((), jnp.float32)
+    kind = cfg.layer_kind(i)
+    h = norm_apply(cfg.norm, params["norm1"], x, cd)
+    if kind == "ssm":
+        y, new_cache = ssm_mod.ssm_apply(params["ssm"], cfg, h, cache,
+                                         decode=decode)
+        return x + y, aux, new_cache
+    attn_params = shared["attn"] if shared is not None else params["attn"]
+    window = cfg.attn_window(i)
+    if long_context:
+        window = min(window, cfg.attn.long_context_window) if window \
+            else cfg.attn.long_context_window
+    y, new_cache = attention(attn_params, cfg, h, positions, cache=cache,
+                             window=window, prefix_len=prefix_len)
+    x = x + y
+    h = norm_apply(cfg.norm, params["norm2"], x, cd)
+    if "moe" in params:
+        y, aux = moe_apply(params["moe"], cfg, h)
+    else:
+        mlp_params = shared["mlp"] if shared is not None else params["mlp"]
+        y = mlp_apply(mlp_params, h, cfg.activation, cd)
+    return x + y, aux, new_cache
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                  positions=None):
+    """Token (+vision) embedding.  Returns (x, positions, prefix_len)."""
+    cd = cfg.cdtype
+    tokens = batch["tokens"]
+    x = embedding_lookup(params["embed"], tokens, cd)
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+    prefix_len = 0
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        v = dense_apply(params["vision_proj"], batch["vision_embeds"].astype(cd), cd)
+        x = jnp.concatenate([v, x], axis=1)
+        prefix_len = v.shape[1]
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos_embedding == "learned":
+        x = x + jnp.take(params["pos_emb"], positions, axis=0).astype(cd)
+    return x, positions, prefix_len
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    cd = cfg.cdtype
+    x = norm_apply(cfg.norm, params["final_norm"], x, cd)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cd),
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = dense_apply(params["lm_head"], x, jnp.float32)
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+# sequence-chunked cross entropy: full (B,S,V) logits are never live — the
+# vocab matmul + log-softmax runs per chunk under remat (V=256k at S=4k
+# would otherwise dominate train-step memory).
+CE_CHUNK = 512
+
+
+def chunked_ce(params, cfg: ModelConfig, hidden, targets, *,
+               chunk: int = CE_CHUNK):
+    """hidden: (B, S, d) pre-final-norm; targets: (B, S) next tokens aligned
+    with hidden positions (already shifted).  Returns mean CE."""
+    B, S, _ = hidden.shape
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nch = hidden.shape[1] // chunk
+    hs = hidden.reshape(B, nch, chunk, -1).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, nch, chunk).transpose(1, 0, 2)
+    S_pad = hidden.shape[1]
+
+    def body(carry, xs):
+        h, t, idx = xs
+        logits = _unembed(params, cfg, h)
+        lps = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lps, t[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        # mask padded tail positions
+        pos = idx * chunk + jnp.arange(chunk)[None, :]
+        nll = jnp.where(pos < S, nll, 0.0)
+        return carry + jnp.sum(nll), None
+
+    idxs = jnp.arange(nch)
+    total, _ = jax.lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                            (hs, ts, idxs), unroll=True)
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stack forward up to (but excluding) final norm/unembed."""
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, lp in enumerate(params["layers"]):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") else None
+        x, aux, _ = _block_apply(lp, sh, cfg, i, x, positions,
+                                 prefix_len=prefix_len)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence training forward.  Returns (logits, aux_loss)."""
+    x, aux_total = forward_hidden(params, cfg, batch)
+    return _unembed(params, cfg, x), aux_total
+
+
+def _ce_from_hidden(params, cfg: ModelConfig, hidden, tokens):
+    """Next-token CE over the text positions of `hidden` (vision prefix
+    dropped), sequence-chunked so full logits never materialize."""
+    n_text = tokens.shape[1]
+    h = hidden[:, -n_text:][:, :-1]
+    targets = tokens[:, 1:]
+    return chunked_ce(params, cfg, h, targets)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross-entropy (+ MoE aux).  Loss only over text tokens."""
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_loss_fn
+        return encdec_loss_fn(params, cfg, batch)
+    hidden, aux = forward_hidden(params, cfg, batch)
+    ce = _ce_from_hidden(params, cfg, hidden, batch["tokens"])
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            caches: List[Any], *, long_context: bool = False):
+    """Process a full prompt, filling caches.  Returns (last_logits, caches)."""
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_prefill
+        return encdec_prefill(params, cfg, batch, caches)
+    x, positions, prefix_len = _embed_inputs(params, cfg, batch)
+    shared = params.get("shared_attn")
+    new_caches = []
+    for i, lp in enumerate(params["layers"]):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") else None
+        x, _, c = _block_apply(lp, sh, cfg, i, x, positions, cache=caches[i],
+                               prefix_len=prefix_len, long_context=long_context)
+        new_caches.append(c)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ModelConfig, token, caches: List[Any], pos, *,
+                long_context: bool = False):
+    """One decode step.  token: (B,1) int32; pos: (B,) absolute position.
+    Returns (logits (B,1,V), new_caches)."""
+    if cfg.family == "audio":
+        from repro.models.encdec import encdec_decode_step
+        return encdec_decode_step(params, cfg, token, caches, pos)
+    positions = pos[:, None].astype(jnp.int32)
+    x, positions, _ = _embed_inputs(params, cfg, {"tokens": token}, positions)
+    shared = params.get("shared_attn")
+    new_caches = []
+    for i, lp in enumerate(params["layers"]):
+        sh = shared if (shared is not None and cfg.layer_kind(i) == "attn") else None
+        x, _, c = _block_apply(lp, sh, cfg, i, x, positions, cache=caches[i],
+                               decode=True, long_context=long_context)
+        new_caches.append(c)
+    return _unembed(params, cfg, x), new_caches

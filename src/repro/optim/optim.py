@@ -1,0 +1,151 @@
+"""Minimal functional optimizers (no optax offline): SGD-momentum, AdamW.
+
+    opt = sgd(lr=0.1, momentum=0.9)          # the paper's optimizer
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Learning rates may be floats or schedules (callables step -> lr); state
+carries the step counter.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]   # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr: LR, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def _zeros_like_f32(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: LR, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    """state_dtype: None = float32 momentum; "param" = match the param dtype
+    (halves optimizer memory for bf16 giants — launch uses it for FSDP archs)."""
+    def init(params):
+        if not momentum:
+            mu = None
+        elif state_dtype == "param":
+            mu = jax.tree_util.tree_map(jnp.zeros_like, params)
+        else:
+            mu = _zeros_like_f32(params)
+        return {"mu": mu, "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+
+        def eff_grad(g, p):
+            g = g.astype(jnp.float32)
+            if weight_decay and p is not None:
+                g = g + weight_decay * p.astype(jnp.float32)
+            return g
+
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g, p: (momentum * m.astype(jnp.float32)
+                                 + eff_grad(g, p)).astype(m.dtype),
+                state["mu"], grads, params)
+            if nesterov:
+                updates = jax.tree_util.tree_map(
+                    lambda m, g, p: -lr_t * (eff_grad(g, p)
+                                             + momentum * m.astype(jnp.float32)),
+                    mu, grads, params)
+            else:
+                updates = jax.tree_util.tree_map(
+                    lambda m: -lr_t * m.astype(jnp.float32), mu)
+        else:
+            mu = None
+            updates = jax.tree_util.tree_map(
+                lambda g, p: -lr_t * eff_grad(g, p), grads, params)
+        return updates, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: LR, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        updates = jax.tree_util.tree_map(
+            lambda mm, vv, p: -lr_t * (
+                (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+                + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+
+
+def constant(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, total_steps: int, final_frac: float = 0.1
+                 ) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(math.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    cos = cosine_decay(peak, max(total_steps - warmup_steps, 1), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        wu = peak * s / max(warmup_steps, 1)
+        return jnp.where(s < warmup_steps, wu, cos(step - warmup_steps))
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (RooflineTerms, model_flops,
+                                     parse_collective_bytes, roofline)
+
+__all__ = ["RooflineTerms", "model_flops", "parse_collective_bytes",
+           "roofline"]

@@ -1,0 +1,127 @@
+"""Roofline: three terms per (arch × shape × mesh) from dry-run artifacts.
+
+    compute    = HLO_FLOPs  / (chips × PEAK_FLOPS_BF16)
+    memory     = HLO_bytes  / (chips × HBM_BW)
+    collective = coll_bytes / (chips × ICI_BW)
+
+cost_analysis() on a GSPMD-partitioned executable reports the PER-DEVICE
+program, so terms divide by per-chip rates directly; `chips` normalization
+is kept explicit in the artifact for the global view.  Collective bytes are
+not in cost_analysis — they are parsed out of the optimized HLO: the sum of
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, active_param_count, param_count
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9\[\],\s{}:#]+?)\s*(?:\))?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind OUTPUT bytes of every collective op (per device).
+
+    '-start' variants counted once ('-done' carries no new transfer).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "-done(" in s:
+            continue
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                hit = kind
+                break
+        if hit is None:
+            continue
+        eq = s.find("=")
+        if eq < 0:
+            continue
+        lhs_rhs = s[eq + 1:]
+        op_idx = lhs_rhs.find(hit)
+        out[hit] += _shape_bytes(lhs_rhs[:op_idx])
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_global: float
+    useful_flops_ratio: float
+    peak_memory_per_device: Optional[float] = None
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape_kind: str, seq_len: int,
+                global_batch: int) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (train), 2·N_active·tokens (serve)."""
+    n = active_param_count(cfg)
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * global_batch          # decode: one token per sequence
+
+
+def roofline(arch: str, shape: str, mesh_name: str, chips: int,
+             flops_dev: float, bytes_dev: float, coll_dev: float,
+             mflops: float, peak_mem: Optional[float] = None) -> RooflineTerms:
+    t_c = flops_dev / PEAK_FLOPS_BF16
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops_dev * chips
+    ratio = mflops / total_flops if total_flops else 0.0
+    return RooflineTerms(arch, shape, mesh_name, chips, flops_dev, bytes_dev,
+                         coll_dev, t_c, t_m, t_x, bottleneck, mflops, ratio,
+                         peak_mem)

@@ -1,0 +1,9 @@
+import os
+
+# keep CPU tests deterministic and single-device (the dry-run, and only the
+# dry-run, forces 512 host devices in its own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

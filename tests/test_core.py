@@ -1,0 +1,162 @@
+"""Unit + property tests for the paper's core: similarity, mixing, streams,
+aggregation, theory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# similarity
+
+
+def test_delta_matrix_matches_direct():
+    g = jax.random.normal(KEY, (7, 300))
+    d = C.delta_matrix(g)
+    direct = jnp.sum((g[:, None, :] - g[None, :, :]) ** 2, axis=-1)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(direct),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_similarity_round_shapes():
+    def loss(p, data):
+        pred = data["x"] @ p["w"]
+        return jnp.mean((pred - data["y"]) ** 2)
+
+    params = {"w": jnp.ones((5,))}
+    ks = jax.random.split(KEY, 6)
+    datasets = [{"x": jax.random.normal(ks[i], (20 + i, 5)),
+                 "y": jax.random.normal(ks[i + 3], (20 + i,))}
+                for i in range(3)]
+    delta, sigma2, n = C.similarity_round(loss, params, datasets)
+    assert delta.shape == (3, 3) and sigma2.shape == (3,)
+    np.testing.assert_allclose(np.asarray(n), [20, 21, 22])
+    assert float(jnp.max(jnp.abs(jnp.diag(delta)))) < 1e-5
+    assert (np.asarray(sigma2) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# mixing (Eq. 6) properties
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_mixing_matrix_row_stochastic(m, seed):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (m, 50))
+    delta = C.delta_matrix(g)
+    sigma2 = jax.random.uniform(key, (m,), minval=0.1, maxval=2.0)
+    n = jax.random.randint(key, (m,), 10, 1000).astype(jnp.float32)
+    w = C.mixing_matrix(delta, sigma2, n)
+    np.testing.assert_allclose(np.asarray(jnp.sum(w, 1)), np.ones(m),
+                               rtol=1e-5)
+    assert (np.asarray(w) >= 0).all()
+
+
+def test_mixing_homogeneous_equals_fedavg():
+    """Paper: homogeneous clients => UCFL degenerates to FedAvg (exactly)."""
+    m = 6
+    n = jnp.full((m,), 100.0)
+    w = C.mixing_matrix(jnp.zeros((m, m)), jnp.ones((m,)), n)
+    np.testing.assert_allclose(np.asarray(w), np.full((m, m), 1 / m),
+                               atol=1e-7)
+    params = {"a": jax.random.normal(KEY, (m, 3, 4))}
+    np.testing.assert_allclose(
+        np.asarray(C.user_centric_aggregate(params, w)["a"]),
+        np.asarray(C.fedavg_aggregate(params, n)["a"]), atol=1e-6)
+
+
+def test_mixing_infinite_data_goes_local():
+    """Paper: n_i -> inf degenerates to local learning for client i."""
+    m = 5
+    g = jax.random.normal(KEY, (m, 64))
+    delta = C.delta_matrix(g)
+    n = jnp.ones((m,)).at[2].set(1e12)
+    w = C.mixing_matrix(delta, jnp.ones((m,)), n)
+    assert float(w[2, 2]) > 0.999
+
+
+def test_dissimilar_clients_downweighted():
+    g = jnp.zeros((4, 32)).at[3].set(100.0)   # client 3 is an outlier
+    delta = C.delta_matrix(g)
+    w = C.mixing_matrix(delta, jnp.ones((4,)), jnp.full((4,), 10.0))
+    assert float(w[0, 3]) < float(w[0, 1]) * 1e-3
+
+
+# ---------------------------------------------------------------------------
+# streams
+
+
+def test_kmeans_recovers_clusters():
+    key = jax.random.PRNGKey(1)
+    c0 = jax.random.normal(key, (6, 8)) * 0.05 + 5
+    c1 = jax.random.normal(key, (6, 8)) * 0.05 - 5
+    rows = jnp.concatenate([c0, c1])
+    plan = C.kmeans(rows, 2, key=key)
+    a = np.asarray(plan.assignment)
+    assert len(set(a[:6])) == 1 and len(set(a[6:])) == 1 and a[0] != a[6]
+    s = C.silhouette_score(rows, plan.assignment, 2)
+    assert float(s) > 0.9
+
+
+def test_stream_aggregate_group_broadcast():
+    """All clients in a cluster receive the SAME model (group broadcast)."""
+    m = 8
+    params = {"a": jax.random.normal(KEY, (m, 10))}
+    w = C.mixing_matrix(C.delta_matrix(jax.random.normal(KEY, (m, 20))),
+                        jnp.ones((m,)), jnp.full((m,), 10.0))
+    plan = C.kmeans(w, 3, key=KEY)
+    agg = C.stream_aggregate(params, plan)
+    a = np.asarray(plan.assignment)
+    out = np.asarray(agg["a"])
+    for i in range(m):
+        for j in range(m):
+            if a[i] == a[j]:
+                np.testing.assert_allclose(out[i], out[j])
+    assert C.downlink_models(plan) == 3
+    assert C.downlink_models(w) == m
+
+
+def test_kmeans_centroids_row_stochastic():
+    w = jax.nn.softmax(jax.random.normal(KEY, (10, 10)), axis=1)
+    plan = C.kmeans(w, 4, key=KEY)
+    np.testing.assert_allclose(np.asarray(jnp.sum(plan.centroids, 1)),
+                               np.ones(4), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# theory
+
+
+def test_theorem1_bound_tradeoff():
+    """Uniform weights win when distributions match; local wins when they
+    clash — the bound exposes the paper's collaboration trade-off."""
+    m = 4
+    n = jnp.full((m,), 20.0)
+    uniform = jnp.full((m, m), 1 / m)
+    local = jnp.eye(m)
+    no_disc = jnp.zeros((m, m))
+    big_disc = 10.0 * (1 - jnp.eye(m))
+    b_u = C.theorem1_bound(uniform, n, no_disc)
+    b_l = C.theorem1_bound(local, n, no_disc)
+    assert (np.asarray(b_u) < np.asarray(b_l)).all()
+    b_u2 = C.theorem1_bound(uniform, n, big_disc)
+    b_l2 = C.theorem1_bound(local, n, big_disc)
+    assert (np.asarray(b_l2) < np.asarray(b_u2)).all()
+
+
+def test_bound_minimizing_weights_beat_heuristic_on_bound():
+    m = 6
+    key = jax.random.PRNGKey(3)
+    disc = jnp.abs(jax.random.normal(key, (m, m)))
+    disc = (disc + disc.T) * (1 - jnp.eye(m)) * 0.05
+    n = jax.random.randint(key, (m,), 10, 200).astype(jnp.float32)
+    w_h = C.mixing_matrix(disc, jnp.ones((m,)), n)
+    w_star, b_star = C.bound_minimizing_weights(n, disc, steps=300)
+    b_h = C.theorem1_bound(w_h, n, disc)
+    assert float(jnp.sum(b_star)) <= float(jnp.sum(b_h)) + 1e-3

@@ -1,0 +1,130 @@
+"""Per-kernel allclose vs the pure-jnp oracles (interpret mode), with
+hypothesis sweeps over shapes/dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    x = jax.random.normal(key, shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mixing_aggregate
+
+
+@settings(max_examples=12, deadline=None)
+@given(k=st.integers(1, 9), m=st.integers(2, 20),
+       d=st.sampled_from([64, 777, 2048, 4096 + 13]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_mixing_aggregate_matches_ref(k, m, d, dtype):
+    dt = jnp.dtype(dtype)
+    w = jax.random.uniform(KEY, (k, m), jnp.float32)
+    w = w / jnp.sum(w, 1, keepdims=True)
+    theta = _rand(jax.random.PRNGKey(k * 31 + m), (m, d), dt)
+    got = ops.mixing_aggregate(w, theta)
+    want = ref.mixing_aggregate_ref(w, theta)
+    tol = 1e-5 if dtype == "float32" else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mixing_aggregate_identity():
+    m, d = 8, 512
+    theta = _rand(KEY, (m, d))
+    got = ops.mixing_aggregate(jnp.eye(m), theta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(theta), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_sqdist
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 24), d=st.sampled_from([128, 1000, 2048, 5000]))
+def test_pairwise_sqdist_matches_ref(m, d):
+    g = _rand(jax.random.PRNGKey(m * 7 + d), (m, d))
+    got = ops.pairwise_sqdist(g)
+    want = ref.pairwise_sqdist_ref(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_pairwise_sqdist_properties():
+    g = _rand(KEY, (10, 333))
+    d = np.asarray(ops.pairwise_sqdist(g))
+    assert np.allclose(np.diag(d), 0.0, atol=1e-3)
+    assert np.allclose(d, d.T, atol=1e-4)
+    assert (d >= -1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    kh=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([64, 128, 200]),
+    extra_k=st.sampled_from([0, 64]),
+    hd=st.sampled_from([32, 64]),
+    window=st.sampled_from([None, 64]),
+    softcap=st.sampled_from([None, 30.0]),
+)
+def test_flash_attention_matches_ref(b, kh, g, sq, extra_k, hd, window,
+                                     softcap):
+    h = kh * g
+    sk = sq + extra_k
+    key = jax.random.PRNGKey(b * 97 + h * 13 + sq)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (b, h, sq, hd), scale=0.5)
+    k = _rand(ks[1], (b, kh, sk, hd), scale=0.5)
+    v = _rand(ks[2], (b, kh, sk, hd))
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              softcap=softcap, qblk=64, kblk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal_and_bf16():
+    b, h, s, hd = 1, 2, 96, 64
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, h, s, hd), jnp.bfloat16, 0.5)
+    k = _rand(ks[1], (b, h, s + 32, hd), jnp.bfloat16, 0.5)
+    v = _rand(ks[2], (b, h, s + 32, hd), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=False, qblk=64, kblk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """The kernel agrees with the model-layer chunked SDPA path."""
+    from repro.models.attention import _sdpa_chunked
+    b, h, s, hd = 1, 4, 128, 32
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, h, s, hd), scale=0.5)
+    k = _rand(ks[1], (b, h, s, hd), scale=0.5)
+    v = _rand(ks[2], (b, h, s, hd))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    got = ops.flash_attention(q, k, v, causal=True, qblk=64, kblk=64)
+    want = _sdpa_chunked(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), pos, pos, kind="causal",
+                         window=None, prefix_len=0, cap=None,
+                         cdtype=jnp.float32, chunk=64)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.transpose(0, 2, 1, 3)),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,103 @@
+"""Optimizer + checkpoint substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (restore, restore_train_state, save,
+                              save_train_state)
+from repro.optim import (adamw, apply_updates, clip_by_global_norm, constant,
+                         cosine_decay, global_norm, sgd, warmup_cosine)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quad_problem():
+    target = jax.random.normal(KEY, (10,))
+    params = {"w": jnp.zeros((10,))}
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    return params, loss
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9),
+    lambda: sgd(0.05, momentum=0.9, nesterov=True),
+    lambda: adamw(0.1, weight_decay=0.0)])
+def test_optimizers_converge_on_quadratic(make_opt):
+    params, loss = _quad_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-3
+
+
+def test_sgd_momentum_matches_manual():
+    opt = sgd(0.1, momentum=0.9)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.array([2.0])}
+    upd, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-0.2])   # mu = g
+    upd, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-0.38])  # mu = .9*2+2
+
+
+def test_sgd_param_dtype_state():
+    opt = sgd(0.1, momentum=0.9, state_dtype="param")
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedules():
+    assert float(constant(0.5)(jnp.asarray(10))) == 0.5
+    cd = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(cd(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cd(jnp.asarray(100))) == pytest.approx(0.1)
+    wc = warmup_cosine(1.0, 10, 110)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(6.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jax.random.normal(KEY, (3, 4)),
+                       "b": jnp.arange(5, dtype=jnp.int32)},
+            "meta": {"name": "x", "n": 3, "f": 1.5, "flag": True,
+                     "none": None},
+            "list": [jnp.ones((2,), jnp.bfloat16), "s"]}
+    p = str(tmp_path / "ckpt.msgpack")
+    save(p, tree)
+    back = restore(p)
+    np.testing.assert_allclose(np.asarray(back["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.int32
+    assert back["list"][0].dtype == jnp.bfloat16
+    assert back["meta"] == tree["meta"]
+
+
+def test_train_state_roundtrip(tmp_path):
+    params = {"w": jax.random.normal(KEY, (6,))}
+    opt = sgd(0.1, momentum=0.9)
+    state = opt.init(params)
+    p = str(tmp_path / "state.msgpack")
+    save_train_state(p, 7, params, state, extra={"arch": "x"})
+    step, params2, state2, extra = restore_train_state(p)
+    assert step == 7 and extra == {"arch": "x"}
+    np.testing.assert_allclose(np.asarray(params2["w"]),
+                               np.asarray(params["w"]))
+    # restored state is usable
+    g = {"w": jnp.ones((6,))}
+    upd, _ = opt.update(g, state2, params2)
+    assert upd["w"].shape == (6,)

@@ -1,0 +1,80 @@
+"""Scan-over-layers: exact equivalence with the python-loop stack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import scan as SC
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = ["stablelm-3b", "gemma2-27b", "olmoe-1b-7b", "deepseek-v3-671b",
+         "zamba2-2.7b", "mamba2-780m", "paligemma-3b"]
+
+
+def _setup(arch, B=2, S=16):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            KEY, (B, cfg.vision.n_tokens, cfg.vision.embed_dim))
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scan_loss_equals_loop(arch):
+    cfg, params, batch = _setup(arch)
+    l1, _ = T.loss_fn(params, cfg, batch)
+    sp = SC.stack_layer_params(params, cfg)
+    l2, _ = SC.loss_fn(sp, cfg, batch)
+    l3, _ = SC.loss_fn(sp, cfg, batch, remat=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    np.testing.assert_allclose(float(l1), float(l3), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "zamba2-2.7b"])
+def test_scan_grads_equal_loop(arch):
+    cfg, params, batch = _setup(arch)
+    g1 = jax.grad(lambda p: T.loss_fn(p, cfg, batch)[0])(params)
+    sp = SC.stack_layer_params(params, cfg)
+    g2 = jax.grad(lambda p: SC.loss_fn(p, cfg, batch, remat=True)[0])(sp)
+    g2u = SC.unstack_layer_params(g2, cfg)
+    flat1 = jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(g1)])
+    flat2 = jnp.concatenate([x.ravel() for x in jax.tree_util.tree_leaves(g2u)])
+    np.testing.assert_allclose(np.asarray(flat1), np.asarray(flat2),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_stack_roundtrip_identity():
+    cfg, params, _ = _setup("gemma2-27b")
+    sp = SC.stack_layer_params(params, cfg)
+    rt = SC.unstack_layer_params(sp, cfg)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(rt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "mamba2-780m", "zamba2-2.7b"])
+def test_scan_decode_equals_loop(arch):
+    cfg, params, batch = _setup(arch, B=2, S=12)
+    B, S = batch["tokens"].shape
+    caches = T.make_caches(cfg, B, 32, jnp.float32)
+    _, c1 = T.prefill(params, cfg, {"tokens": batch["tokens"][:, :-1]}, caches)
+    d1, _ = T.decode_step(params, cfg, batch["tokens"][:, -1:], c1,
+                          jnp.full((B,), S - 1, jnp.int32))
+    sp = SC.stack_layer_params(params, cfg)
+    sc = SC.stack_caches(caches, cfg)
+    _, c2 = SC.prefill(sp, cfg, {"tokens": batch["tokens"][:, :-1]}, sc)
+    d2, _ = SC.decode_step(sp, cfg, batch["tokens"][:, -1:], c2,
+                           jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_layer_grouping_covers_all_layers():
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        n_pre, period, groups = SC.layer_grouping(cfg)
+        assert n_pre + period * groups == cfg.n_layers

@@ -1,0 +1,161 @@
+"""End-to-end system behaviour tests for the paper's technique.
+
+These assert the paper's qualitative claims on miniature versions of its
+experiments (DESIGN.md §8), plus framework-level integration invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.data.federated import scenario_concept_shift, scenario_label_shift
+from repro.fl import FLConfig, run_federated
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import (build_train_step, init_stacked_params,
+                                make_optimizer)
+from repro.configs import get_smoke_config
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# paper claim: UCFL with uniform data == FedAvg exactly (aggregation level)
+
+
+def test_ucfl_equals_fedavg_under_homogeneity():
+    m = 8
+    params = {"w": jax.random.normal(KEY, (m, 32, 4)),
+              "b": jax.random.normal(KEY, (m, 7))}
+    n = jnp.full((m,), 64.0)
+    w = C.mixing_matrix(jnp.zeros((m, m)), jnp.ones((m,)), n)
+    a1 = C.user_centric_aggregate(params, w)
+    a2 = C.fedavg_aggregate(params, n)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(a1[k]), np.asarray(a2[k]),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paper claim: under concept shift, local > fedavg; personalization recovers
+
+
+@pytest.mark.slow
+def test_concept_shift_orderings():
+    """Paper claims under concept shift, plus the Eq.6 fallback property.
+
+    At this reduced scale (n_i≈187, K=5 ⇒ large Eq.7 σ²) the similarity
+    kernel temperature exceeds the Δ separation and W degenerates toward
+    FedAvg weights — the method's documented fallback (EXPERIMENTS.md
+    §Paper findings).  So the robust assertions are: conflicting tasks
+    hurt FedAvg, the oracle recovers, and UCFL is never *worse* than
+    FedAvg (it interpolates between FedAvg and local as signal/noise
+    allows)."""
+    fed = scenario_concept_shift(KEY, n=1500, m=8, n_groups=2)
+    fl = FLConfig(rounds=12, local_steps=5, batch_size=32, eval_every=11)
+    acc = {alg: run_federated(alg, fed, fl=fl).mean_acc[-1]
+           for alg in ["fedavg", "local", "ucfl_k2", "oracle"]}
+    assert acc["local"] > acc["fedavg"]        # conflicting tasks
+    assert acc["ucfl_k2"] >= acc["fedavg"] - 5e-3   # never worse (fallback)
+    assert acc["oracle"] > acc["fedavg"]
+
+
+@pytest.mark.slow
+def test_label_shift_collaboration_helps():
+    fed = scenario_label_shift(KEY, n=1200, m=8)
+    fl = FLConfig(rounds=12, local_steps=5, batch_size=32, eval_every=11)
+    acc = {alg: run_federated(alg, fed, fl=fl).mean_acc[-1]
+           for alg in ["fedavg", "local", "ucfl"]}
+    assert acc["fedavg"] > acc["local"]        # moderate heterogeneity
+    assert acc["ucfl"] >= acc["local"]
+
+
+# ---------------------------------------------------------------------------
+# mesh-level train_step: schedules agree, mixing semantics correct
+
+
+def _mesh_setup(m=4):
+    cfg = get_smoke_config("stablelm-3b")
+    mesh = make_host_mesh()
+    params = init_stacked_params(KEY, cfg, m)
+    opt = make_optimizer(cfg)
+    opt_state = opt.init(params)
+    batch = {"tokens": jax.random.randint(KEY, (m, 2, 32), 0,
+                                          cfg.vocab_size)}
+    return cfg, mesh, params, opt_state, batch
+
+
+def test_train_step_fedavg_synchronizes_clients():
+    m = 4
+    cfg, mesh, params, opt_state, batch = _mesh_setup(m)
+    w = jnp.full((1, m), 1.0 / m)
+    assignment = jnp.zeros((m,), jnp.int32)
+    step = build_train_step(cfg, mesh, remat=False)
+    params, _, metrics = jax.jit(step)(params, opt_state, batch, w, assignment)
+    # after a FedAvg round every client holds the same model
+    for leaf in jax.tree_util.tree_leaves(params):
+        ref = np.asarray(leaf[0])
+        for i in range(1, m):
+            np.testing.assert_allclose(np.asarray(leaf[i]), ref, atol=1e-6)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_train_step_local_keeps_clients_distinct():
+    m = 4
+    cfg, mesh, params, opt_state, batch = _mesh_setup(m)
+    w = jnp.eye(m)
+    assignment = jnp.arange(m, dtype=jnp.int32)
+    step = build_train_step(cfg, mesh, remat=False)
+    params, _, _ = jax.jit(step)(params, opt_state, batch, w, assignment)
+    emb = np.asarray(params["embed"])
+    assert not np.allclose(emb[0], emb[1])
+
+
+def test_train_step_streams_group_broadcast():
+    m = 4
+    cfg, mesh, params, opt_state, batch = _mesh_setup(m)
+    w = jnp.array([[0.5, 0.5, 0.0, 0.0], [0.0, 0.0, 0.5, 0.5]])
+    assignment = jnp.array([0, 0, 1, 1], jnp.int32)
+    step = build_train_step(cfg, mesh, remat=False)
+    params, _, _ = jax.jit(step)(params, opt_state, batch, w, assignment)
+    emb = np.asarray(params["embed"], np.float32)
+    np.testing.assert_allclose(emb[0], emb[1], atol=1e-6)
+    np.testing.assert_allclose(emb[2], emb[3], atol=1e-6)
+    assert not np.allclose(emb[0], emb[2])
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """microbatch=K gradient accumulation == one full-batch step (the
+    HBM-fit knob for the giants must not change semantics)."""
+    m = 4
+    cfg, mesh, params, opt_state, batch = _mesh_setup(m)
+    w = jnp.full((1, m), 1.0 / m)
+    assignment = jnp.zeros((m,), jnp.int32)
+    full = build_train_step(cfg, mesh, remat=False)
+    micro = build_train_step(cfg, mesh, remat=False, microbatch=2)
+    p1, _, m1 = jax.jit(full)(params, opt_state, batch, w, assignment)
+    p2, _, m2 = jax.jit(micro)(params, opt_state, batch, w, assignment)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_gspmd_and_shard_map_schedules_agree():
+    """The explicit shard_map collective schedules compute the same round."""
+    m = 4
+    cfg, mesh, params, opt_state, batch = _mesh_setup(m)
+    mesh1 = make_host_mesh()   # 1 device: shard_map degenerate but exercised
+    w = jnp.array([[0.7, 0.1, 0.1, 0.1], [0.1, 0.1, 0.1, 0.7]])
+    assignment = jnp.array([0, 0, 1, 1], jnp.int32)
+    outs = {}
+    for schedule in ["gspmd", "shard_map_streams"]:
+        step = build_train_step(cfg, mesh1, schedule=schedule, remat=False)
+        with mesh1:
+            p, _, _ = jax.jit(step)(params, opt_state, batch, w, assignment)
+        outs[schedule] = np.asarray(p["embed"], np.float32)
+    np.testing.assert_allclose(outs["gspmd"], outs["shard_map_streams"],
+                               rtol=2e-2, atol=2e-2)
