@@ -18,7 +18,8 @@ import jax
 import numpy as np
 
 from repro.data.federated import SCENARIOS
-from repro.fl import FLConfig, SYSTEMS, run_federated
+from repro.fl import (FLConfig, SYSTEMS, UniformFraction, get_strategy,
+                      run_federated)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
@@ -57,17 +58,21 @@ def _system_time_axes(comm_log, eval_rounds, m: int) -> dict:
 
 
 def run_scenario(name: str, params: dict, fl: FLConfig, trials: int,
-                 algs=None) -> dict:
+                 algs=None, participation: float = 1.0) -> dict:
     algs = algs or ALGS
+    sampler = (UniformFraction(participation) if participation != 1.0
+               else None)
     out = {"scenario": name, "params": params, "rounds": fl.rounds,
-           "algorithms": {}}
+           "participation": participation, "algorithms": {}}
     for alg in algs:
+        strategy = get_strategy(alg)
         t0 = time.time()
         runs = []
         for t in range(trials):
             key = jax.random.PRNGKey(100 + t)
             fed = SCENARIOS[name](key, seed=t, **params)
-            h = run_federated(alg, fed, fl=fl, seed=t)
+            h = run_federated(strategy=strategy, fed=fed, fl=fl, seed=t,
+                              sampler=sampler)
             runs.append(h)
         out["algorithms"][alg] = {
             "rounds": runs[0].rounds,
@@ -117,6 +122,8 @@ def main(argv=None):
     p.add_argument("--quick", action="store_true")
     p.add_argument("--trials", type=int, default=1)
     p.add_argument("--skip-comm", action="store_true")
+    p.add_argument("--participation", type=float, default=1.0,
+                   help="uniform fraction of clients sampled per round")
     args = p.parse_args(argv)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     params, fl = scenario_params(args.quick)
@@ -125,7 +132,8 @@ def main(argv=None):
     results = {}
     for name in SCENARIOS:
         print(f"== scenario {name} ==")
-        results[name] = run_scenario(name, params[name], fl, args.trials)
+        results[name] = run_scenario(name, params[name], fl, args.trials,
+                                     participation=args.participation)
         with open(os.path.join(RESULTS_DIR, f"paper_{tag}.json"), "w") as f:
             json.dump(results, f, indent=1)
     if not args.skip_comm:

@@ -116,6 +116,11 @@ def paper_section() -> str:
     out = ["Synthetic-data reruns of the paper's three scenarios "
            "(DESIGN.md §1: orderings are the claim, not absolute digits). "
            "m=20 users, 30 rounds, 2 trials (paper: 5).", ""]
+    fracs = {s.get("participation", 1.0) for s in res.values()
+             if isinstance(s, dict) and "algorithms" in s}
+    if fracs - {1.0}:
+        out += [f"Client participation per round: uniform fraction "
+                f"{sorted(fracs)} (DESIGN.md §6 sampler).", ""]
     scen_names = {
         "emnist_label_shift": "EMNIST label shift (Dirichlet 0.4)",
         "emnist_covariate_shift": "EMNIST label+covariate shift (4 rotations)",

@@ -60,14 +60,19 @@ def bench_kernels(rows):
 def bench_fl_round(rows):
     """Steady-state FL round latency (paper's simulation engine)."""
     from repro.data.federated import scenario_label_shift
-    from repro.fl import FLConfig, run_federated
+    from repro.fl import FLConfig, UniformFraction, get_strategy, run_federated
     key = jax.random.PRNGKey(0)
     fed = scenario_label_shift(key, n=800, m=8)
     fl = FLConfig(rounds=2, local_steps=5, batch_size=32, eval_every=10)
     t0 = time.time()
-    run_federated("fedavg", fed, fl=fl)
+    run_federated(strategy=get_strategy("fedavg"), fed=fed, fl=fl)
     rows.append(("fl.round.fedavg_m8", (time.time() - t0) / 2 * 1e6,
                  "incl_compile"))
+    t0 = time.time()
+    run_federated(strategy=get_strategy("fedavg"), fed=fed, fl=fl,
+                  sampler=UniformFraction(0.5))
+    rows.append(("fl.round.fedavg_m8_frac50", (time.time() - t0) / 2 * 1e6,
+                 "participation=0.5"))
 
 
 def bench_paper_tables(rows, full: bool):

@@ -2,6 +2,10 @@
 of personalized streams, print accuracy AND wall-clock time under the three
 system models, plus the silhouette guidance for picking m_t.
 
+Each sweep point is a registered Strategy (DESIGN.md §4); the per-round
+downlink cost comes from the run's own `History.comm` record rather than a
+hand-maintained table.
+
     PYTHONPATH=src python examples/comm_tradeoff.py
 """
 import jax
@@ -9,7 +13,7 @@ import numpy as np
 
 from repro.core import kmeans, mixing_matrix, silhouette_score
 from repro.data.federated import scenario_covariate_shift
-from repro.fl import FLConfig, SYSTEMS, downlink_cost, run_federated
+from repro.fl import FLConfig, SYSTEMS, get_strategy, run_federated
 
 
 def main():
@@ -20,19 +24,19 @@ def main():
 
     print("streams  mean_acc  worst_acc   t/round (slow-UL, fast-UL, wired)")
     hist = {}
-    for alg, k in [("fedavg", 1), ("ucfl_k2", 2), ("ucfl_k4", 4),
-                   ("ucfl", m)]:
-        h = run_federated(alg, fed, fl=fl)
-        hist[alg] = h
-        times = []
-        for s in SYSTEMS.values():
-            ns, nu = downlink_cost(alg.split("_k")[0], m, n_streams=k)
-            times.append(s.round_time(m, n_streams=ns, n_unicasts=nu))
+    for spec, k in [("fedavg", 1), ("ucfl_k2", 2), ("ucfl_k4", 4),
+                    ("ucfl", m)]:
+        h = run_federated(strategy=get_strategy(spec), fed=fed, fl=fl)
+        hist[spec] = h
+        cost = h.comm[-1]
+        times = [s.round_time(m, n_streams=cost.n_streams,
+                              n_unicasts=cost.n_unicasts)
+                 for s in SYSTEMS.values()]
         print(f"{k:7d}  {h.mean_acc[-1]:.3f}     {h.worst_acc[-1]:.3f}     "
               + "  ".join(f"{t:5.1f}" for t in times))
 
     # silhouette-guided m_t (paper: silhouette over the w_i rows)
-    w = hist["ucfl"].extra["mixing_matrix"]
+    w = hist["ucfl"].extras.mixing_matrix
     print("\nsilhouette score by k (pick the max):")
     for k in (2, 3, 4, 6):
         plan = kmeans(jax.numpy.asarray(w), k, key=key)

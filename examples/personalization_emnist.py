@@ -1,6 +1,8 @@
 """Paper experiment walk-through: EMNIST-like covariate+label shift, the
-scenario of Fig.2b — run FedAvg, UCFL (k streams), and the oracle, then
-print the accuracy-vs-rounds table and worst-user comparison (Table I).
+scenario of Fig.2b — run FedAvg, UCFL (k streams), and the oracle via the
+Strategy API, then print the accuracy-vs-rounds table and worst-user
+comparison (Table I).  `--participation 0.5` samples half the clients per
+round (DESIGN.md §6).
 
     PYTHONPATH=src python examples/personalization_emnist.py [--rounds 24]
 """
@@ -10,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.data.federated import scenario_covariate_shift
-from repro.fl import FLConfig, run_federated
+from repro.fl import FLConfig, UniformFraction, get_strategy, run_federated
 
 
 def main():
@@ -18,23 +20,27 @@ def main():
     p.add_argument("--rounds", type=int, default=18)
     p.add_argument("--clients", type=int, default=12)
     p.add_argument("--samples", type=int, default=2400)
+    p.add_argument("--participation", type=float, default=1.0)
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
     fed = scenario_covariate_shift(key, n=args.samples, m=args.clients)
     fl = FLConfig(rounds=args.rounds, local_steps=5, batch_size=32,
                   eval_every=max(args.rounds // 6, 1))
+    sampler = (UniformFraction(args.participation)
+               if args.participation != 1.0 else None)
 
     results = {}
-    for alg in ["local", "fedavg", "ucfl_k4", "oracle"]:
-        h = run_federated(alg, fed, fl=fl)
-        results[alg] = h
-        print(f"{alg:10s} rounds={h.rounds} mean_acc="
+    for spec in ["local", "fedavg", "ucfl_k4", "oracle"]:
+        h = run_federated(strategy=get_strategy(spec), fed=fed, fl=fl,
+                          sampler=sampler)
+        results[spec] = h
+        print(f"{spec:10s} rounds={h.rounds} mean_acc="
               f"{np.round(h.mean_acc, 3).tolist()}")
 
     print("\nTable-I-style worst-user accuracy:")
-    for alg, h in results.items():
-        print(f"  {alg:10s} mean={h.mean_acc[-1]:.3f} "
+    for spec, h in results.items():
+        print(f"  {spec:10s} mean={h.mean_acc[-1]:.3f} "
               f"worst={h.worst_acc[-1]:.3f}")
     uc, oa = results["ucfl_k4"], results["oracle"]
     print(f"\nUCFL k=4 reaches {uc.mean_acc[-1]/max(oa.mean_acc[-1],1e-9):.0%}"

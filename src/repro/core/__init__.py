@@ -10,7 +10,8 @@ theory      — Theorem 1 bound + bound-minimizing weights (beyond paper)
 from repro.core.aggregation import (downlink_models, fedavg_aggregate,
                                     mix_pytree, stream_aggregate,
                                     user_centric_aggregate)
-from repro.core.mixing import effective_samples, fedavg_weights, mixing_matrix
+from repro.core.mixing import (effective_samples, fedavg_weights,
+                               groupwise_weights, mixing_matrix)
 from repro.core.similarity import (client_gradients, delta_matrix,
                                    flatten_pytree, full_gradient,
                                    sigma_estimates, similarity_round)
@@ -21,7 +22,8 @@ from repro.core.theory import bound_minimizing_weights, theorem1_bound
 __all__ = [
     "downlink_models", "fedavg_aggregate", "mix_pytree", "stream_aggregate",
     "user_centric_aggregate", "effective_samples", "fedavg_weights",
-    "mixing_matrix", "client_gradients", "delta_matrix", "flatten_pytree",
+    "groupwise_weights", "mixing_matrix", "client_gradients", "delta_matrix",
+    "flatten_pytree",
     "full_gradient", "sigma_estimates", "similarity_round", "StreamPlan",
     "kmeans", "select_num_streams", "silhouette_score",
     "bound_minimizing_weights", "theorem1_bound",

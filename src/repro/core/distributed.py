@@ -29,6 +29,13 @@ try:  # jax>=0.4.35 exposes shard_map at jax.shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
 
+import inspect
+
+# the replication-check kwarg was renamed check_rep -> check_vma in newer jax
+_CHECK_KW = ("check_vma" if "check_vma" in
+             inspect.signature(shard_map).parameters else "check_rep")
+_NO_CHECK = {_CHECK_KW: False}
+
 
 def _leaf_specs(params: Any, inner_spec_fn) -> Any:
     return jax.tree_util.tree_map(lambda l: inner_spec_fn(l), params)
@@ -56,7 +63,7 @@ def mix_unicast_shard_map(mesh, axis: str, params: Any, w: jnp.ndarray) -> Any:
     pspec = jax.tree_util.tree_map(
         lambda l: P(axis, *([None] * (l.ndim - 1))), params)
     fn = shard_map(body, mesh=mesh, in_specs=(P(), pspec),
-                   out_specs=pspec, check_vma=False)
+                   out_specs=pspec, **_NO_CHECK)
     return fn(w, params)
 
 
@@ -87,7 +94,7 @@ def mix_streams_shard_map(mesh, axis: str, params: Any,
     pspec = jax.tree_util.tree_map(
         lambda l: P(axis, *([None] * (l.ndim - 1))), params)
     fn = shard_map(body, mesh=mesh, in_specs=(P(), P(), pspec),
-                   out_specs=pspec, check_vma=False)
+                   out_specs=pspec, **_NO_CHECK)
     return fn(centroids, assignment, params)
 
 

@@ -10,6 +10,7 @@ Properties the paper leans on (and our tests assert):
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def mixing_matrix(delta: jnp.ndarray, sigma2: jnp.ndarray,
@@ -29,6 +30,21 @@ def fedavg_weights(n: jnp.ndarray) -> jnp.ndarray:
     """The FedAvg special case: every row is n / Σn."""
     w = n.astype(jnp.float32) / jnp.sum(n)
     return jnp.broadcast_to(w[None, :], (n.shape[0], n.shape[0]))
+
+
+def groupwise_weights(n: jnp.ndarray, group: np.ndarray) -> jnp.ndarray:
+    """Block-diagonal FedAvg rule: row i averages over i's group, weighted
+    by dataset size (the oracle baseline and CFL's per-cluster FedAvg)."""
+    group = np.asarray(group)
+    m = len(group)
+    wmat = np.zeros((m, m), np.float32)
+    nn = np.asarray(n)
+    for g in np.unique(group):
+        idx = np.where(group == g)[0]
+        wg = nn[idx] / nn[idx].sum()
+        for i in idx:
+            wmat[i, idx] = wg
+    return jnp.asarray(wmat)
 
 
 def effective_samples(w: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:

@@ -1,30 +1,33 @@
-"""Federated learning simulator: vmap-over-clients round engine.
+"""Federated learning round engine: vmap-over-clients, strategy-driven.
 
-Runs the paper's algorithms on stacked client data (`FederatedData`):
+The engine owns the generic round mechanics — client sampling, vmapped
+local SGD, evaluation, the analytic clock — and delegates every
+algorithm-specific decision to a `Strategy` (repro.fl.strategies):
 
-    fedavg | local | oracle | ucfl (full personalization) | ucfl_k<k> |
-    cfl (Sattler et al.) | fedfomo (Zhang et al.)
+    run_federated("ucfl_k3", fed)                          # spec string
+    run_federated(strategy=get_strategy("ucfl_k3"), fed=fed)  # instance
+
+Registered strategies: fedavg | local | oracle | ucfl | ucfl_k<k> |
+cfl (Sattler et al.) | fedfomo (Zhang et al.); see DESIGN.md §4–§5.
 
 Client placement here is the host `vmap` mode of DESIGN.md §3 (paper-scale
 m=20..100, LeNet).  The mesh-placed variants live in repro/launch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import (fedavg_weights, kmeans, mixing_matrix,
-                        silhouette_score, stream_aggregate,
-                        user_centric_aggregate)
-from repro.core.similarity import flatten_pytree
-from repro.core.streams import StreamPlan
 from repro.data.federated import FederatedData
-from repro.fl.comm import SystemModel, downlink_cost
+from repro.fl.comm import SystemModel
+from repro.fl.stats import full_client_gradients, sigma2_estimates  # noqa: F401 (re-exported for back-compat)
+from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
+                                 Strategy, StrategyExtras, get_strategy)
 from repro.models import lenet
 from repro.optim import apply_updates, sgd
 
@@ -77,34 +80,11 @@ def _stack(params, m: int):
         lambda l: jnp.broadcast_to(l[None], (m,) + l.shape).copy(), params)
 
 
-def full_client_gradients(loss_fn, params, fed: FederatedData) -> jnp.ndarray:
-    """ĝ_i over each client's (padded) dataset; (m, D) float32."""
-
-    def one(x_i, y_i):
-        g, _ = jax.grad(loss_fn, has_aux=True)(params, {"x": x_i, "y": y_i})
-        return flatten_pytree(g)
-
-    return jax.vmap(one)(fed.x, fed.y)
-
-
-def sigma2_estimates(loss_fn, params, fed: FederatedData, k_batches: int
-                     ) -> jnp.ndarray:
-    """Eq. 7 on contiguous K-way splits of each client's data."""
-    n_max = fed.x.shape[1]
-    bs = n_max // k_batches
-
-    def one(x_i, y_i):
-        gfull, _ = jax.grad(loss_fn, has_aux=True)(
-            params, {"x": x_i, "y": y_i})
-        gfull = flatten_pytree(gfull)
-        devs = []
-        for k in range(k_batches):
-            sl = {"x": x_i[k * bs:(k + 1) * bs], "y": y_i[k * bs:(k + 1) * bs]}
-            gk, _ = jax.grad(loss_fn, has_aux=True)(params, sl)
-            devs.append(jnp.sum((flatten_pytree(gk) - gfull) ** 2))
-        return jnp.mean(jnp.stack(devs))
-
-    return jax.vmap(one)(fed.x, fed.y)
+def _where_clients(mask: jnp.ndarray, new, old):
+    """Per-client select over stacked pytrees (leading dim m)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                               a, b), new, old)
 
 
 @functools.lru_cache(maxsize=8)
@@ -129,20 +109,42 @@ class History:
     mean_acc: List[float] = field(default_factory=list)
     worst_acc: List[float] = field(default_factory=list)
     time: List[float] = field(default_factory=list)
+    comm: List[CommCost] = field(default_factory=list)
+    extras: Optional[StrategyExtras] = None
+    # legacy mapping view, filled by the engine from `comm` + `extras`;
+    # a real dict so pre-redesign callers that annotate it keep working
     extra: Dict[str, Any] = field(default_factory=dict)
 
 
-def run_federated(algorithm: str, fed: FederatedData, *,
-                  fl: FLConfig = FLConfig(),
+def run_federated(algorithm: Union[str, Strategy, None] = None,
+                  fed: Optional[FederatedData] = None, *,
+                  strategy: Optional[Strategy] = None,
+                  sampler: Optional[ClientSampler] = None,
+                  fl: Optional[FLConfig] = None,
                   model_init: Optional[Callable] = None,
                   loss_fn: Callable = lenet.loss_fn,
                   acc_fn: Callable = lenet.accuracy,
                   system: Optional[SystemModel] = None,
                   seed: int = 0) -> History:
-    """Run one algorithm on one scenario; returns accuracy/time history.
+    """Run one strategy on one scenario; returns accuracy/time history.
 
-    algorithm: fedavg | local | oracle | ucfl | ucfl_k<int> | cfl | fedfomo
+    algorithm: a registry spec string (``"fedavg"``, ``"ucfl_k3"``, ...)
+    or a `Strategy` instance; alternatively pass ``strategy=``.  ``sampler``
+    selects per-round client participation (default: everyone).
     """
+    if strategy is not None:
+        if algorithm is not None:
+            raise TypeError("pass either `algorithm` or `strategy=`, not both")
+    elif algorithm is None:
+        raise TypeError("one of `algorithm` or `strategy=` is required")
+    elif isinstance(algorithm, Strategy):
+        strategy = algorithm
+    else:
+        strategy = get_strategy(algorithm)
+    if fed is None:
+        raise TypeError("`fed` is required")
+    fl = FLConfig() if fl is None else fl
+
     m = fed.m
     key = jax.random.PRNGKey(seed)
     key, kinit = jax.random.split(key)
@@ -160,69 +162,40 @@ def run_federated(algorithm: str, fed: FederatedData, *,
     stacked = _stack(params0, m)
     opt_state = jax.vmap(opt.init)(stacked)
 
-    # --- pre-round: mixing coefficients (UCFL family) ---------------------
-    w, plan, n_streams = None, None, 1
-    if algorithm.startswith("ucfl"):
-        grads = full_client_gradients(loss_fn, params0, fed)
-        from repro.core.similarity import delta_matrix
-        delta = delta_matrix(grads)
-        sigma2 = sigma2_estimates(loss_fn, params0, fed, fl.sigma_batches)
-        w = mixing_matrix(delta, sigma2, fed.n)
-        if algorithm == "ucfl":
-            n_streams = m
-        else:
-            k = int(algorithm.split("_k")[1])
-            plan = kmeans(w, k, key=jax.random.PRNGKey(seed + 1))
-            n_streams = k
-    elif algorithm == "oracle":
-        n_streams = int(jnp.max(fed.group)) + 1
-    elif algorithm == "fedavg":
-        n_streams = 1
-
-    # CFL state (host-side orchestration)
-    cfl_clusters = np.zeros(m, dtype=int)
+    ctx = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                       params0=params0, seed=seed)
+    state = strategy.setup(ctx)
 
     history = History()
     t_accum = 0.0
-    comm_log: List[Tuple[int, int]] = []   # per-round (n_streams, n_unicasts)
-    sys_model = system
-    fomo_val_loss = jax.jit(jax.vmap(
-        lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0], in_axes=(None, 0, 0)))
 
     for rnd in range(fl.rounds):
+        ksample = None
+        if sampler is not None and sampler.needs_key:
+            key, ksample = jax.random.split(key)
         key, kround = jax.random.split(key)
         ckeys = jax.random.split(kround, m)
-        prev = stacked
+        prev, prev_opt = stacked, opt_state
         stacked, opt_state = vmapped_update(stacked, opt_state, fed.x, fed.y,
                                             fed.n, ckeys)
 
-        # --- aggregation ---------------------------------------------------
-        if algorithm == "fedavg":
-            stacked = user_centric_aggregate(stacked, fedavg_weights(fed.n))
-        elif algorithm == "local":
-            pass
-        elif algorithm == "oracle":
-            stacked = _groupwise_fedavg(stacked, fed.n, np.asarray(fed.group))
-        elif algorithm == "ucfl" and plan is None:
-            stacked = user_centric_aggregate(stacked, w)
-        elif algorithm.startswith("ucfl"):
-            stacked = stream_aggregate(stacked, plan)
-        elif algorithm == "cfl":
-            stacked, cfl_clusters = _cfl_round(
-                stacked, prev, fed.n, cfl_clusters, rnd, fl)
-            n_streams = int(cfl_clusters.max()) + 1
-        elif algorithm == "fedfomo":
-            stacked = _fedfomo_round(stacked, prev, fed, fomo_val_loss,
-                                     fl.fomo_candidates, kround)
-        else:
-            raise ValueError(algorithm)
+        mask = sampler.sample(rnd, m, ksample) if sampler is not None else None
+        if mask is not None:
+            # non-participants keep their pre-round model and optimizer
+            stacked = _where_clients(mask, stacked, prev)
+            opt_state = _where_clients(mask, opt_state, prev_opt)
 
-        ns, nu = downlink_cost(algorithm.split("_k")[0], m,
-                               n_streams=n_streams,
-                               fomo_candidates=fl.fomo_candidates)
-        comm_log.append((ns, nu))
-        if sys_model is not None:
-            t_accum += sys_model.round_time(m, n_streams=ns, n_unicasts=nu)
+        # strategies get their own key derivation: kround's raw splits are
+        # already consumed as the per-client minibatch keys
+        ctx.rnd, ctx.key, ctx.participation = \
+            rnd, jax.random.fold_in(kround, 1), mask
+        stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+
+        cost = strategy.comm(state)
+        history.comm.append(cost)
+        if system is not None:
+            t_accum += system.round_time(m, n_streams=cost.n_streams,
+                                         n_unicasts=cost.n_unicasts)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = evaluate(acc_fn, stacked, fed)
@@ -231,92 +204,8 @@ def run_federated(algorithm: str, fed: FederatedData, *,
             history.worst_acc.append(worst_acc)
             history.time.append(t_accum)
 
-    history.extra["comm_per_round"] = comm_log   # any SystemModel's time
-    # axis is recoverable offline: cumsum of round_time(m, *comm_log[r])
-    if w is not None:
-        history.extra["mixing_matrix"] = np.asarray(w)
-    if algorithm == "cfl":
-        history.extra["clusters"] = cfl_clusters.copy()
+    history.extras = strategy.extras(state)
+    history.extra["comm_per_round"] = list(history.comm)
+    if history.extras is not None:
+        history.extra.update(dataclasses.asdict(history.extras))
     return history
-
-
-# ---------------------------------------------------------------------------
-# CFL (Sattler et al. 2020) — hierarchical bipartition on update cosine sim
-
-
-def _groupwise_fedavg(stacked, n, group: np.ndarray):
-    m = len(group)
-    wmat = np.zeros((m, m), np.float32)
-    nn = np.asarray(n)
-    for g in np.unique(group):
-        idx = np.where(group == g)[0]
-        wg = nn[idx] / nn[idx].sum()
-        for i in idx:
-            wmat[i, idx] = wg
-    return user_centric_aggregate(stacked, jnp.asarray(wmat))
-
-
-def _cfl_round(stacked, prev, n, clusters: np.ndarray, rnd: int, fl: FLConfig):
-    """Per-cluster FedAvg + Sattler bipartition criterion."""
-    deltas = jax.vmap(lambda a, b: flatten_pytree(
-        jax.tree_util.tree_map(lambda x, y: x - y, a, b)))(stacked, prev)
-    deltas = np.asarray(deltas)
-    norms = np.linalg.norm(deltas, axis=1)
-    new_clusters = clusters.copy()
-    if rnd >= fl.cfl_min_rounds:
-        for c in np.unique(clusters):
-            idx = np.where(clusters == c)[0]
-            if len(idx) < 4:
-                continue
-            mean_delta = deltas[idx].mean(0)
-            if (np.linalg.norm(mean_delta) < fl.cfl_eps1 * norms[idx].mean()
-                    and norms[idx].max() > fl.cfl_eps2 * norms[idx].mean()):
-                sub = _cosine_bipartition(deltas[idx])
-                nxt = new_clusters.max() + 1
-                new_clusters[idx[sub == 1]] = nxt
-    stacked = _groupwise_fedavg(stacked, n, new_clusters)
-    return stacked, new_clusters
-
-
-def _cosine_bipartition(d: np.ndarray) -> np.ndarray:
-    norm = d / (np.linalg.norm(d, axis=1, keepdims=True) + 1e-9)
-    sim = norm @ norm.T
-    i, j = np.unravel_index(np.argmin(sim), sim.shape)
-    return (sim[:, j] > sim[:, i]).astype(int)
-
-
-# ---------------------------------------------------------------------------
-# FedFOMO (Zhang et al. 2020) — client-side first-order model optimization
-
-
-def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
-                   n_candidates: int, key):
-    m = fed.m
-    # loss of every candidate model on every client's validation set
-    losses = np.zeros((m, m), np.float32)
-    flat = jax.vmap(flatten_pytree)(stacked)
-    flat_prev = jax.vmap(flatten_pytree)(prev)
-    for j in range(m):
-        pj = jax.tree_util.tree_map(lambda l: l[j], stacked)
-        losses[:, j] = np.asarray(val_loss_fn(pj, fed.x_val, fed.y_val))
-    prev_losses = np.zeros((m,), np.float32)
-    for i in range(m):
-        pi = jax.tree_util.tree_map(lambda l: l[i], prev)
-        prev_losses[i] = float(val_loss_fn(pi, fed.x_val[i:i + 1],
-                                           fed.y_val[i:i + 1])[0])
-    dist = np.asarray(jnp.linalg.norm(
-        flat[None, :, :] - flat_prev[:, None, :], axis=-1)) + 1e-9
-    wmat = np.maximum((prev_losses[:, None] - losses) / dist, 0.0)
-    # keep top candidates per client (paper samples M models)
-    if n_candidates < m:
-        thresh = np.sort(wmat, axis=1)[:, -n_candidates][:, None]
-        wmat = np.where(wmat >= thresh, wmat, 0.0)
-    rows = wmat.sum(1, keepdims=True)
-    wmat = np.where(rows > 0, wmat / np.maximum(rows, 1e-9), 0.0)
-    wj = jnp.asarray(wmat)
-    # θ_i ← θ_i^prev + Σ_j w_ij (θ_j − θ_i^prev)
-    mixed = user_centric_aggregate(stacked, wj)
-    keep = jnp.asarray(1.0 - wmat.sum(1))
-    return jax.tree_util.tree_map(
-        lambda mx, pv: mx + keep.reshape((-1,) + (1,) * (pv.ndim - 1)) * pv,
-        mixed, prev)

@@ -1,0 +1,43 @@
+"""Pre-round client statistics on stacked federated data.
+
+Used by the UCFL strategy's `setup` (Eq. 6 inputs) but generic: any
+strategy that needs full-dataset gradients or the Eq. 7 variance proxy at
+the common initialization can reuse these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import flatten_pytree
+from repro.data.federated import FederatedData
+
+
+def full_client_gradients(loss_fn, params, fed: FederatedData) -> jnp.ndarray:
+    """ĝ_i over each client's (padded) dataset; (m, D) float32."""
+
+    def one(x_i, y_i):
+        g, _ = jax.grad(loss_fn, has_aux=True)(params, {"x": x_i, "y": y_i})
+        return flatten_pytree(g)
+
+    return jax.vmap(one)(fed.x, fed.y)
+
+
+def sigma2_estimates(loss_fn, params, fed: FederatedData, k_batches: int
+                     ) -> jnp.ndarray:
+    """Eq. 7 on contiguous K-way splits of each client's data."""
+    n_max = fed.x.shape[1]
+    bs = n_max // k_batches
+
+    def one(x_i, y_i):
+        gfull, _ = jax.grad(loss_fn, has_aux=True)(
+            params, {"x": x_i, "y": y_i})
+        gfull = flatten_pytree(gfull)
+        devs = []
+        for k in range(k_batches):
+            sl = {"x": x_i[k * bs:(k + 1) * bs], "y": y_i[k * bs:(k + 1) * bs]}
+            gk, _ = jax.grad(loss_fn, has_aux=True)(params, sl)
+            devs.append(jnp.sum((flatten_pytree(gk) - gfull) ** 2))
+        return jnp.mean(jnp.stack(devs))
+
+    return jax.vmap(one)(fed.x, fed.y)

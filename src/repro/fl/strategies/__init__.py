@@ -1,0 +1,32 @@
+"""Pluggable server-side aggregation strategies (DESIGN.md §4–§6).
+
+Importing this package registers the seven paper algorithms:
+
+    fedavg | local | oracle | ucfl | ucfl_k<k> | cfl | fedfomo
+
+New personalization rules are a new `Strategy` subclass + `@register`
+entry — the round engine (`repro.fl.simulator.run_federated`) never
+dispatches on algorithm names.
+"""
+from repro.fl.strategies.base import (ClusterExtras, CommCost, MixingExtras,
+                                      RoundContext, Strategy, StrategyExtras)
+from repro.fl.strategies.registry import (STRATEGIES, available_strategies,
+                                          get_strategy, get_strategy_class,
+                                          parse_spec, register)
+from repro.fl.strategies.sampling import (ClientSampler, FullParticipation,
+                                          UniformFraction)
+# importing the modules registers the paper's algorithms
+from repro.fl.strategies.cfl import CFL
+from repro.fl.strategies.fedavg import FedAvg
+from repro.fl.strategies.fedfomo import FedFOMO
+from repro.fl.strategies.local import Local
+from repro.fl.strategies.oracle import Oracle
+from repro.fl.strategies.ucfl import UCFL
+
+__all__ = [
+    "CFL", "ClientSampler", "ClusterExtras", "CommCost", "FedAvg", "FedFOMO",
+    "FullParticipation", "Local", "MixingExtras", "Oracle", "RoundContext",
+    "STRATEGIES", "Strategy", "StrategyExtras", "UCFL", "UniformFraction",
+    "available_strategies", "get_strategy", "get_strategy_class",
+    "parse_spec", "register",
+]

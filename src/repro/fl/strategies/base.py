@@ -1,0 +1,115 @@
+"""Strategy protocol: the server-side aggregation surface (DESIGN.md §4).
+
+A `Strategy` packages one personalization rule as three lifecycle hooks
+driven by the round engine (`repro.fl.simulator.run_federated`):
+
+    state = strategy.setup(ctx)                       # once, before round 0
+    stacked, state = strategy.aggregate(state, stacked, prev, ctx)  # per round
+    cost = strategy.comm(state)                       # per round, after agg
+
+`state` is opaque to the engine — each strategy defines its own (mixing
+matrices, stream plans, cluster assignments, jitted closures).  The engine
+owns client updates, sampling, evaluation and the clock; strategies own
+everything between "clients uploaded" and "server downlinks".
+
+Strategies report per-round results through `CommCost` (the downlink
+accounting of paper §IV-C) and through typed `StrategyExtras` subclasses
+(via `extras(state)`) instead of stuffing ad-hoc keys into a dict; the
+legacy `History.extra` mapping is derived from both.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import Any, Callable, ClassVar, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedData
+
+
+class CommCost(NamedTuple):
+    """Per-round downlink accounting: broadcast streams + unicasts.
+
+    Time unit is T_dl (see `repro.fl.comm.SystemModel`); unpacks as the
+    legacy ``(n_streams, n_unicasts)`` tuple.
+    """
+    n_streams: int
+    n_unicasts: int
+
+
+@dataclass
+class RoundContext:
+    """Everything a strategy may read about the run; mutated per round by
+    the engine (``rnd``, ``key``, ``participation``)."""
+    fed: FederatedData
+    fl: Any                         # FLConfig (kept untyped to avoid a cycle)
+    loss_fn: Callable
+    acc_fn: Callable
+    params0: Any                    # common initialization (pre-round stats)
+    seed: int
+    rnd: int = 0                    # current round index
+    key: Optional[jnp.ndarray] = None       # this round's PRNG key
+    participation: Optional[jnp.ndarray] = None  # (m,) bool mask or None=all
+
+    @property
+    def m(self) -> int:
+        return self.fed.m
+
+
+@dataclass
+class StrategyExtras:
+    """Base for typed per-strategy results attached to `History.extras`."""
+
+
+@dataclass
+class MixingExtras(StrategyExtras):
+    """UCFL family: the Eq. 6 collaboration matrix used all run."""
+    mixing_matrix: np.ndarray
+
+
+@dataclass
+class ClusterExtras(StrategyExtras):
+    """CFL: final client -> cluster assignment."""
+    clusters: np.ndarray
+
+
+class Strategy(abc.ABC):
+    """One server-side aggregation rule; subclass + `@register` to add."""
+
+    name: ClassVar[str]
+
+    @property
+    def spec(self) -> str:
+        """Registry spec string that reconstructs this instance."""
+        return self.name
+
+    def setup(self, ctx: RoundContext) -> Any:
+        """Pre-round work (similarity stats, mixing matrices); returns the
+        strategy state threaded through `aggregate`/`comm`/`extras`."""
+        return None
+
+    @abc.abstractmethod
+    def aggregate(self, state: Any, stacked: Any, prev: Any,
+                  ctx: RoundContext) -> Tuple[Any, Any]:
+        """Server aggregation: (stacked', state').  `stacked` holds the
+        post-local-update client models, `prev` the pre-update ones."""
+
+    @abc.abstractmethod
+    def comm(self, state: Any) -> CommCost:
+        """This round's downlink cost (read after `aggregate`)."""
+
+    def extras(self, state: Any) -> Optional[StrategyExtras]:
+        """Typed end-of-run results for `History.extras`."""
+        return None
+
+    @classmethod
+    def downlink_cost(cls, m: int, *, n_streams: int = 1,
+                      fomo_candidates: int = 5) -> CommCost:
+        """Family cost table entry (the legacy `downlink_cost` contract:
+        the caller supplies `n_streams` for cluster/stream families)."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"

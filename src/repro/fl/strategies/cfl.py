@@ -1,0 +1,68 @@
+"""Clustered FL (Sattler et al. 2020): per-cluster FedAvg plus a
+hierarchical bipartition on the cosine similarity of client updates."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import groupwise_weights, user_centric_aggregate
+from repro.core.similarity import flatten_pytree
+from repro.fl.strategies.base import (ClusterExtras, CommCost, RoundContext,
+                                      Strategy)
+from repro.fl.strategies.registry import register
+
+
+def _cosine_bipartition(d: np.ndarray) -> np.ndarray:
+    norm = d / (np.linalg.norm(d, axis=1, keepdims=True) + 1e-9)
+    sim = norm @ norm.T
+    i, j = np.unravel_index(np.argmin(sim), sim.shape)
+    return (sim[:, j] > sim[:, i]).astype(int)
+
+
+@register
+class CFL(Strategy):
+    """State = the host-side (m,) cluster assignment, refined over rounds."""
+
+    name = "cfl"
+
+    def setup(self, ctx: RoundContext) -> np.ndarray:
+        return np.zeros(ctx.fed.m, dtype=int)
+
+    def aggregate(self, clusters: np.ndarray, stacked, prev,
+                  ctx: RoundContext):
+        fl = ctx.fl
+        deltas = jax.vmap(lambda a, b: flatten_pytree(
+            jax.tree_util.tree_map(lambda x, y: x - y, a, b)))(stacked, prev)
+        deltas = np.asarray(deltas)
+        norms = np.linalg.norm(deltas, axis=1)
+        # non-participants were rolled back to their pre-round params, so
+        # their deltas are exactly zero — they must not vote on splits
+        active = (np.ones(len(clusters), bool) if ctx.participation is None
+                  else np.asarray(ctx.participation))
+        new_clusters = clusters.copy()
+        if ctx.rnd >= fl.cfl_min_rounds:
+            for c in np.unique(clusters):
+                idx = np.where((clusters == c) & active)[0]
+                if len(idx) < 4:
+                    continue
+                mean_delta = deltas[idx].mean(0)
+                if (np.linalg.norm(mean_delta)
+                        < fl.cfl_eps1 * norms[idx].mean()
+                        and norms[idx].max() > fl.cfl_eps2 * norms[idx].mean()):
+                    sub = _cosine_bipartition(deltas[idx])
+                    nxt = new_clusters.max() + 1
+                    new_clusters[idx[sub == 1]] = nxt
+        stacked = user_centric_aggregate(
+            stacked, groupwise_weights(ctx.fed.n, new_clusters))
+        return stacked, new_clusters
+
+    def comm(self, clusters: np.ndarray) -> CommCost:
+        return CommCost(int(clusters.max()) + 1, 0)
+
+    def extras(self, clusters: np.ndarray) -> ClusterExtras:
+        return ClusterExtras(clusters=clusters.copy())
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        # one broadcast per current cluster; the caller passes the count
+        return CommCost(n_streams, 0)

@@ -1,0 +1,24 @@
+"""FedAvg: one global model, size-weighted average, one broadcast stream."""
+from __future__ import annotations
+
+from repro.core import fedavg_weights, user_centric_aggregate
+from repro.fl.strategies.base import CommCost, RoundContext, Strategy
+from repro.fl.strategies.registry import register
+
+
+@register
+class FedAvg(Strategy):
+    name = "fedavg"
+
+    def setup(self, ctx: RoundContext):
+        return fedavg_weights(ctx.fed.n)          # (m, m), every row n/Σn
+
+    def aggregate(self, state, stacked, prev, ctx):
+        return user_centric_aggregate(stacked, state), state
+
+    def comm(self, state) -> CommCost:
+        return CommCost(1, 0)
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        return CommCost(n_streams, 0)

@@ -1,0 +1,88 @@
+"""FedFOMO (Zhang et al. 2020): client-side first-order model optimization.
+
+Each client evaluates candidate models on its own validation set and mixes
+the ones that reduce its loss; the server therefore unicasts candidate
+models (no broadcast sharing is possible).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import user_centric_aggregate
+from repro.core.similarity import flatten_pytree
+from repro.data.federated import FederatedData
+from repro.fl.strategies.base import CommCost, RoundContext, Strategy
+from repro.fl.strategies.registry import register
+
+
+class FomoState(NamedTuple):
+    val_loss_fn: Callable       # jitted (params, x_val, y_val) -> (m,) losses
+    m: int
+    candidates: int
+
+
+def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
+                   n_candidates: int):
+    # deterministic: candidates are the top-M by weight (the paper samples)
+    m = fed.m
+    # loss of every candidate model on every client's validation set
+    losses = np.zeros((m, m), np.float32)
+    flat = jax.vmap(flatten_pytree)(stacked)
+    flat_prev = jax.vmap(flatten_pytree)(prev)
+    for j in range(m):
+        pj = jax.tree_util.tree_map(lambda l: l[j], stacked)
+        losses[:, j] = np.asarray(val_loss_fn(pj, fed.x_val, fed.y_val))
+    prev_losses = np.zeros((m,), np.float32)
+    for i in range(m):
+        pi = jax.tree_util.tree_map(lambda l: l[i], prev)
+        prev_losses[i] = float(val_loss_fn(pi, fed.x_val[i:i + 1],
+                                           fed.y_val[i:i + 1])[0])
+    dist = np.asarray(jnp.linalg.norm(
+        flat[None, :, :] - flat_prev[:, None, :], axis=-1)) + 1e-9
+    wmat = np.maximum((prev_losses[:, None] - losses) / dist, 0.0)
+    # keep top candidates per client (paper samples M models)
+    if n_candidates < m:
+        thresh = np.sort(wmat, axis=1)[:, -n_candidates][:, None]
+        wmat = np.where(wmat >= thresh, wmat, 0.0)
+    rows = wmat.sum(1, keepdims=True)
+    wmat = np.where(rows > 0, wmat / np.maximum(rows, 1e-9), 0.0)
+    wj = jnp.asarray(wmat)
+    # θ_i ← θ_i^prev + Σ_j w_ij (θ_j − θ_i^prev)
+    mixed = user_centric_aggregate(stacked, wj)
+    keep = jnp.asarray(1.0 - wmat.sum(1))
+    return jax.tree_util.tree_map(
+        lambda mx, pv: mx + keep.reshape((-1,) + (1,) * (pv.ndim - 1)) * pv,
+        mixed, prev)
+
+
+@register
+class FedFOMO(Strategy):
+    name = "fedfomo"
+
+    def __init__(self, candidates: Optional[int] = None):
+        self.candidates = candidates   # None -> FLConfig.fomo_candidates
+
+    def setup(self, ctx: RoundContext) -> FomoState:
+        loss_fn = ctx.loss_fn
+        val_loss = jax.jit(jax.vmap(
+            lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0],
+            in_axes=(None, 0, 0)))
+        n_cand = (self.candidates if self.candidates is not None
+                  else ctx.fl.fomo_candidates)
+        return FomoState(val_loss_fn=val_loss, m=ctx.fed.m, candidates=n_cand)
+
+    def aggregate(self, state: FomoState, stacked, prev, ctx):
+        out = _fedfomo_round(stacked, prev, ctx.fed, state.val_loss_fn,
+                             state.candidates)
+        return out, state
+
+    def comm(self, state: FomoState) -> CommCost:
+        return CommCost(0, state.m * state.candidates)
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        return CommCost(0, m * fomo_candidates)

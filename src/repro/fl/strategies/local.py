@@ -1,0 +1,20 @@
+"""Local-only baseline: no aggregation, no downlink."""
+from __future__ import annotations
+
+from repro.fl.strategies.base import CommCost, Strategy
+from repro.fl.strategies.registry import register
+
+
+@register
+class Local(Strategy):
+    name = "local"
+
+    def aggregate(self, state, stacked, prev, ctx):
+        return stacked, state
+
+    def comm(self, state) -> CommCost:
+        return CommCost(0, 0)
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        return CommCost(0, 0)

@@ -1,0 +1,37 @@
+"""Oracle baseline: FedAvg within the ground-truth clusters."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groupwise_weights, user_centric_aggregate
+from repro.fl.strategies.base import CommCost, RoundContext, Strategy
+from repro.fl.strategies.registry import register
+
+
+class OracleState(NamedTuple):
+    weights: jnp.ndarray    # (m, m) block-diagonal group-FedAvg rule
+    n_streams: int          # one broadcast per true group
+
+
+@register
+class Oracle(Strategy):
+    name = "oracle"
+
+    def setup(self, ctx: RoundContext) -> OracleState:
+        group = np.asarray(ctx.fed.group)
+        return OracleState(weights=groupwise_weights(ctx.fed.n, group),
+                           n_streams=int(group.max()) + 1)
+
+    def aggregate(self, state: OracleState, stacked, prev, ctx):
+        return user_centric_aggregate(stacked, state.weights), state
+
+    def comm(self, state: OracleState) -> CommCost:
+        return CommCost(state.n_streams, 0)
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        # one broadcast per cluster; the caller passes the cluster count
+        return CommCost(n_streams, 0)

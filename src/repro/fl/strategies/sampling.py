@@ -1,0 +1,55 @@
+"""Client participation hooks for the round engine (DESIGN.md §6).
+
+A `ClientSampler` decides which clients take part in a round.  The engine
+still runs the vmapped local update for every slot (the stacked layout is
+static), then discards the work of non-participants: their params and
+optimizer state are rolled back to the pre-round values, so they hold a
+stale model that the server-side aggregation still sees (stale-model
+participation semantics).  The participation mask is exposed to strategies
+via `RoundContext.participation` for rules that want to reweight.
+"""
+from __future__ import annotations
+
+from typing import ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ClientSampler:
+    """Returns a (m,) bool participation mask per round; None = everyone."""
+
+    needs_key: ClassVar[bool] = False   # engine only spends PRNG keys on
+                                        # stochastic samplers, preserving the
+                                        # full-participation RNG stream
+
+    def sample(self, rnd: int, m: int,
+               key: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
+        raise NotImplementedError
+
+
+class FullParticipation(ClientSampler):
+    """Every client, every round — identical to passing no sampler."""
+
+    def sample(self, rnd, m, key):
+        return None
+
+
+class UniformFraction(ClientSampler):
+    """Uniformly sample ``round(fraction * m)`` clients per round without
+    replacement (at least ``min_clients``)."""
+
+    needs_key = True
+
+    def __init__(self, fraction: float, min_clients: int = 1):
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        self.fraction = float(fraction)
+        self.min_clients = int(min_clients)
+
+    def sample(self, rnd, m, key):
+        k = min(m, max(self.min_clients, int(round(self.fraction * m))))
+        if k >= m:
+            return None
+        idx = jax.random.permutation(key, m)[:k]
+        return jnp.zeros((m,), dtype=bool).at[idx].set(True)

@@ -1,0 +1,72 @@
+"""User-centric FL (the paper's method).
+
+`UCFL()` is full personalization: one similarity round at the common
+initialization builds the Eq. 6 mixing matrix W, and every round each
+client receives its own W-row mixture (m unicast streams).
+
+`UCFL(k=...)` (spec ``ucfl_k<k>``) is the §III-B stream reduction: k-means
+over the rows of W yields k centroid aggregation rules served by group
+broadcast.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (kmeans, mixing_matrix, stream_aggregate,
+                        user_centric_aggregate)
+from repro.core.similarity import delta_matrix
+from repro.core.streams import StreamPlan
+from repro.fl.stats import full_client_gradients, sigma2_estimates
+from repro.fl.strategies.base import (CommCost, MixingExtras, RoundContext,
+                                      Strategy)
+from repro.fl.strategies.registry import register
+
+
+class UCFLState(NamedTuple):
+    w: jnp.ndarray                  # (m, m) Eq. 6 mixing matrix
+    plan: Optional[StreamPlan]      # k-means stream plan (None = unicast)
+    n_streams: int
+
+
+@register
+class UCFL(Strategy):
+    name = "ucfl"
+
+    def __init__(self, k: Optional[int] = None):
+        if k is not None and k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        self.k = k
+
+    @property
+    def spec(self) -> str:
+        return self.name if self.k is None else f"{self.name}_k{self.k}"
+
+    def setup(self, ctx: RoundContext) -> UCFLState:
+        grads = full_client_gradients(ctx.loss_fn, ctx.params0, ctx.fed)
+        delta = delta_matrix(grads)
+        sigma2 = sigma2_estimates(ctx.loss_fn, ctx.params0, ctx.fed,
+                                  ctx.fl.sigma_batches)
+        w = mixing_matrix(delta, sigma2, ctx.fed.n)
+        if self.k is None:
+            return UCFLState(w=w, plan=None, n_streams=ctx.fed.m)
+        plan = kmeans(w, self.k, key=jax.random.PRNGKey(ctx.seed + 1))
+        return UCFLState(w=w, plan=plan, n_streams=self.k)
+
+    def aggregate(self, state: UCFLState, stacked, prev, ctx):
+        if state.plan is None:
+            return user_centric_aggregate(stacked, state.w), state
+        return stream_aggregate(stacked, state.plan), state
+
+    def comm(self, state: UCFLState) -> CommCost:
+        return CommCost(state.n_streams, 0)
+
+    def extras(self, state: UCFLState) -> MixingExtras:
+        return MixingExtras(mixing_matrix=np.asarray(state.w))
+
+    @classmethod
+    def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):
+        return CommCost(n_streams, 0)

@@ -92,6 +92,17 @@ def test_harmonic_and_compute_time():
     assert r.compute_time(100) == 1.0
 
 
+def test_harmonic_asymptotic_matches_exact_at_crossover():
+    """Above the cutoff H_m switches to ln(m)+γ+1/(2m)−1/(12m²); the two
+    forms must agree to 1e-6 where they meet (and well beyond)."""
+    from repro.fl.comm import _HARMONIC_EXACT_MAX as cut
+    for m in (cut - 1, cut, cut + 1, cut + 9, 10 * cut):
+        exact = sum(1.0 / i for i in range(1, m + 1))
+        assert abs(harmonic(m) - exact) < 1e-6, m
+    # monotone through the crossover
+    assert harmonic(cut) < harmonic(cut + 1) < harmonic(cut + 2)
+
+
 def test_round_time_orderings():
     """FedAvg round < UCFL-k round < UCFL-full round < FedFOMO round."""
     m = 20

@@ -4,9 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+
+
+def _hypothesis():
+    """Property tests skip cleanly on bare environments without hypothesis;
+    the example-based tests in this module still run."""
+    st = pytest.importorskip("hypothesis.strategies")
+    from hypothesis import given, settings
+    return given, settings, st
 
 KEY = jax.random.PRNGKey(0)
 
@@ -20,21 +27,26 @@ def _rand(key, shape, dtype=jnp.float32, scale=1.0):
 # mixing_aggregate
 
 
-@settings(max_examples=12, deadline=None)
-@given(k=st.integers(1, 9), m=st.integers(2, 20),
-       d=st.sampled_from([64, 777, 2048, 4096 + 13]),
-       dtype=st.sampled_from(["float32", "bfloat16"]))
-def test_mixing_aggregate_matches_ref(k, m, d, dtype):
-    dt = jnp.dtype(dtype)
-    w = jax.random.uniform(KEY, (k, m), jnp.float32)
-    w = w / jnp.sum(w, 1, keepdims=True)
-    theta = _rand(jax.random.PRNGKey(k * 31 + m), (m, d), dt)
-    got = ops.mixing_aggregate(w, theta)
-    want = ref.mixing_aggregate_ref(w, theta)
-    tol = 1e-5 if dtype == "float32" else 2e-2
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol)
+def test_mixing_aggregate_matches_ref():
+    given, settings, st = _hypothesis()
+
+    @settings(max_examples=12, deadline=None)
+    @given(k=st.integers(1, 9), m=st.integers(2, 20),
+           d=st.sampled_from([64, 777, 2048, 4096 + 13]),
+           dtype=st.sampled_from(["float32", "bfloat16"]))
+    def prop(k, m, d, dtype):
+        dt = jnp.dtype(dtype)
+        w = jax.random.uniform(KEY, (k, m), jnp.float32)
+        w = w / jnp.sum(w, 1, keepdims=True)
+        theta = _rand(jax.random.PRNGKey(k * 31 + m), (m, d), dt)
+        got = ops.mixing_aggregate(w, theta)
+        want = ref.mixing_aggregate_ref(w, theta)
+        tol = 1e-5 if dtype == "float32" else 2e-2
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    prop()
 
 
 def test_mixing_aggregate_identity():
@@ -48,14 +60,19 @@ def test_mixing_aggregate_identity():
 # pairwise_sqdist
 
 
-@settings(max_examples=10, deadline=None)
-@given(m=st.integers(2, 24), d=st.sampled_from([128, 1000, 2048, 5000]))
-def test_pairwise_sqdist_matches_ref(m, d):
-    g = _rand(jax.random.PRNGKey(m * 7 + d), (m, d))
-    got = ops.pairwise_sqdist(g)
-    want = ref.pairwise_sqdist_ref(g)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-2)
+def test_pairwise_sqdist_matches_ref():
+    given, settings, st = _hypothesis()
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(2, 24), d=st.sampled_from([128, 1000, 2048, 5000]))
+    def prop(m, d):
+        g = _rand(jax.random.PRNGKey(m * 7 + d), (m, d))
+        got = ops.pairwise_sqdist(g)
+        want = ref.pairwise_sqdist_ref(g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-2)
+
+    prop()
 
 
 def test_pairwise_sqdist_properties():
@@ -70,32 +87,36 @@ def test_pairwise_sqdist_properties():
 # flash attention
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    b=st.integers(1, 2),
-    kh=st.sampled_from([1, 2, 4]),
-    g=st.sampled_from([1, 2, 4]),
-    sq=st.sampled_from([64, 128, 200]),
-    extra_k=st.sampled_from([0, 64]),
-    hd=st.sampled_from([32, 64]),
-    window=st.sampled_from([None, 64]),
-    softcap=st.sampled_from([None, 30.0]),
-)
-def test_flash_attention_matches_ref(b, kh, g, sq, extra_k, hd, window,
-                                     softcap):
-    h = kh * g
-    sk = sq + extra_k
-    key = jax.random.PRNGKey(b * 97 + h * 13 + sq)
-    ks = jax.random.split(key, 3)
-    q = _rand(ks[0], (b, h, sq, hd), scale=0.5)
-    k = _rand(ks[1], (b, kh, sk, hd), scale=0.5)
-    v = _rand(ks[2], (b, kh, sk, hd))
-    got = ops.flash_attention(q, k, v, causal=True, window=window,
-                              softcap=softcap, qblk=64, kblk=64)
-    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
-                                   softcap=softcap)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=2e-5, atol=2e-5)
+def test_flash_attention_matches_ref():
+    given, settings, st = _hypothesis()
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        kh=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 4]),
+        sq=st.sampled_from([64, 128, 200]),
+        extra_k=st.sampled_from([0, 64]),
+        hd=st.sampled_from([32, 64]),
+        window=st.sampled_from([None, 64]),
+        softcap=st.sampled_from([None, 30.0]),
+    )
+    def prop(b, kh, g, sq, extra_k, hd, window, softcap):
+        h = kh * g
+        sk = sq + extra_k
+        key = jax.random.PRNGKey(b * 97 + h * 13 + sq)
+        ks = jax.random.split(key, 3)
+        q = _rand(ks[0], (b, h, sq, hd), scale=0.5)
+        k = _rand(ks[1], (b, kh, sk, hd), scale=0.5)
+        v = _rand(ks[2], (b, kh, sk, hd))
+        got = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  softcap=softcap, qblk=64, kblk=64)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                       softcap=softcap)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    prop()
 
 
 def test_flash_attention_noncausal_and_bf16():

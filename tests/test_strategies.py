@@ -1,0 +1,173 @@
+"""Strategy API: registry spec grammar, string/instance path parity,
+client samplers, typed extras, comm-cost accounting."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.federated import scenario_label_shift
+from repro.fl import (CommCost, FLConfig, FullParticipation, MixingExtras,
+                      SYSTEMS, UniformFraction, downlink_cost, get_strategy,
+                      get_strategy_class, run_federated)
+from repro.fl.strategies import (CFL, ClusterExtras, FedAvg, FedFOMO, Local,
+                                 Oracle, Strategy, UCFL, available_strategies,
+                                 register)
+
+KEY = jax.random.PRNGKey(0)
+SMALL = FLConfig(rounds=2, local_steps=2, batch_size=16, eval_every=1,
+                 cfl_min_rounds=1)
+ALL_SPECS = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2", "cfl", "fedfomo"]
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=5)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_registry_round_trip():
+    s = get_strategy("ucfl_k3")
+    assert isinstance(s, UCFL) and s.k == 3 and s.spec == "ucfl_k3"
+    assert get_strategy("ucfl").k is None
+    assert get_strategy("ucfl", k=4).spec == "ucfl_k4"
+    for spec, cls in [("fedavg", FedAvg), ("local", Local), ("oracle", Oracle),
+                      ("cfl", CFL), ("fedfomo", FedFOMO)]:
+        assert isinstance(get_strategy(spec), cls)
+        assert get_strategy_class(spec) is cls
+    assert get_strategy_class("ucfl_k7") is UCFL
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("fedprox")
+    with pytest.raises(ValueError):
+        get_strategy("ucfl_k")        # parameter grammar needs an integer
+    with pytest.raises(ValueError, match="no _k parameter"):
+        get_strategy("local_k2")      # family does not take k
+    with pytest.raises(ValueError):
+        downlink_cost("not_an_alg", 10)
+
+
+def test_all_seed_algorithms_registered():
+    assert set(available_strategies()) == {"fedavg", "local", "oracle",
+                                           "ucfl", "cfl", "fedfomo"}
+
+
+def test_register_rejects_non_strategy():
+    with pytest.raises(TypeError):
+        register(dict)
+
+
+# ---------------------------------------------------------------------------
+# parity: spec-string path == explicit Strategy instance path
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+def test_string_and_strategy_paths_bit_identical(spec, fed):
+    h1 = run_federated(spec, fed, fl=SMALL, system=SYSTEMS["wired"])
+    h2 = run_federated(strategy=get_strategy(spec), fed=fed, fl=SMALL,
+                       system=SYSTEMS["wired"])
+    assert h1.mean_acc == h2.mean_acc        # bit-identical, not approx
+    assert h1.worst_acc == h2.worst_acc
+    assert h1.time == h2.time
+    assert h1.comm == h2.comm
+
+
+def test_strategy_instance_positional(fed):
+    h = run_federated(UCFL(k=2), fed, fl=SMALL)
+    assert len(h.mean_acc) == SMALL.rounds
+
+
+def test_algorithm_and_strategy_mutually_exclusive(fed):
+    with pytest.raises(TypeError):
+        run_federated("fedavg", fed, strategy=get_strategy("fedavg"))
+    with pytest.raises(TypeError):
+        run_federated(fed=fed)
+
+
+# ---------------------------------------------------------------------------
+# client samplers
+
+
+def test_uniform_fraction_sampler_end_to_end(fed):
+    h = run_federated("fedavg", fed, fl=SMALL, sampler=UniformFraction(0.5),
+                      system=SYSTEMS["wired"])
+    assert len(h.mean_acc) == SMALL.rounds
+    assert all(0.0 <= a <= 1.0 for a in h.mean_acc)
+
+
+def test_full_participation_matches_default(fed):
+    h1 = run_federated("fedavg", fed, fl=SMALL)
+    h2 = run_federated("fedavg", fed, fl=SMALL, sampler=FullParticipation())
+    assert h1.mean_acc == h2.mean_acc
+
+
+def test_uniform_fraction_mask_size():
+    s = UniformFraction(0.5)
+    mask = s.sample(0, 8, jax.random.PRNGKey(0))
+    assert mask.shape == (8,) and int(mask.sum()) == 4
+    assert UniformFraction(1.0).sample(0, 8, jax.random.PRNGKey(0)) is None
+
+
+def test_uniform_fraction_validates():
+    with pytest.raises(ValueError):
+        UniformFraction(0.0)
+    with pytest.raises(ValueError):
+        UniformFraction(1.5)
+
+
+# ---------------------------------------------------------------------------
+# comm accounting + typed extras
+
+
+def test_comm_costs_typed_and_match_shim(fed):
+    m = fed.m
+    h = run_federated("ucfl_k2", fed, fl=SMALL)
+    assert all(isinstance(c, CommCost) for c in h.comm)
+    assert h.comm[-1] == downlink_cost("ucfl", m, n_streams=2)
+    h = run_federated("fedfomo", fed, fl=SMALL)
+    assert h.comm[-1] == downlink_cost(
+        "fedfomo", m, fomo_candidates=SMALL.fomo_candidates)
+    assert h.comm[-1].n_unicasts == m * SMALL.fomo_candidates
+
+
+def test_typed_extras_and_legacy_dict(fed):
+    h = run_federated("ucfl", fed, fl=SMALL)
+    assert isinstance(h.extras, MixingExtras)
+    np.testing.assert_array_equal(h.extra["mixing_matrix"],
+                                  h.extras.mixing_matrix)
+    assert h.extra["comm_per_round"] == h.comm
+    h = run_federated("cfl", fed, fl=SMALL)
+    assert isinstance(h.extras, ClusterExtras)
+    assert h.extras.clusters.shape == (fed.m,)
+    h = run_federated("local", fed, fl=SMALL)
+    assert h.extras is None and list(h.extra) == ["comm_per_round"]
+
+
+# ---------------------------------------------------------------------------
+# extensibility: a new rule is a class + registry entry, no engine edits
+
+
+def test_custom_strategy_plugs_in(fed):
+    class EveryOther(Strategy):
+        """FedAvg on even rounds, local on odd — inexpressible as a seed
+        algorithm string; needs only the hook surface."""
+        name = "every_other_test"
+
+        def setup(self, ctx):
+            from repro.core import fedavg_weights
+            return fedavg_weights(ctx.fed.n)
+
+        def aggregate(self, state, stacked, prev, ctx):
+            if ctx.rnd % 2 == 0:
+                from repro.core import user_centric_aggregate
+                return user_centric_aggregate(stacked, state), state
+            return stacked, state
+
+        def comm(self, state):
+            return CommCost(1, 0)
+
+    h = run_federated(strategy=EveryOther(), fed=fed, fl=SMALL)
+    assert len(h.mean_acc) == SMALL.rounds
