@@ -17,17 +17,19 @@ benchmarks/results/perf_iterations.json; EXPERIMENTS.md §Perf is the
 narrative log.
 
     PYTHONPATH=src python -m benchmarks.perf_iterations [--group NAME]
+    PYTHONPATH=src python -m benchmarks.perf_iterations --round-engine
 
-MUST run standalone (forces 512 host devices via repro.launch.dryrun import).
+MUST run standalone: the dry-run groups force 512 host devices (via the
+repro.launch.dryrun import) and --round-engine forces 8, both through
+XLA_FLAGS set before jax initializes — so jax must not be imported at
+module scope here.
 """
 from __future__ import annotations
-
-# dryrun import must precede everything jax-touching (sets XLA_FLAGS)
-from repro.launch.dryrun import run_case  # noqa: E402
 
 import argparse
 import json
 import os
+import time
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -204,11 +206,79 @@ ITERATIONS = {
 }
 
 
+def round_engine_bench(rounds: int = 8):
+    """Rounds/sec of the federated round engine per placement × schedule
+    (the tentpole perf trajectory seed) -> BENCH_round_engine.json.
+
+    Runs a paper-shaped miniature (LeNet, m=8 label-shift clients).  The
+    per-run fixed costs (strategy.setup similarity pre-round, data
+    placement, compiles, the round-0 and final evals) are removed by
+    timing the DELTA between a short and a long run on the same placement
+    instance: rounds/sec = (R_long − R_short) / (t_long − t_short).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        # append (not setdefault): a pre-set XLA_FLAGS for unrelated options
+        # must not silently drop the 8-device forcing the bench documents
+        os.environ["XLA_FLAGS"] = \
+            (flags + " --xla_force_host_platform_device_count=8").strip()
+    import jax
+    from repro.core.distributed import MIX_SCHEDULES
+    from repro.data.federated import scenario_label_shift
+    from repro.fl import FLConfig, HostVmap, MeshShardMap, run_federated
+
+    fed = scenario_label_shift(jax.random.PRNGKey(0), n=800, m=8)
+
+    def fl_for(r):
+        return FLConfig(rounds=r, local_steps=4, batch_size=32,
+                        eval_every=10 * (rounds + 2))
+    r_short, r_long = 2, rounds + 2
+    configs = [("host_vmap", None)] + \
+        [("mesh_shard_map", s) for s in MIX_SCHEDULES]
+    rows = []
+    for name, schedule in configs:
+        placement = HostVmap() if schedule is None else \
+            MeshShardMap(schedule=schedule)
+        run_federated("ucfl_k2", fed, fl=fl_for(r_short),
+                      placement=placement)           # compile warmup
+        t0 = time.perf_counter()
+        run_federated("ucfl_k2", fed, fl=fl_for(r_short),
+                      placement=placement)
+        t1 = time.perf_counter()
+        run_federated("ucfl_k2", fed, fl=fl_for(r_long),
+                      placement=placement)
+        t2 = time.perf_counter()
+        delta = (t2 - t1) - (t1 - t0)
+        # noisy runner can make the short run cost more than the marginal
+        # long-run rounds; record null rather than a bogus huge number
+        rps = (r_long - r_short) / delta if delta > 0 else None
+        rows.append({"placement": name, "schedule": schedule,
+                     "m": fed.m, "devices": len(jax.devices()),
+                     "rounds": r_long - r_short, "rounds_per_sec": rps})
+        print(f"{name:16s} schedule={schedule or '-':20s} "
+              + (f"{rps:6.2f} rounds/s" if rps else
+                 "unmeasurable (timing noise)"))
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_round_engine.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
                    default="all")
+    p.add_argument("--round-engine", action="store_true",
+                   help="benchmark the federated round engine per "
+                        "placement × schedule instead of dry-run variants")
     args = p.parse_args(argv)
+    if args.round_engine:
+        round_engine_bench()
+        return
+    # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
+    from repro.launch.dryrun import run_case
     os.makedirs(RESULTS, exist_ok=True)
     groups = list(ITERATIONS) if args.group == "all" else [args.group]
     path = os.path.join(RESULTS, "perf_iterations.json")

@@ -2,7 +2,8 @@
 scenario of Fig.2b — run FedAvg, UCFL (k streams), and the oracle via the
 Strategy API, then print the accuracy-vs-rounds table and worst-user
 comparison (Table I).  `--participation 0.5` samples half the clients per
-round (DESIGN.md §6).
+round (DESIGN.md §6); `--placement mesh` runs the identical experiment
+with clients sharded over the available devices (DESIGN.md §3).
 
     PYTHONPATH=src python examples/personalization_emnist.py [--rounds 24]
 """
@@ -12,7 +13,8 @@ import jax
 import numpy as np
 
 from repro.data.federated import scenario_covariate_shift
-from repro.fl import FLConfig, UniformFraction, get_strategy, run_federated
+from repro.fl import (FLConfig, MeshShardMap, UniformFraction, get_strategy,
+                      run_federated)
 
 
 def main():
@@ -21,6 +23,10 @@ def main():
     p.add_argument("--clients", type=int, default=12)
     p.add_argument("--samples", type=int, default=2400)
     p.add_argument("--participation", type=float, default=1.0)
+    p.add_argument("--placement", default="host", choices=("host", "mesh"))
+    p.add_argument("--schedule", default="gspmd",
+                   choices=("gspmd", "shard_map_streams",
+                            "shard_map_unicast"))
     args = p.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -30,10 +36,14 @@ def main():
     sampler = (UniformFraction(args.participation)
                if args.participation != 1.0 else None)
 
+    # one placement instance for the whole sweep: its cached mixing
+    # executables are reused across strategies
+    placement = (MeshShardMap(schedule=args.schedule)
+                 if args.placement == "mesh" else None)
     results = {}
     for spec in ["local", "fedavg", "ucfl_k4", "oracle"]:
         h = run_federated(strategy=get_strategy(spec), fed=fed, fl=fl,
-                          sampler=sampler)
+                          sampler=sampler, placement=placement)
         results[spec] = h
         print(f"{spec:10s} rounds={h.rounds} mean_acc="
               f"{np.round(h.mean_acc, 3).tolist()}")

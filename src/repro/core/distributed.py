@@ -98,6 +98,33 @@ def mix_streams_shard_map(mesh, axis: str, params: Any,
     return fn(centroids, assignment, params)
 
 
+MIX_SCHEDULES = ("gspmd", "shard_map_streams", "shard_map_unicast")
+
+
+def mix_schedule(mesh, axes, params: Any, w: jnp.ndarray, assignment=None, *,
+                 schedule: str = "gspmd") -> Any:
+    """One entry point for every mixing-collective schedule.
+
+    ``assignment=None`` means ``w`` is a full per-client matrix (one row
+    per client, the unicast protocol); otherwise ``w`` is (k, m) centroid
+    rules and ``assignment`` maps clients to streams.  ``axes`` are the
+    mesh axes carrying the client dim — empty means no mesh placement and
+    the einsum baseline is used regardless of ``schedule``.
+    """
+    if schedule == "gspmd" or not axes:
+        return mix_einsum(params, w, assignment)
+    axis = axes[0] if len(axes) == 1 else axes
+    if schedule == "shard_map_streams":
+        if assignment is None:           # full matrix: one stream per client
+            assignment = jnp.arange(w.shape[0], dtype=jnp.int32)
+        return mix_streams_shard_map(mesh, axis, params, w, assignment)
+    if schedule == "shard_map_unicast":
+        full_w = w if assignment is None else jnp.take(w, assignment, axis=0)
+        return mix_unicast_shard_map(mesh, axis, params, full_w)
+    raise ValueError(f"unknown mixing schedule {schedule!r}; "
+                     f"one of {sorted(MIX_SCHEDULES)}")
+
+
 def mix_einsum(params: Any, w: jnp.ndarray, assignment=None) -> Any:
     """pjit/GSPMD baseline: plain einsum mix (+ optional stream selection).
     Inputs stay in the param dtype (collectives move bf16); fp32 accumulate."""

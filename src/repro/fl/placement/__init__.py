@@ -1,0 +1,18 @@
+"""Client placement backends for the federated round engine (DESIGN.md §3).
+
+    run_federated("ucfl_k2", fed)                                  # HostVmap
+    run_federated("ucfl_k2", fed, placement=MeshShardMap(
+        schedule="shard_map_streams"))                             # mesh
+
+`HostVmap` is the reference single-device backend (bit-for-bit the
+pre-placement engine); `MeshShardMap` shards the client stack over a
+device mesh and mixes with real collectives.
+"""
+from repro.fl.placement.base import (Placement, resolve_placement,
+                                     stack_params, where_clients)
+from repro.fl.placement.host import HostVmap, evaluate, make_client_update
+from repro.fl.placement.mesh import MeshShardMap
+
+__all__ = ["HostVmap", "MeshShardMap", "Placement", "evaluate",
+           "make_client_update", "resolve_placement", "stack_params",
+           "where_clients"]

@@ -1,0 +1,100 @@
+"""Placement protocol: where clients live and how their models move.
+
+A `Placement` owns everything about the *physical* layout of a federated
+round (DESIGN.md §3): stacking the common initialization into the
+client-stacked pytree, building the (cached, jitted) local-update step,
+placing the client datasets and per-round PRNG keys, rolling back
+non-participants, applying a mixing matrix `W` or a `StreamPlan`, and
+evaluating the personalized models.  Strategies (DESIGN.md §4) stay
+placement-agnostic: they route every matrix/plan application through
+`RoundContext.mix` / `RoundContext.mix_plan`, which dispatch here.
+
+Two backends ship:
+
+  * `HostVmap`   — all clients in one stacked pytree on the default
+    device; local updates are one `jit(vmap(client_update))`.  Bit-for-bit
+    the pre-placement `run_federated` semantics.
+  * `MeshShardMap` — clients sharded over a device mesh axis; the mixing
+    becomes explicit collectives (GSPMD einsum or hand-scheduled
+    `shard_map`, selected by `schedule=`).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import StreamPlan
+from repro.data.federated import FederatedData
+
+
+def stack_params(params: Any, m: int) -> Any:
+    """Broadcast a single-model pytree to the (m, ...) client stack."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape).copy(), params)
+
+
+def where_clients(mask: jnp.ndarray, new: Any, old: Any) -> Any:
+    """Per-client select over stacked pytrees (leading dim m)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                               a, b), new, old)
+
+
+class Placement(abc.ABC):
+    """One client-placement backend; see module docstring."""
+
+    name: ClassVar[str]
+
+    @abc.abstractmethod
+    def build_update(self, loss_fn: Callable, fl: Any
+                     ) -> Tuple[Any, Callable]:
+        """Returns ``(opt, update_fn)`` where ``update_fn(stacked, opt_state,
+        x, y, n, ckeys) -> (stacked', opt_state')`` runs every client's
+        local SGD.  Implementations cache the jitted step across calls
+        (sweeps re-enter `run_federated` with identical configs)."""
+
+    @abc.abstractmethod
+    def stack(self, params0: Any, m: int) -> Any:
+        """Place the common initialization as the (m, ...) client stack."""
+
+    def init_opt(self, opt: Any, stacked: Any) -> Any:
+        return jax.vmap(opt.init)(stacked)
+
+    def place_data(self, fed: FederatedData) -> Tuple[Any, Any, Any]:
+        """Place the stacked client train arrays ``(x, y, n)``."""
+        return fed.x, fed.y, fed.n
+
+    def place_keys(self, ckeys: jnp.ndarray) -> jnp.ndarray:
+        """Place the (m, 2) per-client round keys."""
+        return ckeys
+
+    def select(self, mask: jnp.ndarray, new: Any, old: Any) -> Any:
+        """Participation rollback: keep `old` where ``mask`` is False."""
+        return where_clients(mask, new, old)
+
+    @abc.abstractmethod
+    def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
+        """Apply a full per-client aggregation matrix ``w`` (m, m)."""
+
+    @abc.abstractmethod
+    def mix_plan(self, stacked: Any, plan: StreamPlan) -> Any:
+        """Apply a k-stream `StreamPlan` (centroid mix + group broadcast)."""
+
+    @abc.abstractmethod
+    def evaluate(self, acc_fn: Callable, stacked: Any, fed: FederatedData
+                 ) -> Tuple[float, float]:
+        """(mean, worst) validation score across clients."""
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+def resolve_placement(placement: Optional["Placement"]) -> "Placement":
+    """None -> the default `HostVmap` backend."""
+    if placement is None:
+        from repro.fl.placement.host import HostVmap
+        return HostVmap()
+    return placement

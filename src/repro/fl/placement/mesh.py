@@ -1,0 +1,124 @@
+"""Mesh placement: clients sharded over a device-mesh axis (DESIGN.md §3).
+
+The client stack (leading dim m of every leaf), the per-client datasets
+and the round keys are placed `P(axis)` over a mesh; the vmapped local
+update then runs as client-data-parallelism under GSPMD, and the mixing
+matrix / StreamPlan application lowers to real collectives selected by
+``schedule``:
+
+  gspmd               einsum, XLA chooses collectives (baseline)
+  shard_map_streams   explicit psum of k weighted copies (§Perf lever)
+  shard_map_unicast   explicit all-gather + local mix (m-fold downlink)
+
+With ``mesh=None`` a 1-D ``("clients",)`` mesh is built lazily from the
+available devices (the largest divisor of m, so the shard_map schedules'
+equal-shard requirement always holds).  Pass an explicit mesh + ``axis``
+to co-place with tensor-parallel axes (`repro.launch.mesh.client_axes`).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import MIX_SCHEDULES, mix_schedule
+from repro.core.streams import StreamPlan
+from repro.data.federated import FederatedData
+from repro.fl.placement.base import Placement
+from repro.fl.placement.host import cached_update, evaluate
+
+
+class MeshShardMap(Placement):
+    """Clients sharded over ``axis`` of ``mesh``; collective mixing."""
+
+    name = "mesh_shard_map"
+
+    def __init__(self, mesh: Optional[Mesh] = None, *,
+                 axis: Optional[str] = None, schedule: str = "gspmd"):
+        if schedule not in MIX_SCHEDULES:
+            raise ValueError(f"unknown mixing schedule {schedule!r}; "
+                             f"one of {sorted(MIX_SCHEDULES)}")
+        self.mesh = mesh
+        self.axis = axis if axis is not None else (
+            mesh.axis_names[0] if mesh is not None else None)
+        self.schedule = schedule
+        self._auto = mesh is None
+        self._auto_m = None
+        self._mix_jit = None
+        self._mix_plan_jit = None
+
+    def _ensure_mesh(self, m: int) -> Mesh:
+        if self._auto and m != self._auto_m:
+            # re-derive the auto mesh per client count, so one instance can
+            # drive sweeps over scenarios with different m
+            devs = jax.devices()
+            d = max(k for k in range(1, min(len(devs), m) + 1) if m % k == 0)
+            self.mesh = Mesh(np.asarray(devs[:d]), ("clients",))
+            self.axis = "clients"
+            self._auto_m = m
+            self._mix_jit = self._mix_plan_jit = None
+        size = self.mesh.shape[self.axis]
+        if m % size:
+            raise ValueError(
+                f"m={m} clients not divisible by mesh axis {self.axis!r} "
+                f"(size {size}) — shard_map schedules need equal shards")
+        return self.mesh
+
+    def _shard(self, tree: Any) -> Any:
+        mesh = self.mesh
+
+        def put(l):
+            spec = P(self.axis, *([None] * (l.ndim - 1)))
+            return jax.device_put(l, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(put, tree)
+
+    # ---- Placement hooks --------------------------------------------------
+
+    def build_update(self, loss_fn: Callable, fl) -> Tuple[Any, Callable]:
+        # same cached jitted step as HostVmap: the jit re-specializes on the
+        # sharded inputs, so the client vmap runs data-parallel over `axis`
+        return cached_update(loss_fn, fl.local_steps, fl.batch_size,
+                             fl.lr, fl.momentum,
+                             getattr(fl, "opt_state_dtype", None))
+
+    def stack(self, params0: Any, m: int) -> Any:
+        self._ensure_mesh(m)
+        stacked = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (m,) + l.shape), params0)
+        return self._shard(stacked)
+
+    def place_data(self, fed: FederatedData) -> Tuple[Any, Any, Any]:
+        self._ensure_mesh(fed.m)
+        return self._shard(fed.x), self._shard(fed.y), self._shard(fed.n)
+
+    def place_keys(self, ckeys: jnp.ndarray) -> jnp.ndarray:
+        return self._shard(ckeys)
+
+    # mix/mix_plan run eagerly once per round: hold one jit wrapper per
+    # instance so the shard_map collective traces and compiles once, not
+    # per call (jax's dispatch cache does not cache fresh shard_map objects)
+
+    def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
+        if self._mix_jit is None:
+            self._mix_jit = jax.jit(lambda s, ww: mix_schedule(
+                self.mesh, (self.axis,), s, ww, schedule=self.schedule))
+        return self._mix_jit(stacked, w)
+
+    def mix_plan(self, stacked: Any, plan: StreamPlan) -> Any:
+        if self._mix_plan_jit is None:
+            self._mix_plan_jit = jax.jit(lambda s, c, a: mix_schedule(
+                self.mesh, (self.axis,), s, c, a, schedule=self.schedule))
+        return self._mix_plan_jit(stacked, plan.centroids, plan.assignment)
+
+    def evaluate(self, acc_fn: Callable, stacked: Any, fed: FederatedData
+                 ) -> Tuple[float, float]:
+        return evaluate(acc_fn, stacked, fed)
+
+    def __repr__(self) -> str:
+        shape = None if self.mesh is None else dict(self.mesh.shape)
+        return (f"MeshShardMap(mesh={shape}, axis={self.axis!r}, "
+                f"schedule={self.schedule!r})")

@@ -1,35 +1,42 @@
-"""Federated learning round engine: vmap-over-clients, strategy-driven.
+"""Federated learning round engine: placement-generic, strategy-driven.
 
-The engine owns the generic round mechanics — client sampling, vmapped
-local SGD, evaluation, the analytic clock — and delegates every
-algorithm-specific decision to a `Strategy` (repro.fl.strategies):
+The engine owns the generic round mechanics — client sampling, the local
+update, evaluation, the analytic clock — and delegates every
+algorithm-specific decision to a `Strategy` (repro.fl.strategies) and
+every layout decision to a `Placement` (repro.fl.placement):
 
     run_federated("ucfl_k3", fed)                          # spec string
     run_federated(strategy=get_strategy("ucfl_k3"), fed=fed)  # instance
+    run_federated("ucfl_k3", fed,
+                  placement=MeshShardMap(schedule="shard_map_streams"))
 
 Registered strategies: fedavg | local | oracle | ucfl | ucfl_k<k> |
 cfl (Sattler et al.) | fedfomo (Zhang et al.); see DESIGN.md §4–§5.
 
-Client placement here is the host `vmap` mode of DESIGN.md §3 (paper-scale
-m=20..100, LeNet).  The mesh-placed variants live in repro/launch.
+Placements (DESIGN.md §3): `HostVmap` (default — all clients stacked on
+one device, paper-scale m=20..100) and `MeshShardMap` (clients sharded
+over a device mesh, mixing via schedule-selected collectives).  The
+mesh CLI `repro.launch.train` drives this same engine.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.data.federated import FederatedData
 from repro.fl.comm import SystemModel
+from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export)
+                                Placement, evaluate, make_client_update,
+                                resolve_placement, stack_params,
+                                where_clients)
 from repro.fl.stats import full_client_gradients, sigma2_estimates  # noqa: F401 (re-exported for back-compat)
 from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
                                  Strategy, StrategyExtras, get_strategy)
 from repro.models import lenet
-from repro.optim import apply_updates, sgd
 
 
 @dataclass
@@ -38,6 +45,9 @@ class FLConfig:
     batch_size: int = 64
     lr: float = 0.1
     momentum: float = 0.9
+    # optimizer-state dtype policy: None = fp32 state, "param" = keep
+    # momentum in the param dtype (the giants' HBM-fit knob, DESIGN.md §4)
+    opt_state_dtype: Optional[str] = None
     rounds: int = 60
     sigma_batches: int = 5
     eval_every: int = 5
@@ -45,58 +55,6 @@ class FLConfig:
     cfl_eps1: float = 0.04
     cfl_eps2: float = 0.06
     cfl_min_rounds: int = 10
-
-
-# ---------------------------------------------------------------------------
-# building blocks
-
-
-def make_client_update(loss_fn: Callable, opt, fl: FLConfig):
-    """Returns f(params_i, opt_i, data_i, n_i, key) -> (params_i', opt_i')
-    running `local_steps` SGD steps on mini-batches drawn from client i."""
-
-    def client_update(params_i, opt_i, x_i, y_i, n_i, key):
-        n_slots = x_i.shape[0]
-
-        def step(carry, k):
-            p, o = carry
-            idx = jax.random.randint(k, (fl.batch_size,), 0, 1 << 30) % \
-                jnp.maximum(n_i.astype(jnp.int32), 1)
-            idx = idx % n_slots
-            batch = {"x": x_i[idx], "y": y_i[idx]}
-            grads, _ = jax.grad(loss_fn, has_aux=True)(p, batch)
-            upd, o = opt.update(grads, o, p)
-            return (apply_updates(p, upd), o), None
-
-        keys = jax.random.split(key, fl.local_steps)
-        (p, o), _ = jax.lax.scan(step, (params_i, opt_i), keys)
-        return p, o
-
-    return client_update
-
-
-def _stack(params, m: int):
-    return jax.tree_util.tree_map(
-        lambda l: jnp.broadcast_to(l[None], (m,) + l.shape).copy(), params)
-
-
-def _where_clients(mask: jnp.ndarray, new, old):
-    """Per-client select over stacked pytrees (leading dim m)."""
-    return jax.tree_util.tree_map(
-        lambda a, b: jnp.where(mask.reshape((-1,) + (1,) * (a.ndim - 1)),
-                               a, b), new, old)
-
-
-@functools.lru_cache(maxsize=8)
-def _eval_fn(apply_acc: Callable):
-    return jax.jit(jax.vmap(lambda p, x, y: apply_acc(p, {"x": x, "y": y})))
-
-
-def evaluate(apply_acc: Callable, stacked_params, fed: FederatedData
-             ) -> Tuple[float, float]:
-    """(mean, worst) validation accuracy across clients, personalized models."""
-    accs = _eval_fn(apply_acc)(stacked_params, fed.x_val, fed.y_val)
-    return float(jnp.mean(accs)), float(jnp.min(accs))
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +72,10 @@ class History:
     # legacy mapping view, filled by the engine from `comm` + `extras`;
     # a real dict so pre-redesign callers that annotate it keep working
     extra: Dict[str, Any] = field(default_factory=dict)
+    # populated when run_federated(keep_state=True): the final client-
+    # stacked params / optimizer state (still device-resident)
+    final_params: Any = None
+    final_opt_state: Any = None
 
 
 def run_federated(algorithm: Union[str, Strategy, None] = None,
@@ -125,12 +87,17 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   loss_fn: Callable = lenet.loss_fn,
                   acc_fn: Callable = lenet.accuracy,
                   system: Optional[SystemModel] = None,
+                  placement: Optional[Placement] = None,
+                  keep_state: bool = False,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
     algorithm: a registry spec string (``"fedavg"``, ``"ucfl_k3"``, ...)
     or a `Strategy` instance; alternatively pass ``strategy=``.  ``sampler``
     selects per-round client participation (default: everyone).
+    ``placement`` selects the client layout backend (default `HostVmap`,
+    bit-identical to the pre-placement engine); ``keep_state=True``
+    attaches the final stacked params / opt state to the History.
     """
     if strategy is not None:
         if algorithm is not None:
@@ -144,6 +111,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     if fed is None:
         raise TypeError("`fed` is required")
     fl = FLConfig() if fl is None else fl
+    placement = resolve_placement(placement)
 
     m = fed.m
     key = jax.random.PRNGKey(seed)
@@ -155,15 +123,14 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             k, lenet.LeNetConfig(in_size=in_size, in_channels=channels,
                                  n_classes=max(n_classes, 10)))
     params0 = model_init(kinit)
-    opt = sgd(fl.lr, momentum=fl.momentum)
-    client_update = make_client_update(loss_fn, opt, fl)
-    vmapped_update = jax.jit(jax.vmap(client_update))
+    opt, vmapped_update = placement.build_update(loss_fn, fl)
 
-    stacked = _stack(params0, m)
-    opt_state = jax.vmap(opt.init)(stacked)
+    stacked = placement.stack(params0, m)
+    opt_state = placement.init_opt(opt, stacked)
+    x, y, n = placement.place_data(fed)
 
     ctx = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
-                       params0=params0, seed=seed)
+                       params0=params0, seed=seed, placement=placement)
     state = strategy.setup(ctx)
 
     history = History()
@@ -174,16 +141,16 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         if sampler is not None and sampler.needs_key:
             key, ksample = jax.random.split(key)
         key, kround = jax.random.split(key)
-        ckeys = jax.random.split(kround, m)
+        ckeys = placement.place_keys(jax.random.split(kround, m))
         prev, prev_opt = stacked, opt_state
-        stacked, opt_state = vmapped_update(stacked, opt_state, fed.x, fed.y,
-                                            fed.n, ckeys)
+        stacked, opt_state = vmapped_update(stacked, opt_state, x, y, n,
+                                            ckeys)
 
         mask = sampler.sample(rnd, m, ksample) if sampler is not None else None
         if mask is not None:
             # non-participants keep their pre-round model and optimizer
-            stacked = _where_clients(mask, stacked, prev)
-            opt_state = _where_clients(mask, opt_state, prev_opt)
+            stacked = placement.select(mask, stacked, prev)
+            opt_state = placement.select(mask, opt_state, prev_opt)
 
         # strategies get their own key derivation: kround's raw splits are
         # already consumed as the per-client minibatch keys
@@ -198,7 +165,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                                          n_unicasts=cost.n_unicasts)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
-            mean_acc, worst_acc = evaluate(acc_fn, stacked, fed)
+            mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
             history.rounds.append(rnd)
             history.mean_acc.append(mean_acc)
             history.worst_acc.append(worst_acc)
@@ -208,4 +175,6 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     history.extra["comm_per_round"] = list(history.comm)
     if history.extras is not None:
         history.extra.update(dataclasses.asdict(history.extras))
+    if keep_state:
+        history.final_params, history.final_opt_state = stacked, opt_state
     return history

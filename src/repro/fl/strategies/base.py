@@ -52,10 +52,30 @@ class RoundContext:
     rnd: int = 0                    # current round index
     key: Optional[jnp.ndarray] = None       # this round's PRNG key
     participation: Optional[jnp.ndarray] = None  # (m,) bool mask or None=all
+    placement: Optional[Any] = None  # Placement backend (DESIGN.md §3)
 
     @property
     def m(self) -> int:
         return self.fed.m
+
+    # Strategies apply their aggregation rules through these two hooks so
+    # the SAME strategy code runs under every placement backend: HostVmap
+    # dispatches to the plain stacked-pytree math, MeshShardMap to the
+    # schedule-selected mixing collectives.
+
+    def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
+        """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
+        if self.placement is None:
+            from repro.core import user_centric_aggregate
+            return user_centric_aggregate(stacked, w)
+        return self.placement.mix(stacked, w)
+
+    def mix_plan(self, stacked: Any, plan: Any) -> Any:
+        """k-stream aggregation: centroid mix + group broadcast."""
+        if self.placement is None:
+            from repro.core import stream_aggregate
+            return stream_aggregate(stacked, plan)
+        return self.placement.mix_plan(stacked, plan)
 
 
 @dataclass

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import groupwise_weights, user_centric_aggregate
+from repro.core import groupwise_weights
 from repro.core.similarity import flatten_pytree
 from repro.fl.strategies.base import (ClusterExtras, CommCost, RoundContext,
                                       Strategy)
@@ -52,8 +52,8 @@ class CFL(Strategy):
                     sub = _cosine_bipartition(deltas[idx])
                     nxt = new_clusters.max() + 1
                     new_clusters[idx[sub == 1]] = nxt
-        stacked = user_centric_aggregate(
-            stacked, groupwise_weights(ctx.fed.n, new_clusters))
+        stacked = ctx.mix(stacked,
+                          groupwise_weights(ctx.fed.n, new_clusters))
         return stacked, new_clusters
 
     def comm(self, clusters: np.ndarray) -> CommCost:

@@ -1,7 +1,7 @@
 """FedAvg: one global model, size-weighted average, one broadcast stream."""
 from __future__ import annotations
 
-from repro.core import fedavg_weights, user_centric_aggregate
+from repro.core import fedavg_weights
 from repro.fl.strategies.base import CommCost, RoundContext, Strategy
 from repro.fl.strategies.registry import register
 
@@ -14,7 +14,7 @@ class FedAvg(Strategy):
         return fedavg_weights(ctx.fed.n)          # (m, m), every row n/Σn
 
     def aggregate(self, state, stacked, prev, ctx):
-        return user_centric_aggregate(stacked, state), state
+        return ctx.mix(stacked, state), state
 
     def comm(self, state) -> CommCost:
         return CommCost(1, 0)

@@ -26,7 +26,7 @@ class FomoState(NamedTuple):
 
 
 def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
-                   n_candidates: int):
+                   n_candidates: int, mix=None):
     # deterministic: candidates are the top-M by weight (the paper samples)
     m = fed.m
     # loss of every candidate model on every client's validation set
@@ -52,7 +52,8 @@ def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
     wmat = np.where(rows > 0, wmat / np.maximum(rows, 1e-9), 0.0)
     wj = jnp.asarray(wmat)
     # θ_i ← θ_i^prev + Σ_j w_ij (θ_j − θ_i^prev)
-    mixed = user_centric_aggregate(stacked, wj)
+    mixed = user_centric_aggregate(stacked, wj) if mix is None \
+        else mix(stacked, wj)
     keep = jnp.asarray(1.0 - wmat.sum(1))
     return jax.tree_util.tree_map(
         lambda mx, pv: mx + keep.reshape((-1,) + (1,) * (pv.ndim - 1)) * pv,
@@ -77,7 +78,7 @@ class FedFOMO(Strategy):
 
     def aggregate(self, state: FomoState, stacked, prev, ctx):
         out = _fedfomo_round(stacked, prev, ctx.fed, state.val_loss_fn,
-                             state.candidates)
+                             state.candidates, mix=ctx.mix)
         return out, state
 
     def comm(self, state: FomoState) -> CommCost:

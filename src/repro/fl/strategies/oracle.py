@@ -6,7 +6,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import groupwise_weights, user_centric_aggregate
+from repro.core import groupwise_weights
 from repro.fl.strategies.base import CommCost, RoundContext, Strategy
 from repro.fl.strategies.registry import register
 
@@ -26,7 +26,7 @@ class Oracle(Strategy):
                            n_streams=int(group.max()) + 1)
 
     def aggregate(self, state: OracleState, stacked, prev, ctx):
-        return user_centric_aggregate(stacked, state.weights), state
+        return ctx.mix(stacked, state.weights), state
 
     def comm(self, state: OracleState) -> CommCost:
         return CommCost(state.n_streams, 0)

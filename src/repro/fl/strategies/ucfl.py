@@ -16,8 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (kmeans, mixing_matrix, stream_aggregate,
-                        user_centric_aggregate)
+from repro.core import kmeans, mixing_matrix
 from repro.core.similarity import delta_matrix
 from repro.core.streams import StreamPlan
 from repro.fl.stats import full_client_gradients, sigma2_estimates
@@ -54,12 +53,14 @@ class UCFL(Strategy):
         if self.k is None:
             return UCFLState(w=w, plan=None, n_streams=ctx.fed.m)
         plan = kmeans(w, self.k, key=jax.random.PRNGKey(ctx.seed + 1))
-        return UCFLState(w=w, plan=plan, n_streams=self.k)
+        # kmeans clamps k to m: report the streams actually transmitted
+        return UCFLState(w=w, plan=plan,
+                         n_streams=int(plan.centroids.shape[0]))
 
     def aggregate(self, state: UCFLState, stacked, prev, ctx):
         if state.plan is None:
-            return user_centric_aggregate(stacked, state.w), state
-        return stream_aggregate(stacked, state.plan), state
+            return ctx.mix(stacked, state.w), state
+        return ctx.mix_plan(stacked, state.plan), state
 
     def comm(self, state: UCFLState) -> CommCost:
         return CommCost(state.n_streams, 0)

@@ -26,8 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.distributed import (mix_einsum, mix_streams_shard_map,
-                                    mix_unicast_shard_map)
+from repro.core.distributed import mix_schedule
 from repro.launch.mesh import client_axes, data_axes, n_clients
 from repro.launch.sharding import (batch_specs, cache_specs, param_specs,
                                    to_shardings)
@@ -213,15 +212,10 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, *, n_streams: int = 0,
 
     def mix(params, w, assignment):
         if schedule == "gspmd" or not caxes:
-            return mix_einsum(params, w,
-                              None if w.shape[0] == w.shape[1] else assignment)
-        axis = caxes[0] if len(caxes) == 1 else caxes
-        if schedule == "shard_map_streams":
-            return mix_streams_shard_map(mesh, axis, params, w, assignment)
-        if schedule == "shard_map_unicast":
-            full_w = jnp.take(w, assignment, axis=0)  # (m, m) rows per client
-            return mix_unicast_shard_map(mesh, axis, params, full_w)
-        raise ValueError(schedule)
+            # square w already has one row per client — skip the take
+            assignment = None if w.shape[0] == w.shape[1] else assignment
+        return mix_schedule(mesh, caxes, params, w, assignment,
+                            schedule=schedule)
 
     def train_step(params, opt_state, batch, w, assignment):
         (loss, metrics), grads = grads_of(params, batch)

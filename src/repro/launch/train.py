@@ -1,10 +1,14 @@
-"""End-to-end federated LM training driver.
+"""Federated LM training CLI — a thin shell over the round engine.
 
-Runs the full paper pipeline on any assigned architecture at a reduced or
-full scale: similarity pre-round -> Eq.6 mixing matrix -> k-means streams ->
-federated rounds of (local step + user-centric aggregation), with eval on
-per-client held-out data and checkpointing.  The same step builder drives
-the production dry-run; here it executes on the host mesh.
+One command drives the full paper pipeline on any assigned architecture:
+the registry resolves ``--algorithm`` to a `Strategy` (similarity
+pre-round, Eq. 6 mixing, k-means streams all live in `UCFL.setup`), and
+`run_federated` executes the rounds under a `MeshShardMap` placement —
+clients sharded over the device mesh, aggregation via the
+``--schedule``-selected collectives.  Every registered strategy
+(fedavg | local | oracle | ucfl | ucfl_k<k> | cfl | fedfomo), every
+`ClientSampler`, the CommCost accounting and the analytic clock run here
+exactly as in the host simulator: there is no mesh-specific round loop.
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
         --preset cpu-small --steps 20 --algorithm ucfl_k2 --clients 4
@@ -16,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
@@ -24,12 +29,11 @@ import numpy as np
 
 from repro.checkpoint import save_train_state
 from repro.configs import get_config, reduced
-from repro.core import kmeans, mixing_matrix
-from repro.core.similarity import delta_matrix, flatten_pytree
+from repro.data.federated import FederatedData
 from repro.data.synthetic import synthetic_lm_tokens
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import (build_train_step, init_stacked_params,
-                                make_optimizer, _loss_fn)
+from repro.fl import (FLConfig, HostVmap, MeshShardMap, SYSTEMS,
+                      UniformFraction, get_strategy, run_federated)
+from repro.launch.steps import _loss_fn, init_model_params
 
 
 def preset_config(arch: str, preset: str):
@@ -43,21 +47,38 @@ def preset_config(arch: str, preset: str):
     return reduced(cfg, n_layers=2, d_model=256, vocab=512, max_seq=256)
 
 
-def make_client_data(key, m: int, batch: int, seq: int, vocab: int,
-                     n_groups: int = 2):
-    """Heterogeneous LM clients: one Markov rule per GROUP (concept shift),
-    so user-centric mixing has real structure to find."""
+@functools.lru_cache(maxsize=8)
+def _lm_fns(arch: str, preset: str):
+    """(cfg, loss_fn, acc_fn) memoized per (arch, preset): stable function
+    identities let the engine's cached jitted update hit across repeated
+    main() calls (sweeps, tests) instead of recompiling per call."""
+    cfg = preset_config(arch, preset)
+    lm_loss = _loss_fn(cfg, remat=False)
+    loss_fn = lambda p_, b: lm_loss(p_, {"tokens": b["x"]})
+    # evaluate() reports (mean, worst) of a higher-is-better score: use −CE
+    acc_fn = lambda p_, b: -lm_loss(p_, {"tokens": b["x"]})[0]
+    return cfg, loss_fn, acc_fn
+
+
+def lm_federated_data(key, m: int, *, pool: int, n_val: int, seq: int,
+                      vocab: int, n_groups: int = 2) -> FederatedData:
+    """Heterogeneous LM clients as a stacked `FederatedData`: one Markov
+    rule per GROUP (concept shift), so user-centric mixing has real
+    structure to find.  Tokens ride in the ``x`` slot ((m, n, seq) int32);
+    ``y`` is a dummy — the LM loss reads only ``batch["x"]``."""
     groups = np.arange(m) % n_groups
-    keys = jax.random.split(key, n_groups)
-
-    def sample(rnd_key, step):
-        out = []
-        for i in range(m):
-            k = jax.random.fold_in(jax.random.fold_in(keys[groups[i]], step), i)
-            out.append(synthetic_lm_tokens(k, batch, seq, vocab))
-        return jnp.stack(out)          # (m, batch, seq)
-
-    return sample, groups
+    gkeys = jax.random.split(key, n_groups)
+    xs, xv = [], []
+    for i in range(m):
+        ki = jax.random.fold_in(gkeys[groups[i]], i)
+        xs.append(synthetic_lm_tokens(ki, pool, seq, vocab))
+        xv.append(synthetic_lm_tokens(jax.random.fold_in(ki, 999),
+                                      n_val, seq, vocab))
+    return FederatedData(
+        x=jnp.stack(xs), y=jnp.zeros((m, pool), jnp.int32),
+        n=jnp.full((m,), float(pool)),
+        x_val=jnp.stack(xv), y_val=jnp.zeros((m, n_val), jnp.int32),
+        group=jnp.asarray(groups, jnp.int32))
 
 
 def main(argv=None):
@@ -65,92 +86,90 @@ def main(argv=None):
     p.add_argument("--arch", default="stablelm-3b")
     p.add_argument("--preset", default="cpu-small",
                    choices=("cpu-small", "lm-100m", "full"))
-    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--steps", type=int, default=20,
+                   help="federated rounds")
+    p.add_argument("--local-steps", type=int, default=1,
+                   help="client SGD steps per round")
     p.add_argument("--clients", type=int, default=4)
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--pool", type=int, default=32,
+                   help="sequences per client dataset")
     p.add_argument("--algorithm", default="ucfl_k2",
-                   help="fedavg | local | ucfl | ucfl_k<k>")
+                   help="any registry spec: fedavg | local | oracle | ucfl "
+                        "| ucfl_k<k> | cfl | fedfomo")
+    p.add_argument("--placement", default="mesh", choices=("mesh", "host"))
+    p.add_argument("--schedule", default="gspmd",
+                   choices=("gspmd", "shard_map_streams",
+                            "shard_map_unicast"))
+    p.add_argument("--participation", type=float, default=1.0,
+                   help="per-round client fraction (UniformFraction)")
+    p.add_argument("--system", default="wired", choices=tuple(SYSTEMS),
+                   help="analytic clock (paper §IV-C)")
     p.add_argument("--eval-every", type=int, default=5)
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    if args.steps < 1:
+        p.error("--steps must be >= 1")
 
-    cfg = preset_config(args.arch, args.preset)
+    # registry-validated spec: bad specs raise ValueError before any work
+    strategy = get_strategy(args.algorithm)
+    cfg, loss_fn, acc_fn = _lm_fns(args.arch, args.preset)
     m = args.clients
-    mesh = make_host_mesh()
-    key = jax.random.PRNGKey(args.seed)
-    k_init, k_data, k_round = jax.random.split(key, 3)
+
+    fed = lm_federated_data(jax.random.fold_in(jax.random.PRNGKey(args.seed),
+                                               1),
+                            m, pool=args.pool, n_val=max(4, args.batch),
+                            seq=args.seq, vocab=cfg.vocab_size)
+
+    placement = (MeshShardMap(schedule=args.schedule)
+                 if args.placement == "mesh" else HostVmap())
+    # paper optimizer (SGD η=.1 β=.9); giants drop momentum to fit HBM and
+    # keep state in the param dtype (same policy as steps.make_optimizer)
+    pod = cfg.fl_client_axis == "pod"
+    fl = FLConfig(rounds=args.steps, local_steps=args.local_steps,
+                  batch_size=args.batch, eval_every=args.eval_every,
+                  momentum=0.0 if pod else 0.9,
+                  opt_state_dtype=None if pod else "param")
+    sampler = (UniformFraction(args.participation)
+               if args.participation < 1.0 else None)
 
     print(f"arch={cfg.name} preset={args.preset} clients={m} "
-          f"alg={args.algorithm}")
-    params = init_stacked_params(k_init, cfg, m)
-    n_params = sum(int(np.prod(l.shape)) for l in
-                   jax.tree_util.tree_leaves(params)) // m
-    print(f"params/model: {n_params/1e6:.1f}M")
-    opt = make_optimizer(cfg)
-    opt_state = opt.init(params)
-
-    sample, groups = make_client_data(k_data, m, args.batch, args.seq,
-                                      cfg.vocab_size)
-    loss_fn = _loss_fn(cfg, remat=False)
-
-    # ---- similarity pre-round (paper §III-A) -----------------------------
-    if args.algorithm.startswith("ucfl"):
-        probe = jax.tree_util.tree_map(lambda l: l[0], params)
-        batch0 = sample(k_data, 0)
-
-        def grad_i(b):
-            g = jax.grad(lambda q: loss_fn(q, {"tokens": b})[0])(probe)
-            return flatten_pytree(g)
-
-        grads = jnp.stack([grad_i(batch0[i]) for i in range(m)])
-        delta = delta_matrix(grads)
-        sigma2 = jnp.full((m,), jnp.mean(delta) + 1e-6)
-        n = jnp.full((m,), float(args.batch * args.seq))
-        w_full = mixing_matrix(delta, sigma2, n)
-        if args.algorithm == "ucfl":
-            w, assignment = w_full, jnp.arange(m, dtype=jnp.int32)
-        else:
-            k = int(args.algorithm.split("_k")[1])
-            plan = kmeans(w_full, k, key=k_round)
-            w, assignment = plan.centroids, plan.assignment
-        print("mixing matrix rows:\n", np.round(np.asarray(w_full), 3))
-        print("stream assignment:", np.asarray(assignment),
-              "(true groups:", groups, ")")
-    elif args.algorithm == "fedavg":
-        w = jnp.full((1, m), 1.0 / m)
-        assignment = jnp.zeros((m,), jnp.int32)
-    else:  # local
-        w = jnp.eye(m)
-        assignment = jnp.arange(m, dtype=jnp.int32)
-
-    train_step = build_train_step(cfg, mesh, schedule="gspmd", remat=False)
-    train_step = jax.jit(train_step, donate_argnums=(0, 1))
-
-    eval_batches = sample(jax.random.fold_in(k_data, 999), 10_000)
-
-    @jax.jit
-    def eval_loss(params):
-        return jax.vmap(lambda p, b: loss_fn(p, {"tokens": b})[0])(
-            params, eval_batches)
-
+          f"alg={strategy.spec} placement={placement!r}")
     t0 = time.time()
-    for step in range(args.steps):
-        batch = {"tokens": sample(k_round, step)}
-        params, opt_state, metrics = train_step(params, opt_state, batch, w,
-                                                assignment)
-        if step % args.eval_every == 0 or step == args.steps - 1:
-            ev = eval_loss(params)
-            print(f"step {step:4d} train={float(metrics['loss']):.4f} "
-                  f"eval/client={np.round(np.asarray(ev), 3)} "
-                  f"({time.time()-t0:.0f}s)")
+    history = run_federated(
+        strategy=strategy, fed=fed, fl=fl, sampler=sampler,
+        model_init=lambda k: init_model_params(k, cfg),
+        loss_fn=loss_fn, acc_fn=acc_fn, system=SYSTEMS[args.system],
+        placement=placement, keep_state=bool(args.checkpoint),
+        seed=args.seed)
+
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda k: init_model_params(k, cfg),
+                       jax.random.PRNGKey(0))))
+    print(f"params/model: {n_params/1e6:.1f}M")
+    if "mixing_matrix" in history.extra:
+        print("mixing matrix rows:\n",
+              np.round(np.asarray(history.extra["mixing_matrix"]), 3))
+        print("(true groups:", np.asarray(fed.group), ")")
+    for rnd, mean_s, worst_s, t in zip(history.rounds, history.mean_acc,
+                                       history.worst_acc, history.time):
+        print(f"round {rnd:4d} loss/mean={-mean_s:.4f} "
+              f"loss/worst={-worst_s:.4f} t_sys={t:.1f} "
+              f"({time.time()-t0:.0f}s)")
+    streams = sum(c.n_streams for c in history.comm)
+    unicasts = sum(c.n_unicasts for c in history.comm)
+    print(f"downlink total: {streams} streams, {unicasts} unicasts "
+          f"({args.system})")
+
     if args.checkpoint:
-        save_train_state(args.checkpoint, args.steps, jax.device_get(params),
-                         jax.device_get(opt_state),
-                         extra={"arch": cfg.name, "algorithm": args.algorithm})
+        save_train_state(args.checkpoint, args.steps,
+                         jax.device_get(history.final_params),
+                         jax.device_get(history.final_opt_state),
+                         extra={"arch": cfg.name, "algorithm": strategy.spec})
         print("checkpoint written:", args.checkpoint)
-    return float(jnp.mean(eval_loss(params)))
+    return -history.mean_acc[-1]
 
 
 if __name__ == "__main__":

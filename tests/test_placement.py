@@ -1,0 +1,230 @@
+"""Placement backends (DESIGN.md §3): HostVmap reference semantics,
+MeshShardMap parity across schedules, kmeans edge cases, train CLI spec
+validation.
+
+The mesh tests use however many devices the process has; CI's mesh-smoke
+job re-runs this file under XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the shard_map schedules exercise real (host) collectives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.streams import kmeans
+from repro.data.federated import scenario_label_shift
+from repro.fl import (FLConfig, HostVmap, MeshShardMap, SYSTEMS,
+                      UniformFraction, get_strategy, run_federated)
+from repro.fl.placement import make_client_update, stack_params, where_clients
+from repro.fl.placement.host import evaluate
+from repro.fl.strategies import RoundContext
+from repro.models import lenet
+from repro.optim import sgd
+
+KEY = jax.random.PRNGKey(0)
+SMALL = FLConfig(rounds=3, local_steps=2, batch_size=16, eval_every=1,
+                 cfl_min_rounds=1)
+ALL_SPECS = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2", "cfl", "fedfomo"]
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=4)
+
+
+# ---------------------------------------------------------------------------
+# HostVmap == the pre-refactor engine, bit for bit
+
+
+def _reference_engine(spec, fed, fl, sampler=None, seed=0):
+    """The pre-placement `run_federated` round loop, verbatim semantics:
+    fresh jit(vmap(client_update)), engine-side masking and eval, strategies
+    applying their own mixing math (ctx.placement=None fallback)."""
+    strategy = get_strategy(spec)
+    m = fed.m
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    in_size, channels = fed.x.shape[2], fed.x.shape[4]
+    n_classes = int(jnp.max(fed.y)) + 1
+    params0 = lenet.init_params(
+        kinit, lenet.LeNetConfig(in_size=in_size, in_channels=channels,
+                                 n_classes=max(n_classes, 10)))
+    opt = sgd(fl.lr, momentum=fl.momentum)
+    vmapped_update = jax.jit(jax.vmap(make_client_update(
+        lenet.loss_fn, opt, fl)))
+    stacked = stack_params(params0, m)
+    opt_state = jax.vmap(opt.init)(stacked)
+    ctx = RoundContext(fed=fed, fl=fl, loss_fn=lenet.loss_fn,
+                       acc_fn=lenet.accuracy, params0=params0, seed=seed)
+    state = strategy.setup(ctx)
+    mean_accs, worst_accs = [], []
+    for rnd in range(fl.rounds):
+        ksample = None
+        if sampler is not None and sampler.needs_key:
+            key, ksample = jax.random.split(key)
+        key, kround = jax.random.split(key)
+        ckeys = jax.random.split(kround, m)
+        prev, prev_opt = stacked, opt_state
+        stacked, opt_state = vmapped_update(stacked, opt_state, fed.x, fed.y,
+                                            fed.n, ckeys)
+        mask = sampler.sample(rnd, m, ksample) if sampler is not None else None
+        if mask is not None:
+            stacked = where_clients(mask, stacked, prev)
+            opt_state = where_clients(mask, opt_state, prev_opt)
+        ctx.rnd, ctx.key, ctx.participation = \
+            rnd, jax.random.fold_in(kround, 1), mask
+        stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+        if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
+            mean_acc, worst_acc = evaluate(lenet.accuracy, stacked, fed)
+            mean_accs.append(mean_acc)
+            worst_accs.append(worst_acc)
+    return mean_accs, worst_accs
+
+
+@pytest.mark.parametrize("spec", ["fedavg", "ucfl_k2", "cfl"])
+def test_hostvmap_bit_identical_to_reference_engine(spec, fed):
+    ref_mean, ref_worst = _reference_engine(spec, fed, SMALL)
+    h = run_federated(spec, fed, fl=SMALL, placement=HostVmap())
+    assert h.mean_acc == ref_mean       # bit-identical, not approx
+    assert h.worst_acc == ref_worst
+
+
+def test_hostvmap_bit_identical_under_sampler(fed):
+    ref_mean, _ = _reference_engine("fedavg", fed, SMALL,
+                                    sampler=UniformFraction(0.5))
+    h = run_federated("fedavg", fed, fl=SMALL, sampler=UniformFraction(0.5),
+                      placement=HostVmap())
+    assert h.mean_acc == ref_mean
+
+
+def test_default_placement_is_hostvmap(fed):
+    h0 = run_federated("ucfl_k2", fed, fl=SMALL)
+    h1 = run_federated("ucfl_k2", fed, fl=SMALL, placement=HostVmap())
+    assert h0.mean_acc == h1.mean_acc
+    assert h0.comm == h1.comm
+
+
+# ---------------------------------------------------------------------------
+# every strategy on every placement (acceptance criterion)
+
+
+@pytest.mark.parametrize("spec", ALL_SPECS)
+@pytest.mark.parametrize("placement_fn", [
+    HostVmap, lambda: MeshShardMap(schedule="gspmd")],
+    ids=["host", "mesh"])
+def test_every_strategy_on_every_placement(spec, placement_fn, fed):
+    h = run_federated(spec, fed, fl=SMALL, system=SYSTEMS["wired"],
+                      placement=placement_fn())
+    assert len(h.mean_acc) == SMALL.rounds
+    assert len(h.comm) == SMALL.rounds
+    assert all(c.n_streams >= 0 and c.n_unicasts >= 0 for c in h.comm)
+    assert h.time[-1] > 0
+
+
+# ---------------------------------------------------------------------------
+# mesh ≈ host across schedules (exact math modulo reduction order)
+
+
+@pytest.mark.parametrize("schedule", ["gspmd", "shard_map_streams",
+                                      "shard_map_unicast"])
+@pytest.mark.parametrize("spec", ["fedavg", "ucfl_k2", "local"])
+def test_mesh_matches_host(spec, schedule, fed):
+    host = run_federated(spec, fed, fl=SMALL, placement=HostVmap())
+    mesh = run_federated(spec, fed, fl=SMALL,
+                         placement=MeshShardMap(schedule=schedule))
+    np.testing.assert_allclose(host.mean_acc, mesh.mean_acc, atol=2e-2)
+    np.testing.assert_allclose(host.worst_acc, mesh.worst_acc, atol=2e-2)
+    assert host.comm == mesh.comm
+
+
+def test_mesh_uses_available_devices(fed):
+    p = MeshShardMap()
+    run_federated("fedavg", fed, fl=FLConfig(rounds=1, local_steps=1,
+                                             batch_size=8, eval_every=1),
+                  placement=p)
+    n_dev = len(jax.devices())
+    expected = max(k for k in range(1, min(n_dev, fed.m) + 1)
+                   if fed.m % k == 0)
+    assert p.mesh.shape["clients"] == expected
+
+
+def test_mesh_placement_reusable_across_client_counts(fed):
+    """One auto-mesh instance drives sweeps over scenarios with different
+    m: the mesh (and the cached mix executables) re-derive per m."""
+    p = MeshShardMap(schedule="shard_map_streams")
+    fl = FLConfig(rounds=1, local_steps=1, batch_size=8, eval_every=1)
+    h1 = run_federated("ucfl_k2", fed, fl=fl, placement=p)
+    fed5 = scenario_label_shift(KEY, n=300, m=5)
+    h2 = run_federated("ucfl_k2", fed5, fl=fl, placement=p)
+    assert len(h1.mean_acc) == 1 and len(h2.mean_acc) == 1
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >1 device to build an indivisible mesh")
+def test_mesh_rejects_indivisible_mesh():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:2]), ("clients",))
+    p = MeshShardMap(mesh)
+    with pytest.raises(ValueError, match="divisible"):
+        p._ensure_mesh(5)
+
+
+def test_mesh_unknown_schedule_raises():
+    with pytest.raises(ValueError, match="schedule"):
+        MeshShardMap(schedule="bogus")
+
+
+# ---------------------------------------------------------------------------
+# kmeans / stream-count edge cases
+
+
+def test_kmeans_k_greater_than_m():
+    rows = jnp.asarray(np.random.default_rng(0).random((3, 3)), jnp.float32)
+    rows = rows / rows.sum(1, keepdims=True)
+    plan = kmeans(rows, 7)              # k clamps to m
+    assert plan.centroids.shape == (3, 3)
+    assert plan.assignment.shape == (3,)
+
+
+def test_kmeans_single_client():
+    rows = jnp.ones((1, 1), jnp.float32)
+    plan = kmeans(rows, 3)
+    assert plan.centroids.shape == (1, 1)
+    assert int(plan.assignment[0]) == 0
+
+
+def test_ucfl_k_exceeding_m_runs(fed):
+    h = run_federated(f"ucfl_k{fed.m + 3}", fed, fl=SMALL)
+    assert len(h.mean_acc) == SMALL.rounds
+    # k clamps to m: per-round downlink is at most m streams
+    assert all(c.n_streams <= fed.m for c in h.comm)
+
+
+def test_single_client_run():
+    fed1 = scenario_label_shift(KEY, n=200, m=1)
+    h = run_federated("ucfl_k2", fed1, fl=FLConfig(
+        rounds=2, local_steps=1, batch_size=8, eval_every=1))
+    assert len(h.mean_acc) == 2
+
+
+# ---------------------------------------------------------------------------
+# train CLI: registry-validated specs (regression for the old split("_k"))
+
+
+def test_train_cli_bad_spec_raises_registry_error():
+    from repro.launch.train import main
+    with pytest.raises(ValueError, match="unknown strategy spec"):
+        main(["--algorithm", "ucfl_k"])          # old code: IndexError
+    with pytest.raises(ValueError, match="unknown strategy spec"):
+        main(["--algorithm", "fedprox"])
+    with pytest.raises(ValueError, match="no _k parameter"):
+        main(["--algorithm", "local_k2"])
+
+
+@pytest.mark.slow
+def test_train_cli_mesh_smoke():
+    from repro.launch.train import main
+    loss = main(["--steps", "2", "--clients", "2", "--eval-every", "1",
+                 "--algorithm", "fedavg", "--pool", "8", "--seq", "32",
+                 "--batch", "2"])
+    assert np.isfinite(loss)
