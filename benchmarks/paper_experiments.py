@@ -43,15 +43,16 @@ def scenario_params(quick: bool):
     }, FLConfig(rounds=30, local_steps=5, batch_size=32, eval_every=3)
 
 
-def _system_time_axes(comm_log, eval_rounds, m: int) -> dict:
+def _system_time_axes(comm_log, eval_rounds, n_participants: int) -> dict:
     """Fig.3 time axes for every SystemModel from one run's per-round
     (n_streams, n_unicasts) log — the accuracy trace is system-independent,
-    only the clock differs, so no re-run is needed."""
+    only the clock differs, so no re-run is needed.  ``n_participants`` is
+    the per-round cohort size: a round waits for H_|S| stragglers."""
     axes = {}
     for sysname, sysm in SYSTEMS.items():
         t, cum = 0.0, []
         for ns, nu in comm_log:
-            t += sysm.round_time(m, n_streams=ns, n_unicasts=nu)
+            t += sysm.round_time(n_participants, n_streams=ns, n_unicasts=nu)
             cum.append(t)
         axes[sysname] = [cum[r] for r in eval_rounds]
     return axes
@@ -79,7 +80,8 @@ def run_scenario(name: str, params: dict, fl: FLConfig, trials: int,
             "mean_acc": np.mean([r.mean_acc for r in runs], 0).tolist(),
             "worst_acc": np.mean([r.worst_acc for r in runs], 0).tolist(),
             "time_by_system": _system_time_axes(
-                runs[0].extra["comm_per_round"], runs[0].rounds, params["m"]),
+                runs[0].extra["comm_per_round"], runs[0].rounds,
+                max(1, int(round(participation * params["m"])))),
             "final_mean": float(np.mean([r.mean_acc[-1] for r in runs])),
             "final_worst": float(np.mean([r.worst_acc[-1] for r in runs])),
             "wall_seconds": time.time() - t0,

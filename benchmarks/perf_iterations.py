@@ -18,6 +18,7 @@ narrative log.
 
     PYTHONPATH=src python -m benchmarks.perf_iterations [--group NAME]
     PYTHONPATH=src python -m benchmarks.perf_iterations --round-engine
+    PYTHONPATH=src python -m benchmarks.perf_iterations --async-engine
 
 MUST run standalone: the dry-run groups force 512 host devices (via the
 repro.launch.dryrun import) and --round-engine forces 8, both through
@@ -266,6 +267,64 @@ def round_engine_bench(rounds: int = 8):
     return rows
 
 
+def async_engine_bench(rounds_sync: int = 16, events_async: int = 48,
+                       seed: int = 0):
+    """Time-to-target-accuracy: sync vs buffered-async per strategy
+    -> BENCH_async.json.
+
+    Paper-shaped miniature (LeNet, m=8 label-shift clients) under the
+    unreliable wireless system (inv_mu=1, rho=4): the synchronous engine
+    charges every round the analytic straggler maximum (H_m/μ) while the
+    async runtime's virtual clock waits only for the K-th earliest arrival
+    (K = m/2).  Per strategy the sync run's final mean accuracy is the
+    TARGET; the async run records the virtual-clock time of the first eval
+    that reaches it.  ``async_wins`` = reached the target at lower clock
+    time than the sync run's end.
+    """
+    import jax
+    from repro.data.federated import scenario_label_shift
+    from repro.fl import AsyncConfig, FLConfig, SYSTEMS, run_federated
+
+    fed = scenario_label_shift(jax.random.PRNGKey(seed), n=800, m=8)
+    system = SYSTEMS["wireless_slow"]
+    async_cfg = AsyncConfig(buffer_k=fed.m // 2, max_staleness=None,
+                            staleness_discount=0.9)
+    specs = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2", "cfl",
+             "fedfomo"]
+    fl_sync = FLConfig(rounds=rounds_sync, local_steps=4, batch_size=32,
+                       eval_every=2, cfl_min_rounds=4)
+    fl_async = FLConfig(rounds=events_async, local_steps=4, batch_size=32,
+                        eval_every=2, cfl_min_rounds=4)
+    rows = []
+    for spec in specs:
+        hs = run_federated(spec, fed, fl=fl_sync, system=system, seed=seed)
+        target, t_sync = hs.mean_acc[-1], hs.time[-1]
+        ha = run_federated(spec, fed, fl=fl_async, system=system, seed=seed,
+                           async_cfg=async_cfg)
+        hit = next(((t, a) for t, a in zip(ha.time, ha.mean_acc)
+                    if a >= target), None)
+        rows.append({
+            "strategy": spec, "m": fed.m, "system": system.name,
+            "buffer_k": async_cfg.buffer_k,
+            "staleness_discount": async_cfg.staleness_discount,
+            "sync_rounds": rounds_sync, "async_events": events_async,
+            "target_mean_acc": target, "sync_time": t_sync,
+            "async_time_to_target": None if hit is None else hit[0],
+            "async_final_acc": ha.mean_acc[-1],
+            "async_final_time": ha.time[-1],
+            "async_wins": hit is not None and hit[0] < t_sync,
+        })
+        print(f"{spec:10s} target={target:.3f} sync_t={t_sync:7.1f} "
+              + (f"async_t={hit[0]:7.1f} wins={hit[0] < t_sync}"
+                 if hit else "async: target not reached"))
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_async.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
@@ -273,9 +332,15 @@ def main(argv=None):
     p.add_argument("--round-engine", action="store_true",
                    help="benchmark the federated round engine per "
                         "placement × schedule instead of dry-run variants")
+    p.add_argument("--async-engine", action="store_true",
+                   help="time-to-target-accuracy of the buffered-async "
+                        "runtime vs the sync engine, per strategy")
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
+        return
+    if args.async_engine:
+        async_engine_bench()
         return
     # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
     from repro.launch.dryrun import run_case

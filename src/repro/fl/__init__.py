@@ -2,6 +2,7 @@ from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
 from repro.fl.placement import HostVmap, MeshShardMap, Placement
 from repro.fl.simulator import (FLConfig, History, evaluate, run_federated)
+from repro.fl.runtime import AsyncConfig, VirtualClock, run_async
 from repro.fl.stats import full_client_gradients, sigma2_estimates
 from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
                                  FullParticipation, MixingExtras,
@@ -9,7 +10,8 @@ from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
                                  UniformFraction, available_strategies,
                                  get_strategy, get_strategy_class, register)
 
-__all__ = ["HostVmap", "MeshShardMap", "Placement",
+__all__ = ["AsyncConfig", "VirtualClock", "run_async",
+           "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",
            "History", "evaluate", "run_federated", "full_client_gradients",

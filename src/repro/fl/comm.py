@@ -46,7 +46,19 @@ class SystemModel:
 
     def round_time(self, m: int, *, n_streams: int = 1,
                    n_unicasts: int = 0) -> float:
+        """Analytic synchronous round: E[max of m stragglers] + UL + DL.
+        ``m`` is the PARTICIPANT count — a round only waits for the clients
+        that actually compute (H_|S|, not H_m, under partial sampling)."""
         return self.compute_time(m) + self.rho + n_streams + n_unicasts
+
+    def sample_client_time(self, rng) -> float:
+        """One client's download-to-upload latency draw for the async
+        runtime (DESIGN.md §3a): the same shifted-exponential compute law
+        whose order statistics give the analytic ``E[max] = t_min + H_m/μ``,
+        plus the uplink.  ``inv_mu=0`` degenerates to the deterministic
+        ``t_min + rho`` (every client identical — lockstep arrivals)."""
+        extra = float(rng.exponential(self.inv_mu)) if self.inv_mu else 0.0
+        return self.t_min + extra + self.rho
 
 
 # the three systems of Fig. 3

@@ -49,12 +49,15 @@ class Placement(abc.ABC):
     name: ClassVar[str]
 
     @abc.abstractmethod
-    def build_update(self, loss_fn: Callable, fl: Any
-                     ) -> Tuple[Any, Callable]:
+    def build_update(self, loss_fn: Callable, fl: Any, *,
+                     donate: bool = False) -> Tuple[Any, Callable]:
         """Returns ``(opt, update_fn)`` where ``update_fn(stacked, opt_state,
         x, y, n, ckeys) -> (stacked', opt_state')`` runs every client's
         local SGD.  Implementations cache the jitted step across calls
-        (sweeps re-enter `run_federated` with identical configs)."""
+        (sweeps re-enter `run_federated` with identical configs).
+        ``donate=True`` donates the input stacked/opt buffers to the step
+        (they are dead after the call) — the engine requests it when no
+        sampler needs rollback and the strategy never reads `prev`."""
 
     @abc.abstractmethod
     def stack(self, params0: Any, m: int) -> Any:
@@ -74,6 +77,23 @@ class Placement(abc.ABC):
     def select(self, mask: jnp.ndarray, new: Any, old: Any) -> Any:
         """Participation rollback: keep `old` where ``mask`` is False."""
         return where_clients(mask, new, old)
+
+    def update_cohort(self, update_fn: Callable, idx: jnp.ndarray,
+                      keep: jnp.ndarray, stacked: Any, opt_state: Any,
+                      x: Any, y: Any, n: Any, ckeys: jnp.ndarray
+                      ) -> Tuple[Any, Any]:
+        """Run the local update for the cohort ``idx`` (k,) only, merging
+        back the rows where ``keep`` (k,) is True; every other client row
+        is untouched (the async runtime's per-event step, DESIGN.md §3a).
+
+        Default: run every slot and mask — the static-layout path sharded
+        placements need.  `HostVmap` overrides with a gather/scatter so an
+        event costs O(k) local-update compute, not O(m)."""
+        m = ckeys.shape[0]
+        mask = jnp.zeros((m,), dtype=bool).at[idx].set(keep)
+        upd, upd_opt = update_fn(stacked, opt_state, x, y, n, ckeys)
+        return (self.select(mask, upd, stacked),
+                self.select(mask, upd_opt, opt_state))
 
     @abc.abstractmethod
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:

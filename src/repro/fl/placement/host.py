@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.core import stream_aggregate, user_centric_aggregate
 from repro.core.streams import StreamPlan
 from repro.data.federated import FederatedData
-from repro.fl.placement.base import Placement, stack_params
+from repro.fl.placement.base import (Placement, stack_params,
+                                     where_clients)
 from repro.optim import apply_updates, sgd
 
 
@@ -56,15 +57,20 @@ class _UpdateConfig:
 
 @functools.lru_cache(maxsize=16)
 def cached_update(loss_fn: Callable, local_steps: int, batch_size: int,
-                  lr: float, momentum: float, state_dtype=None
-                  ) -> Tuple[Any, Callable]:
+                  lr: float, momentum: float, state_dtype=None,
+                  donate: bool = False) -> Tuple[Any, Callable]:
     """(opt, jit(vmap(client_update))) memoized on everything the step
     closes over — repeated `run_federated` calls with the same config
-    reuse the compiled executable instead of re-tracing per run."""
+    reuse the compiled executable instead of re-tracing per run.
+    ``donate=True`` donates the stacked params/opt-state arguments, so the
+    step updates in place instead of holding two copies of the client
+    stack (the engine's buffer-donation memory lever)."""
     opt = sgd(lr, momentum=momentum, state_dtype=state_dtype)
     client_update = make_client_update(
         loss_fn, opt, _UpdateConfig(local_steps, batch_size))
-    return opt, jax.jit(jax.vmap(client_update))
+    step = jax.vmap(client_update)
+    return opt, (jax.jit(step, donate_argnums=(0, 1)) if donate
+                 else jax.jit(step))
 
 
 @functools.lru_cache(maxsize=8)
@@ -84,13 +90,29 @@ class HostVmap(Placement):
 
     name = "host_vmap"
 
-    def build_update(self, loss_fn: Callable, fl) -> Tuple[Any, Callable]:
+    def build_update(self, loss_fn: Callable, fl, *,
+                     donate: bool = False) -> Tuple[Any, Callable]:
         return cached_update(loss_fn, fl.local_steps, fl.batch_size,
                              fl.lr, fl.momentum,
-                             getattr(fl, "opt_state_dtype", None))
+                             getattr(fl, "opt_state_dtype", None), donate)
 
     def stack(self, params0: Any, m: int) -> Any:
         return stack_params(params0, m)
+
+    def update_cohort(self, update_fn, idx, keep, stacked, opt_state,
+                      x, y, n, ckeys):
+        # gather the k cohort rows, update them, scatter the kept ones
+        # back: O(k) local-update compute per async event instead of O(m)
+        # (the jitted step retraces once for the (k, ...) shapes)
+        take = lambda t: jax.tree_util.tree_map(lambda l: l[idx], t)
+        sub, sub_opt = take(stacked), take(opt_state)
+        new_sub, new_opt = update_fn(sub, sub_opt, x[idx], y[idx], n[idx],
+                                     ckeys[idx])
+        new_sub = where_clients(keep, new_sub, sub)
+        new_opt = where_clients(keep, new_opt, sub_opt)
+        scatter = lambda full, s: jax.tree_util.tree_map(
+            lambda l, ls: l.at[idx].set(ls), full, s)
+        return scatter(stacked, new_sub), scatter(opt_state, new_opt)
 
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
         return user_centric_aggregate(stacked, w)

@@ -78,12 +78,13 @@ class MeshShardMap(Placement):
 
     # ---- Placement hooks --------------------------------------------------
 
-    def build_update(self, loss_fn: Callable, fl) -> Tuple[Any, Callable]:
+    def build_update(self, loss_fn: Callable, fl, *,
+                     donate: bool = False) -> Tuple[Any, Callable]:
         # same cached jitted step as HostVmap: the jit re-specializes on the
         # sharded inputs, so the client vmap runs data-parallel over `axis`
         return cached_update(loss_fn, fl.local_steps, fl.batch_size,
                              fl.lr, fl.momentum,
-                             getattr(fl, "opt_state_dtype", None))
+                             getattr(fl, "opt_state_dtype", None), donate)
 
     def stack(self, params0: Any, m: int) -> Any:
         self._ensure_mesh(m)

@@ -1,0 +1,11 @@
+"""Event-driven async federated runtime (DESIGN.md §3a).
+
+`run_async` runs buffered staleness-aware aggregation events over a
+`VirtualClock` instead of bulk-synchronous rounds; `AsyncConfig` holds the
+buffer/staleness knobs.  `run_federated(..., async_cfg=AsyncConfig(...))`
+delegates here, so the sync and async engines share one call surface.
+"""
+from repro.fl.runtime.clock import VirtualClock
+from repro.fl.runtime.engine import AsyncConfig, run_async
+
+__all__ = ["AsyncConfig", "VirtualClock", "run_async"]

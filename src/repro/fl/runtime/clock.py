@@ -1,0 +1,60 @@
+"""Virtual clock for the async runtime (DESIGN.md §3a).
+
+Event-driven simulated wall-clock over per-client upload arrivals.  Each
+`schedule(client, start)` draws one client round-trip from the
+`SystemModel`'s shifted-exponential compute law (`t_min + Exp(1/μ) + ρ`,
+units of T_dl — the law whose max-order-statistic gives the synchronous
+engine's analytic `E[max] = t_min + H_m/μ`) and pushes the arrival onto a
+heap; `pop()` returns the earliest pending arrival and advances `now`.
+
+The parameter-server downlink is a serialized resource, mirroring the
+synchronous model where every round pays its broadcast streams in full:
+`serve(duration)` occupies the downlink and returns the completion time,
+queueing behind any broadcast still in flight.
+
+Determinism: draws come from a private `numpy` Generator (the engine's JAX
+key stream is never touched, preserving sync↔async bit-equivalence), and
+heap ties break on client index — with `inv_mu=0` every draw is exactly
+`t_min + ρ`, so arrivals pop in lockstep client order.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Tuple
+
+import numpy as np
+
+from repro.fl.comm import SystemModel
+
+
+class VirtualClock:
+    """Per-client arrival heap + serialized server downlink."""
+
+    def __init__(self, system: SystemModel, seed: int = 0):
+        self.system = system
+        self._rng = np.random.default_rng(seed)
+        self._heap = []
+        self.now = 0.0              # time of the latest popped arrival
+        self._busy_until = 0.0      # downlink occupied through this time
+
+    def schedule(self, client: int, start: float) -> float:
+        """Client downloads at ``start``; returns its sampled arrival time."""
+        t = start + self.system.sample_client_time(self._rng)
+        heapq.heappush(self._heap, (t, int(client)))
+        return t
+
+    def pop(self) -> Tuple[float, int]:
+        """(arrival_time, client) of the earliest pending upload."""
+        t, c = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, c
+
+    def serve(self, duration: float) -> float:
+        """Occupy the server downlink for ``duration`` starting no earlier
+        than ``now``; returns the broadcast completion time."""
+        done = max(self.now, self._busy_until) + duration
+        self._busy_until = done
+        return done
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,193 @@
+"""Buffered-asynchronous federated round engine (DESIGN.md §3a).
+
+The synchronous engine (`repro.fl.simulator.run_federated`) makes every
+round wait for the slowest of m shifted-exponential stragglers.  This
+runtime replaces that barrier with an event-driven loop over a
+`VirtualClock`: every client trains continuously and uploads when its
+sampled compute finishes; the server buffers arrivals and fires one
+aggregation EVENT whenever `AsyncConfig.buffer_k` updates are queued
+(FedBuff-style).  At each event
+
+  * buffered updates older than ``max_staleness`` server versions are
+    dropped (their clients still re-download and restart);
+  * the strategy's aggregation runs unmodified — ``ctx.participation``
+    masks the fresh cohort and ``ctx.staleness`` carries every
+    contributor's model age, which `ctx.mix`/`ctx.mix_plan` route through
+    `Strategy.reweight` (default: mass-preserving ``λ**age`` column
+    discount);
+  * only the buffered clients download the new mix — in-flight clients
+    keep training on the model they last pulled — so the event is charged
+    (and `History.comm` records) only the cohort's downlink: at most K
+    broadcast streams plus the cohort's share of per-client unicasts;
+  * `History.time` records the event-driven virtual clock (arrival of the
+    K-th update + serialized downlink), replacing the analytic max.
+
+Equivalence anchor (tested): with ``inv_mu=0``, ``buffer_k=m`` and
+unbounded staleness every event is a lockstep full-participation round —
+the same key schedule, update step and aggregation path as the sync
+engine, bit-for-bit on `HostVmap`.
+
+Both placements work: `HostVmap` masks cohorts via `placement.select`;
+`MeshShardMap` reuses the schedule-selected `mix_schedule` collectives.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedData
+from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.placement import Placement, resolve_placement
+from repro.fl.runtime.clock import VirtualClock
+from repro.fl.simulator import (FLConfig, History, finalize_history,
+                                init_run, resolve_strategy)
+from repro.fl.strategies import CommCost, Strategy
+from repro.models import lenet
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the buffered-asynchronous server (DESIGN.md §3a).
+
+    buffer_k:           aggregation fires when this many client uploads are
+                        buffered (clamped to m; K=m with a reliable system
+                        degenerates to the synchronous engine).
+    max_staleness:      drop buffered updates whose base model is older than
+                        this many server versions (None = keep everything).
+    staleness_discount: λ of the default `Strategy.reweight` column
+                        discount ``λ**age`` (1.0 = no discounting).
+    """
+    buffer_k: int = 2
+    max_staleness: Optional[float] = None
+    staleness_discount: float = 0.9
+
+    def __post_init__(self):
+        if self.buffer_k < 1:
+            raise ValueError(f"buffer_k must be >= 1, got {self.buffer_k}")
+        if not 0.0 < self.staleness_discount <= 1.0:
+            raise ValueError("staleness_discount must be in (0, 1], got "
+                             f"{self.staleness_discount}")
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0 or None, got "
+                             f"{self.max_staleness}")
+
+
+def run_async(algorithm: Union[str, Strategy, None] = None,
+              fed: Optional[FederatedData] = None, *,
+              strategy: Optional[Strategy] = None,
+              async_cfg: Optional[AsyncConfig] = None,
+              fl: Optional[FLConfig] = None,
+              model_init: Optional[Callable] = None,
+              loss_fn: Callable = lenet.loss_fn,
+              acc_fn: Callable = lenet.accuracy,
+              system: Optional[SystemModel] = None,
+              placement: Optional[Placement] = None,
+              keep_state: bool = False,
+              seed: int = 0) -> History:
+    """Run `fl.rounds` buffered-async aggregation events; returns History.
+
+    Same surface as `run_federated` (which delegates here when passed
+    ``async_cfg=``), minus ``sampler`` — the arrival buffer IS the per-event
+    cohort.  ``system`` drives the virtual clock (default: the reliable
+    ``wired`` model, i.e. deterministic lockstep arrivals).
+    """
+    strategy = resolve_strategy(algorithm, strategy)
+    if fed is None:
+        raise TypeError("`fed` is required")
+    cfg = AsyncConfig() if async_cfg is None else async_cfg
+    fl = FLConfig() if fl is None else fl
+    system = SYSTEMS["wired"] if system is None else system
+    placement = resolve_placement(placement)
+
+    m = fed.m
+    k_buf = min(cfg.buffer_k, m)
+    tau = np.inf if cfg.max_staleness is None else float(cfg.max_staleness)
+
+    # identical init path to the sync engine (bit-equivalence anchor); no
+    # donation — every event rolls in-flight clients back against `prev`
+    key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
+        init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
+                 placement, seed)
+    ctx.staleness_discount = cfg.staleness_discount
+
+    # clock draws come from a private numpy stream — the JAX key schedule
+    # below stays exactly the sync engine's
+    clock = VirtualClock(system, seed=seed)
+    for i in range(m):
+        clock.schedule(i, 0.0)
+    # server version at each client's last model download; a model/update's
+    # age at event e is  e - version[i]
+    version = np.zeros(m, dtype=np.int64)
+
+    history = History()
+    t_done = 0.0
+
+    for event in range(fl.rounds):
+        buffered = [clock.pop()[1] for _ in range(k_buf)]
+        age = event - version                       # (m,) contributor ages
+        fresh_np = np.zeros(m, dtype=bool)
+        fresh_np[[c for c in buffered if age[c] <= tau]] = True
+        all_fresh = bool(fresh_np.all())
+
+        key, kround = jax.random.split(key)
+        ckeys = placement.place_keys(jax.random.split(kround, m))
+        prev, prev_opt = stacked, opt_state
+        if all_fresh:
+            # lockstep event (K=m, nothing stale): the sync engine's step
+            mask = None
+            stacked, opt_state = vmapped_update(stacked, opt_state,
+                                                x, y, n, ckeys)
+        else:
+            # only the fresh cohort's local work lands; in-flight clients
+            # and stale-dropped updates stay at their server-known models
+            mask = jnp.asarray(fresh_np)
+            stacked, opt_state = placement.update_cohort(
+                vmapped_update, jnp.asarray(buffered),
+                jnp.asarray(fresh_np[buffered]), stacked, opt_state,
+                x, y, n, ckeys)
+
+        ctx.rnd, ctx.key, ctx.participation = \
+            event, jax.random.fold_in(kround, 1), mask
+        ctx.staleness = jnp.asarray(age, jnp.float32) if age.any() else None
+        mixed, state = strategy.aggregate(state, stacked, prev, ctx)
+
+        # the buffered clients (fresh AND stale-dropped) pull the new mix
+        # and restart; everyone else is mid-flight and keeps its model
+        down_np = np.zeros(m, dtype=bool)
+        down_np[buffered] = True
+        if down_np.all():
+            stacked = mixed
+        else:
+            stacked = placement.select(jnp.asarray(down_np), mixed, stacked)
+
+        # event-level downlink: only the buffered cohort downloads, so the
+        # server transmits at most k_buf distinct broadcast streams and the
+        # cohort's share of any per-client unicasts (the strategy reports
+        # full-cohort costs; K=m recovers them exactly — lockstep anchor)
+        cost = strategy.comm(state)
+        cost = CommCost(min(cost.n_streams, len(buffered)),
+                        int(round(cost.n_unicasts * len(buffered) / m)))
+        history.comm.append(cost)
+        t_done = clock.serve(cost.n_streams + cost.n_unicasts)
+        for c in buffered:
+            clock.schedule(c, t_done)
+            version[c] = event + 1
+
+        if event % fl.eval_every == 0 or event == fl.rounds - 1:
+            mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
+            history.rounds.append(event)
+            history.mean_acc.append(mean_acc)
+            history.worst_acc.append(worst_acc)
+            history.time.append(t_done)
+
+    history = finalize_history(history, strategy, state, keep_state,
+                               stacked, opt_state)
+    history.extra["async"] = {"buffer_k": k_buf,
+                              "max_staleness": cfg.max_staleness,
+                              "staleness_discount": cfg.staleness_discount,
+                              "events": fl.rounds}
+    return history

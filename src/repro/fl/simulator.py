@@ -17,6 +17,11 @@ Placements (DESIGN.md §3): `HostVmap` (default — all clients stacked on
 one device, paper-scale m=20..100) and `MeshShardMap` (clients sharded
 over a device mesh, mixing via schedule-selected collectives).  The
 mesh CLI `repro.launch.train` drives this same engine.
+
+Passing ``async_cfg=AsyncConfig(...)`` delegates to the event-driven
+buffered-async runtime (`repro.fl.runtime`, DESIGN.md §3a): same
+strategies, same placements, virtual-clock time instead of the analytic
+per-round maximum.
 """
 from __future__ import annotations
 
@@ -61,6 +66,71 @@ class FLConfig:
 # the round engine
 
 
+def default_model_init(fed: FederatedData) -> Callable:
+    """LeNet sized to the scenario's images — shared with the async engine
+    so both runtimes build bit-identical initializations."""
+    in_size, channels = fed.x.shape[2], fed.x.shape[4]
+    n_classes = int(jnp.max(fed.y)) + 1
+    return lambda k: lenet.init_params(
+        k, lenet.LeNetConfig(in_size=in_size, in_channels=channels,
+                             n_classes=max(n_classes, 10)))
+
+
+def resolve_strategy(algorithm: Union[str, Strategy, None],
+                     strategy: Optional[Strategy]) -> Strategy:
+    """spec-string-or-instance -> Strategy (shared by both engines)."""
+    if strategy is not None:
+        if algorithm is not None:
+            raise TypeError("pass either `algorithm` or `strategy=`, not both")
+        return strategy
+    if algorithm is None:
+        raise TypeError("one of `algorithm` or `strategy=` is required")
+    if isinstance(algorithm, Strategy):
+        return algorithm
+    return get_strategy(algorithm)
+
+
+def init_run(strategy: Strategy, fed: FederatedData, fl: "FLConfig",
+             model_init: Optional[Callable], loss_fn: Callable,
+             acc_fn: Callable, placement: Placement, seed: int,
+             donate: bool = False):
+    """Shared run prologue for the sync and async engines: PRNG split,
+    model init, cached update step, client stack/opt/data placement,
+    RoundContext and `strategy.setup`.  Returns
+    ``(key, vmapped_update, stacked, opt_state, data, ctx, state)``."""
+    m = fed.m
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    if model_init is None:
+        model_init = default_model_init(fed)
+    params0 = model_init(kinit)
+    opt, vmapped_update = placement.build_update(loss_fn, fl, donate=donate)
+
+    stacked = placement.stack(params0, m)
+    opt_state = placement.init_opt(opt, stacked)
+    data = placement.place_data(fed)
+
+    ctx = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                       params0=params0, seed=seed, placement=placement,
+                       strategy=strategy)
+    state = strategy.setup(ctx)
+    return key, vmapped_update, stacked, opt_state, data, ctx, state
+
+
+def finalize_history(history: "History", strategy: Strategy, state: Any,
+                     keep_state: bool, stacked: Any, opt_state: Any
+                     ) -> "History":
+    """Shared run epilogue: typed extras, the legacy extra dict, and the
+    optional final device-resident state."""
+    history.extras = strategy.extras(state)
+    history.extra["comm_per_round"] = list(history.comm)
+    if history.extras is not None:
+        history.extra.update(dataclasses.asdict(history.extras))
+    if keep_state:
+        history.final_params, history.final_opt_state = stacked, opt_state
+    return history
+
+
 @dataclass
 class History:
     rounds: List[int] = field(default_factory=list)
@@ -89,6 +159,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   system: Optional[SystemModel] = None,
                   placement: Optional[Placement] = None,
                   keep_state: bool = False,
+                  async_cfg: Optional[Any] = None,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
@@ -98,40 +169,33 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     ``placement`` selects the client layout backend (default `HostVmap`,
     bit-identical to the pre-placement engine); ``keep_state=True``
     attaches the final stacked params / opt state to the History.
+    ``async_cfg`` (an `AsyncConfig`) switches to the event-driven
+    buffered-async runtime (DESIGN.md §3a).
     """
-    if strategy is not None:
-        if algorithm is not None:
-            raise TypeError("pass either `algorithm` or `strategy=`, not both")
-    elif algorithm is None:
-        raise TypeError("one of `algorithm` or `strategy=` is required")
-    elif isinstance(algorithm, Strategy):
-        strategy = algorithm
-    else:
-        strategy = get_strategy(algorithm)
+    if async_cfg is not None:
+        if sampler is not None:
+            raise TypeError("the async runtime takes no ClientSampler — "
+                            "the arrival buffer is the per-event cohort")
+        from repro.fl.runtime import run_async
+        return run_async(algorithm, fed, strategy=strategy,
+                         async_cfg=async_cfg, fl=fl, model_init=model_init,
+                         loss_fn=loss_fn, acc_fn=acc_fn, system=system,
+                         placement=placement, keep_state=keep_state,
+                         seed=seed)
+    strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")
     fl = FLConfig() if fl is None else fl
     placement = resolve_placement(placement)
 
     m = fed.m
-    key = jax.random.PRNGKey(seed)
-    key, kinit = jax.random.split(key)
-    if model_init is None:
-        in_size, channels = fed.x.shape[2], fed.x.shape[4]
-        n_classes = int(jnp.max(fed.y)) + 1
-        model_init = lambda k: lenet.init_params(
-            k, lenet.LeNetConfig(in_size=in_size, in_channels=channels,
-                                 n_classes=max(n_classes, 10)))
-    params0 = model_init(kinit)
-    opt, vmapped_update = placement.build_update(loss_fn, fl)
-
-    stacked = placement.stack(params0, m)
-    opt_state = placement.init_opt(opt, stacked)
-    x, y, n = placement.place_data(fed)
-
-    ctx = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
-                       params0=params0, seed=seed, placement=placement)
-    state = strategy.setup(ctx)
+    # When no sampler can roll clients back and the strategy declares it
+    # never reads `prev`, the update step may consume (donate) the old
+    # stacked/opt buffers — peak memory drops from ~2× params+opt to ~1×.
+    donate = sampler is None and not strategy.reads_prev
+    key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
+        init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
+                 placement, seed, donate=donate)
 
     history = History()
     t_accum = 0.0
@@ -142,7 +206,9 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             key, ksample = jax.random.split(key)
         key, kround = jax.random.split(key)
         ckeys = placement.place_keys(jax.random.split(kround, m))
-        prev, prev_opt = stacked, opt_state
+        # donated buffers are dead after the update call: strategies that
+        # declared reads_prev=False see prev=None
+        prev, prev_opt = (None, None) if donate else (stacked, opt_state)
         stacked, opt_state = vmapped_update(stacked, opt_state, x, y, n,
                                             ckeys)
 
@@ -161,7 +227,10 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         cost = strategy.comm(state)
         history.comm.append(cost)
         if system is not None:
-            t_accum += system.round_time(m, n_streams=cost.n_streams,
+            # the round only waits for the clients that computed: H_|S|
+            # under partial participation, not H_m
+            n_part = m if mask is None else int(jnp.sum(mask))
+            t_accum += system.round_time(n_part, n_streams=cost.n_streams,
                                          n_unicasts=cost.n_unicasts)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
@@ -171,10 +240,5 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             history.worst_acc.append(worst_acc)
             history.time.append(t_accum)
 
-    history.extras = strategy.extras(state)
-    history.extra["comm_per_round"] = list(history.comm)
-    if history.extras is not None:
-        history.extra.update(dataclasses.asdict(history.extras))
-    if keep_state:
-        history.final_params, history.final_opt_state = stacked, opt_state
-    return history
+    return finalize_history(history, strategy, state, keep_state,
+                            stacked, opt_state)

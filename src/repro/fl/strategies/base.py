@@ -39,10 +39,31 @@ class CommCost(NamedTuple):
     n_unicasts: int
 
 
+def staleness_reweight(w: jnp.ndarray, staleness: jnp.ndarray,
+                       discount: float) -> jnp.ndarray:
+    """Discount stale contributor columns of an aggregation-rule matrix.
+
+    ``w`` is any (r, m) weight matrix whose COLUMNS index contributing
+    client models; ``staleness[j]`` is the age of model j in server
+    versions (async runtime, DESIGN.md §3a).  Each column is scaled by
+    ``discount ** staleness[j]`` and each row rescaled back to its ORIGINAL
+    total mass — row-stochastic rules stay row-stochastic, and FedFOMO's
+    sub-stochastic rows keep their self-residual.  All-zero staleness (or
+    ``discount == 1``) is an exact identity.
+    """
+    d = jnp.asarray(discount, jnp.float32) ** \
+        jnp.asarray(staleness, jnp.float32)
+    wd = w * d[None, :].astype(w.dtype)
+    mass = jnp.sum(w, axis=1, keepdims=True)
+    new_mass = jnp.sum(wd, axis=1, keepdims=True)
+    return (wd * (mass / jnp.maximum(new_mass, 1e-12))).astype(w.dtype)
+
+
 @dataclass
 class RoundContext:
     """Everything a strategy may read about the run; mutated per round by
-    the engine (``rnd``, ``key``, ``participation``)."""
+    the engine (``rnd``, ``key``, ``participation``; async runs also set
+    ``staleness``)."""
     fed: FederatedData
     fl: Any                         # FLConfig (kept untyped to avoid a cycle)
     loss_fn: Callable
@@ -53,6 +74,11 @@ class RoundContext:
     key: Optional[jnp.ndarray] = None       # this round's PRNG key
     participation: Optional[jnp.ndarray] = None  # (m,) bool mask or None=all
     placement: Optional[Any] = None  # Placement backend (DESIGN.md §3)
+    # async runtime (DESIGN.md §3a): per-client model age in server versions
+    # (None for sync rounds and for async events where every model is fresh)
+    staleness: Optional[jnp.ndarray] = None
+    staleness_discount: float = 1.0
+    strategy: Optional[Any] = None  # the running Strategy, for `reweight`
 
     @property
     def m(self) -> int:
@@ -61,10 +87,23 @@ class RoundContext:
     # Strategies apply their aggregation rules through these two hooks so
     # the SAME strategy code runs under every placement backend: HostVmap
     # dispatches to the plain stacked-pytree math, MeshShardMap to the
-    # schedule-selected mixing collectives.
+    # schedule-selected mixing collectives.  Under the async runtime the
+    # hooks also route the weights through `Strategy.reweight`, so every
+    # registered strategy picks up staleness discounting unmodified.
+
+    def reweighted(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Staleness-discounted view of ``w``, routed through
+        `Strategy.reweight` (whose default is the identity for sync
+        rounds, where ``staleness`` is None)."""
+        if self.strategy is not None:
+            return self.strategy.reweight(w, self)
+        if self.staleness is None:   # engine-less driving with no strategy
+            return w
+        return staleness_reweight(w, self.staleness, self.staleness_discount)
 
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
         """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
+        w = self.reweighted(w)
         if self.placement is None:
             from repro.core import user_centric_aggregate
             return user_centric_aggregate(stacked, w)
@@ -72,6 +111,8 @@ class RoundContext:
 
     def mix_plan(self, stacked: Any, plan: Any) -> Any:
         """k-stream aggregation: centroid mix + group broadcast."""
+        if self.staleness is not None:
+            plan = plan._replace(centroids=self.reweighted(plan.centroids))
         if self.placement is None:
             from repro.core import stream_aggregate
             return stream_aggregate(stacked, plan)
@@ -100,6 +141,12 @@ class Strategy(abc.ABC):
 
     name: ClassVar[str]
 
+    # Whether `aggregate` reads its `prev` argument.  When False and no
+    # sampler is set, the engine donates the stacked params/opt-state
+    # buffers to the local-update step (halving peak memory) and passes
+    # ``prev=None`` — declare False only if `aggregate` never touches it.
+    reads_prev: ClassVar[bool] = True
+
     @property
     def spec(self) -> str:
         """Registry spec string that reconstructs this instance."""
@@ -123,6 +170,18 @@ class Strategy(abc.ABC):
     def extras(self, state: Any) -> Optional[StrategyExtras]:
         """Typed end-of-run results for `History.extras`."""
         return None
+
+    def reweight(self, w: jnp.ndarray, ctx: RoundContext) -> jnp.ndarray:
+        """Staleness hook (DESIGN.md §3a): `ctx.mix` routes every weight
+        matrix through here (`ctx.mix_plan` its centroids, when the run
+        carries staleness).  Default: identity for sync rounds
+        (``ctx.staleness`` is None); under the async runtime, stale
+        contributor columns are discounted by ``ctx.staleness_discount **
+        age``, mass-preserving per row.  Override for strategy-specific
+        staleness handling."""
+        if ctx.staleness is None:
+            return w
+        return staleness_reweight(w, ctx.staleness, ctx.staleness_discount)
 
     @classmethod
     def downlink_cost(cls, m: int, *, n_streams: int = 1,

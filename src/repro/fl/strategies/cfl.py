@@ -24,6 +24,7 @@ class CFL(Strategy):
     """State = the host-side (m,) cluster assignment, refined over rounds."""
 
     name = "cfl"
+    reads_prev = True       # deltas = stacked − prev drive the bipartition
 
     def setup(self, ctx: RoundContext) -> np.ndarray:
         return np.zeros(ctx.fed.m, dtype=int)

@@ -9,6 +9,7 @@ from repro.fl.strategies.registry import register
 @register
 class FedAvg(Strategy):
     name = "fedavg"
+    reads_prev = False      # engine may donate the pre-round buffers
 
     def setup(self, ctx: RoundContext):
         return fedavg_weights(ctx.fed.n)          # (m, m), every row n/Σn

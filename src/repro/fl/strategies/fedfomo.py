@@ -63,6 +63,7 @@ def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
 @register
 class FedFOMO(Strategy):
     name = "fedfomo"
+    reads_prev = True       # candidate weighting compares against prev
 
     def __init__(self, candidates: Optional[int] = None):
         self.candidates = candidates   # None -> FLConfig.fomo_candidates

@@ -8,6 +8,7 @@ from repro.fl.strategies.registry import register
 @register
 class Local(Strategy):
     name = "local"
+    reads_prev = False      # engine may donate the pre-round buffers
 
     def aggregate(self, state, stacked, prev, ctx):
         return stacked, state

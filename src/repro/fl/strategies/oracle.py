@@ -19,6 +19,7 @@ class OracleState(NamedTuple):
 @register
 class Oracle(Strategy):
     name = "oracle"
+    reads_prev = False      # engine may donate the pre-round buffers
 
     def setup(self, ctx: RoundContext) -> OracleState:
         group = np.asarray(ctx.fed.group)

@@ -36,19 +36,29 @@ class FullParticipation(ClientSampler):
 
 
 class UniformFraction(ClientSampler):
-    """Uniformly sample ``round(fraction * m)`` clients per round without
-    replacement (at least ``min_clients``)."""
+    """Uniformly sample a per-round cohort without replacement: either
+    ``round(fraction * m)`` clients (at least ``min_clients``) or an exact
+    ``count`` — the latter lets async arrival tests pin cohort sizes."""
 
     needs_key = True
 
-    def __init__(self, fraction: float, min_clients: int = 1):
-        if not 0.0 < fraction <= 1.0:
+    def __init__(self, fraction: Optional[float] = None,
+                 min_clients: int = 1, *, count: Optional[int] = None):
+        if (fraction is None) == (count is None):
+            raise ValueError("pass exactly one of `fraction` or `count`")
+        if fraction is not None and not 0.0 < fraction <= 1.0:
             raise ValueError(f"fraction must be in (0, 1], got {fraction}")
-        self.fraction = float(fraction)
+        if count is not None and count < 1:
+            raise ValueError(f"count must be >= 1, got {count}")
+        self.fraction = None if fraction is None else float(fraction)
+        self.count = None if count is None else int(count)
         self.min_clients = int(min_clients)
 
     def sample(self, rnd, m, key):
-        k = min(m, max(self.min_clients, int(round(self.fraction * m))))
+        if self.count is not None:
+            k = min(m, max(self.min_clients, self.count))
+        else:
+            k = min(m, max(self.min_clients, int(round(self.fraction * m))))
         if k >= m:
             return None
         idx = jax.random.permutation(key, m)[:k]

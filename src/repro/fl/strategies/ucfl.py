@@ -34,6 +34,7 @@ class UCFLState(NamedTuple):
 @register
 class UCFL(Strategy):
     name = "ucfl"
+    reads_prev = False      # engine may donate the pre-round buffers
 
     def __init__(self, k: Optional[int] = None):
         if k is not None and k < 1:

@@ -13,6 +13,11 @@ exactly as in the host simulator: there is no mesh-specific round loop.
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
         --preset cpu-small --steps 20 --algorithm ucfl_k2 --clients 4
 
+``--async [--buffer-k K --max-staleness TAU --staleness-discount L]``
+switches to the buffered-async runtime (DESIGN.md §3a): `--steps` then
+counts aggregation EVENTS and the reported time is the event-driven
+virtual clock, not the analytic per-round maximum.
+
 Presets: cpu-small (~5M params, CPU-friendly), lm-100m (~100M params — the
 deliverable-scale run for real hardware), full (the assigned config).
 """
@@ -31,7 +36,7 @@ from repro.checkpoint import save_train_state
 from repro.configs import get_config, reduced
 from repro.data.federated import FederatedData
 from repro.data.synthetic import synthetic_lm_tokens
-from repro.fl import (FLConfig, HostVmap, MeshShardMap, SYSTEMS,
+from repro.fl import (AsyncConfig, FLConfig, HostVmap, MeshShardMap, SYSTEMS,
                       UniformFraction, get_strategy, run_federated)
 from repro.launch.steps import _loss_fn, init_model_params
 
@@ -104,8 +109,19 @@ def main(argv=None):
                             "shard_map_unicast"))
     p.add_argument("--participation", type=float, default=1.0,
                    help="per-round client fraction (UniformFraction)")
+    p.add_argument("--async", dest="run_async", action="store_true",
+                   help="buffered-async runtime (DESIGN.md §3a): event-"
+                        "driven virtual clock instead of sync rounds")
+    p.add_argument("--buffer-k", type=int, default=2,
+                   help="async: aggregate once this many uploads buffer")
+    p.add_argument("--max-staleness", type=float, default=None,
+                   help="async: drop updates older than this many server "
+                        "versions (default: keep all)")
+    p.add_argument("--staleness-discount", type=float, default=0.9,
+                   help="async: λ of the λ**age contributor discount")
     p.add_argument("--system", default="wired", choices=tuple(SYSTEMS),
-                   help="analytic clock (paper §IV-C)")
+                   help="analytic clock (paper §IV-C); in --async mode "
+                        "also the virtual clock's arrival law")
     p.add_argument("--eval-every", type=int, default=5)
     p.add_argument("--checkpoint", default="")
     p.add_argument("--seed", type=int, default=0)
@@ -132,18 +148,27 @@ def main(argv=None):
                   batch_size=args.batch, eval_every=args.eval_every,
                   momentum=0.0 if pod else 0.9,
                   opt_state_dtype=None if pod else "param")
+    async_cfg = None
+    if args.run_async:
+        if args.participation < 1.0:
+            p.error("--participation is a sync-only knob: the async "
+                    "arrival buffer is the per-event cohort")
+        async_cfg = AsyncConfig(buffer_k=args.buffer_k,
+                                max_staleness=args.max_staleness,
+                                staleness_discount=args.staleness_discount)
     sampler = (UniformFraction(args.participation)
                if args.participation < 1.0 else None)
 
     print(f"arch={cfg.name} preset={args.preset} clients={m} "
-          f"alg={strategy.spec} placement={placement!r}")
+          f"alg={strategy.spec} placement={placement!r}"
+          + (f" async={async_cfg}" if async_cfg else ""))
     t0 = time.time()
     history = run_federated(
         strategy=strategy, fed=fed, fl=fl, sampler=sampler,
         model_init=lambda k: init_model_params(k, cfg),
         loss_fn=loss_fn, acc_fn=acc_fn, system=SYSTEMS[args.system],
         placement=placement, keep_state=bool(args.checkpoint),
-        seed=args.seed)
+        async_cfg=async_cfg, seed=args.seed)
 
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(
         jax.eval_shape(lambda k: init_model_params(k, cfg),

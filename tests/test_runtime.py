@@ -1,0 +1,279 @@
+"""Async round runtime (DESIGN.md §3a): virtual-clock determinism,
+staleness reweighting, sync↔async lockstep bit-equivalence, buffer
+semantics, engine buffer donation, and a mesh async smoke.
+
+CI's async-smoke job re-runs this file under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the mesh tests
+exercise real (host) collectives.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.federated import scenario_label_shift
+from repro.fl import (AsyncConfig, FLConfig, HostVmap, MeshShardMap,
+                      SystemModel, UniformFraction, VirtualClock,
+                      run_federated)
+from repro.fl.strategies import STRATEGIES
+from repro.fl.strategies.base import staleness_reweight
+
+KEY = jax.random.PRNGKey(0)
+SMALL = FLConfig(rounds=3, local_steps=2, batch_size=16, eval_every=1,
+                 cfl_min_rounds=1)
+RELIABLE = SystemModel(rho=2.0, t_min=1.0, inv_mu=0.0, name="reliable")
+STRAGGLER = SystemModel(rho=2.0, t_min=1.0, inv_mu=1.0, name="straggler")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=4)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+
+
+def test_clock_deterministic_given_seed():
+    a, b = VirtualClock(STRAGGLER, seed=7), VirtualClock(STRAGGLER, seed=7)
+    for i in range(5):
+        assert a.schedule(i, 0.0) == b.schedule(i, 0.0)
+    assert [a.pop() for _ in range(5)] == [b.pop() for _ in range(5)]
+
+
+def test_clock_lockstep_pops_in_client_order():
+    """inv_mu=0: every draw is exactly t_min + rho, ties break on index."""
+    c = VirtualClock(RELIABLE, seed=0)
+    for i in reversed(range(4)):
+        c.schedule(i, 0.0)
+    assert [c.pop() for _ in range(4)] == [(3.0, i) for i in range(4)]
+    assert c.now == 3.0
+
+
+def test_clock_serialized_downlink():
+    c = VirtualClock(RELIABLE, seed=0)
+    assert c.serve(2.0) == 2.0
+    assert c.serve(1.0) == 3.0          # queues behind the first broadcast
+    c.now = 10.0
+    assert c.serve(1.0) == 11.0         # idle downlink starts at `now`
+
+
+def test_clock_now_monotone_under_stragglers():
+    c = VirtualClock(STRAGGLER, seed=3)
+    for i in range(8):
+        c.schedule(i, 0.0)
+    times = [c.pop()[0] for _ in range(8)]
+    assert times == sorted(times)
+
+
+# ---------------------------------------------------------------------------
+# staleness reweighting (Strategy.reweight default)
+
+
+def test_reweight_zero_age_is_identity():
+    w = jnp.asarray(np.random.default_rng(0).random((3, 5)), jnp.float32)
+    out = staleness_reweight(w, jnp.zeros(5), 0.5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
+
+
+def test_reweight_discounts_stale_columns_mass_preserving():
+    w = jnp.full((2, 4), 0.25, jnp.float32)
+    age = jnp.asarray([0.0, 0.0, 1.0, 2.0])
+    out = np.asarray(staleness_reweight(w, age, 0.5))
+    # columns scaled by 0.5**age then rows rescaled to their original mass
+    raw = 0.25 * np.asarray([1.0, 1.0, 0.5, 0.25])
+    expect = raw / raw.sum()
+    np.testing.assert_allclose(out, np.tile(expect, (2, 1)), rtol=1e-6)
+    np.testing.assert_allclose(out.sum(1), [1.0, 1.0], rtol=1e-6)
+
+
+def test_reweight_preserves_substochastic_row_mass():
+    """FedFOMO rows don't sum to 1 — their self-residual must survive."""
+    w = jnp.asarray([[0.2, 0.3, 0.0]], jnp.float32)
+    out = np.asarray(staleness_reweight(w, jnp.asarray([0.0, 2.0, 5.0]), 0.5))
+    np.testing.assert_allclose(out.sum(), 0.5, rtol=1e-6)
+    assert out[0, 1] < out[0, 0]        # the stale column lost weight
+
+
+def test_reweight_zero_row_stays_zero():
+    w = jnp.zeros((2, 3), jnp.float32)
+    out = np.asarray(staleness_reweight(w, jnp.asarray([0.0, 1.0, 2.0]), 0.5))
+    np.testing.assert_array_equal(out, np.zeros((2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# lockstep equivalence: inv_mu=0, K=m, tau=inf  ==  the synchronous engine
+
+
+@pytest.mark.parametrize("spec", ["fedavg", "ucfl_k2", "cfl", "fedfomo"])
+def test_async_lockstep_bit_identical_to_sync(spec, fed):
+    sync = run_federated(spec, fed, fl=SMALL, system=RELIABLE,
+                         placement=HostVmap())
+    a = run_federated(spec, fed, fl=SMALL, system=RELIABLE,
+                      placement=HostVmap(),
+                      async_cfg=AsyncConfig(buffer_k=fed.m))
+    assert a.mean_acc == sync.mean_acc          # bit-identical, not approx
+    assert a.worst_acc == sync.worst_acc
+    assert a.comm == sync.comm
+    # in lockstep the virtual clock reproduces the analytic clock too
+    assert a.time == pytest.approx(sync.time)
+
+
+def test_async_records_event_metadata(fed):
+    h = run_federated("fedavg", fed, fl=SMALL, system=STRAGGLER,
+                      async_cfg=AsyncConfig(buffer_k=2, max_staleness=3.0,
+                                            staleness_discount=0.8))
+    assert h.extra["async"] == {"buffer_k": 2, "max_staleness": 3.0,
+                                "staleness_discount": 0.8,
+                                "events": SMALL.rounds}
+
+
+# ---------------------------------------------------------------------------
+# buffered semantics under stragglers
+
+
+def test_async_buffer_runs_all_strategies(fed):
+    cfg = AsyncConfig(buffer_k=2, max_staleness=4.0, staleness_discount=0.8)
+    for spec in sorted(STRATEGIES):
+        h = run_federated(spec, fed, fl=SMALL, system=STRAGGLER,
+                          async_cfg=cfg, seed=1)
+        assert len(h.mean_acc) == SMALL.rounds, spec
+        assert all(np.isfinite(h.mean_acc)), spec
+        assert h.time == sorted(h.time), spec
+
+
+def test_hostvmap_cohort_update_matches_masked_full_update(fed):
+    """HostVmap's O(k) gather/scatter cohort step must equal the default
+    run-every-slot-and-mask path (same per-client math, same keys)."""
+    from repro.fl.placement import Placement
+    from repro.models import lenet
+    p = HostVmap()
+    opt, update = p.build_update(lenet.loss_fn, SMALL)
+    m = fed.m
+    from repro.fl.simulator import default_model_init
+    stacked = p.stack(default_model_init(fed)(KEY), m)
+    opt_state = p.init_opt(opt, stacked)
+    ckeys = jax.random.split(jax.random.PRNGKey(3), m)
+    idx = jnp.asarray([2, 0])
+    keep = jnp.asarray([True, False])
+    args = (update, idx, keep, stacked, opt_state,
+            fed.x, fed.y, fed.n, ckeys)
+    fast = p.update_cohort(*args)
+    ref = Placement.update_cohort(p, *args)
+    for a, b in zip(jax.tree_util.tree_leaves(fast),
+                    jax.tree_util.tree_leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=0, atol=0)
+
+
+def test_async_charges_cohort_level_downlink(fed):
+    """Only the K buffered clients download: a unicast strategy (ucfl,
+    m streams) is charged K streams per event, and FedFOMO's per-client
+    unicasts scale by K/m."""
+    cfg = AsyncConfig(buffer_k=2)
+    h = run_federated("ucfl", fed, fl=SMALL, system=STRAGGLER,
+                      async_cfg=cfg)
+    assert all(c.n_streams == 2 for c in h.comm)
+    h = run_federated("fedfomo", fed, fl=SMALL, system=STRAGGLER,
+                      async_cfg=cfg)
+    full = 4 * SMALL.fomo_candidates
+    assert all(c.n_unicasts == full // 2 for c in h.comm)
+    # broadcast strategies are unaffected: one stream serves everyone
+    h = run_federated("fedavg", fed, fl=SMALL, system=STRAGGLER,
+                      async_cfg=cfg)
+    assert all(c.n_streams == 1 for c in h.comm)
+
+
+def test_async_beats_sync_wall_clock_under_stragglers(fed):
+    """K < m: events wait for the K-th earliest arrival, not the max."""
+    fl = FLConfig(rounds=6, local_steps=2, batch_size=16, eval_every=1)
+    sync = run_federated("fedavg", fed, fl=fl, system=STRAGGLER)
+    a = run_federated("fedavg", fed, fl=fl, system=STRAGGLER,
+                      async_cfg=AsyncConfig(buffer_k=2))
+    assert a.time[-1] < sync.time[-1]
+
+
+def test_async_max_staleness_zero_still_progresses(fed):
+    """tau=0 drops every update that spans an aggregation; the run must
+    still complete (dropped clients re-download and restart)."""
+    h = run_federated("fedavg", fed, fl=SMALL, system=STRAGGLER,
+                      async_cfg=AsyncConfig(buffer_k=2, max_staleness=0.0))
+    assert len(h.mean_acc) == SMALL.rounds
+
+
+def test_async_rejects_sampler(fed):
+    with pytest.raises(TypeError, match="sampler|Sampler"):
+        run_federated("fedavg", fed, fl=SMALL,
+                      sampler=UniformFraction(0.5),
+                      async_cfg=AsyncConfig(buffer_k=2))
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncConfig(buffer_k=0)
+    with pytest.raises(ValueError, match="staleness_discount"):
+        AsyncConfig(staleness_discount=0.0)
+    with pytest.raises(ValueError, match="max_staleness"):
+        AsyncConfig(max_staleness=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# mesh async smoke (8 forced host devices in CI's async-smoke job)
+
+
+@pytest.mark.parametrize("schedule", ["gspmd", "shard_map_streams"])
+def test_mesh_async_smoke(schedule):
+    fed8 = scenario_label_shift(KEY, n=640, m=8)
+    h = run_federated("ucfl_k2", fed8, fl=SMALL, system=STRAGGLER,
+                      placement=MeshShardMap(schedule=schedule),
+                      async_cfg=AsyncConfig(buffer_k=4, max_staleness=3.0,
+                                            staleness_discount=0.8))
+    assert len(h.mean_acc) == SMALL.rounds
+    assert all(np.isfinite(h.mean_acc))
+
+
+# ---------------------------------------------------------------------------
+# satellites: engine buffer donation, UniformFraction explicit count
+
+
+def test_reads_prev_declarations():
+    assert not STRATEGIES["fedavg"].reads_prev
+    assert not STRATEGIES["local"].reads_prev
+    assert not STRATEGIES["oracle"].reads_prev
+    assert not STRATEGIES["ucfl"].reads_prev
+    assert STRATEGIES["cfl"].reads_prev
+    assert STRATEGIES["fedfomo"].reads_prev
+
+
+def test_donating_run_keeps_state_finite(fed):
+    """fedavg + no sampler hits the donated update step; the results and
+    the kept final state must be intact."""
+    h = run_federated("fedavg", fed, fl=SMALL, keep_state=True)
+    assert all(np.isfinite(h.mean_acc))
+    leaves = jax.tree_util.tree_leaves(h.final_params)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+
+
+def test_uniform_fraction_explicit_count(fed):
+    s = UniformFraction(count=2)
+    mask = s.sample(0, fed.m, jax.random.PRNGKey(1))
+    assert int(mask.sum()) == 2
+    assert UniformFraction(count=10).sample(0, 4, KEY) is None  # >= m: all
+    with pytest.raises(ValueError, match="exactly one"):
+        UniformFraction(0.5, count=2)
+    with pytest.raises(ValueError, match="exactly one"):
+        UniformFraction()
+    with pytest.raises(ValueError, match="count"):
+        UniformFraction(count=0)
+
+
+def test_sync_cost_charges_participants_only(fed):
+    """Satellite fix: with a sampler the analytic clock uses H_|S|, not
+    H_m — a partial-participation round must be cheaper than a full one."""
+    fl = FLConfig(rounds=2, local_steps=1, batch_size=8, eval_every=1)
+    full = run_federated("fedavg", fed, fl=fl, system=STRAGGLER)
+    part = run_federated("fedavg", fed, fl=fl, system=STRAGGLER,
+                         sampler=UniformFraction(count=2), seed=0)
+    expect_delta = STRAGGLER.compute_time(fed.m) - STRAGGLER.compute_time(2)
+    assert full.time[-1] - part.time[-1] == \
+        pytest.approx(fl.rounds * expect_delta)
