@@ -19,6 +19,7 @@ narrative log.
     PYTHONPATH=src python -m benchmarks.perf_iterations [--group NAME]
     PYTHONPATH=src python -m benchmarks.perf_iterations --round-engine
     PYTHONPATH=src python -m benchmarks.perf_iterations --async-engine
+    PYTHONPATH=src python -m benchmarks.perf_iterations --channel
 
 MUST run standalone: the dry-run groups force 512 host devices (via the
 repro.launch.dryrun import) and --round-engine forces 8, both through
@@ -325,6 +326,75 @@ def async_engine_bench(rounds_sync: int = 16, events_async: int = 48,
     return rows
 
 
+def channel_bench(rounds: int = 16, seed: int = 0):
+    """Accuracy vs CUMULATIVE DOWNLINK BITS per (strategy × codec)
+    -> BENCH_channel.json (the §3b bits axis of the paper's trade-off).
+
+    Paper-shaped miniature (LeNet, m=8 covariate-shift clients — a
+    scenario whose 16-round curve is still climbing, so the target is not
+    degenerate).  Per strategy the uncompressed (identity-codec) run's
+    final mean accuracy is the TARGET; each compressed run gets a 1.5×
+    round budget (compression trades rounds for bits) and records the
+    cumulative downlink bits of its first eval reaching the target.
+    ``wins`` = reached the target with strictly fewer cumulative downlink
+    bits than the identity run spent in total — the compression side of
+    the trade-off the paper buys with stream reduction.  (Downlink bits
+    are the §3b accounting projection: the engines compress uplink values
+    only and charge the broadcast at compressed-model bits; see the
+    EXPERIMENTS §Channel caveat.)
+    """
+    import jax
+    from repro.data.federated import scenario_covariate_shift
+    from repro.fl import Channel, FLConfig, run_federated
+
+    fed = scenario_covariate_shift(jax.random.PRNGKey(seed), n=1500, m=8)
+
+    def fl_for(r):
+        return FLConfig(rounds=r, local_steps=2, batch_size=32,
+                        eval_every=2, cfl_min_rounds=4)
+
+    specs = ["fedavg", "ucfl_k2", "ucfl"]
+    codecs = ["identity", "qsgd:8", "qsgd:4", "topk:0.25"]
+    rows = []
+    for spec in specs:
+        target = None
+        id_total = None
+        for codec in codecs:
+            r_budget = rounds if codec == "identity" else rounds * 3 // 2
+            h = run_federated(spec, fed, fl=fl_for(r_budget), seed=seed,
+                              channel=Channel(codec=codec))
+            per_round = [c.dl_bits for c in h.comm_bits]
+            cum_bits = [sum(per_round[:r + 1]) for r in h.rounds]
+            total = sum(per_round)
+            if codec == "identity":
+                target, id_total = h.mean_acc[-1], total
+            hit = next((b for b, a in zip(cum_bits, h.mean_acc)
+                        if a >= target), None)
+            wins = (codec != "identity" and hit is not None
+                    and hit < id_total)
+            rows.append({
+                "strategy": spec, "codec": codec, "m": fed.m,
+                "rounds": r_budget,
+                "payload_bits": h.extra["channel"]["payload_bits"],
+                "model_bits": h.extra["channel"]["model_bits"],
+                "mean_acc": h.mean_acc, "cum_dl_bits": cum_bits,
+                "final_acc": h.mean_acc[-1], "dl_bits_total": total,
+                "target_acc": target,
+                "dl_bits_to_target": hit,
+                "wins": wins,
+            })
+            print(f"{spec:8s} {codec:10s} final={h.mean_acc[-1]:.3f} "
+                  f"dl_total={total/1e6:7.1f} Mbit "
+                  + (f"to_target={hit/1e6:7.1f} Mbit wins={wins}"
+                     if hit is not None else "target not reached"))
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_channel.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
@@ -335,12 +405,18 @@ def main(argv=None):
     p.add_argument("--async-engine", action="store_true",
                    help="time-to-target-accuracy of the buffered-async "
                         "runtime vs the sync engine, per strategy")
+    p.add_argument("--channel", action="store_true",
+                   help="accuracy vs cumulative downlink bits per "
+                        "(strategy × codec) — the §3b channel benchmark")
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
         return
     if args.async_engine:
         async_engine_bench()
+        return
+    if args.channel:
+        channel_bench()
         return
     # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
     from repro.launch.dryrun import run_case

@@ -1,9 +1,11 @@
 """Regenerate EXPERIMENTS.md data sections from benchmark artifacts.
 
-Reads benchmarks/dryrun_artifacts/*/*.json, benchmarks/results/paper_*.json
-and benchmarks/results/perf_iterations.json; rewrites the §Paper, §Dry-run
-and §Roofline bodies of EXPERIMENTS.md between the AUTOGEN markers.  §Perf
-is narrative (hand-written hypothesis log) and is left untouched.
+Reads benchmarks/dryrun_artifacts/*/*.json, benchmarks/results/paper_*.json,
+benchmarks/results/perf_iterations.json and
+benchmarks/results/BENCH_channel.json; rewrites the §Paper, §Dry-run,
+§Roofline and §Channel bodies of EXPERIMENTS.md between the AUTOGEN
+markers (a marker skeleton is created if EXPERIMENTS.md is missing).
+§Perf is narrative (hand-written hypothesis log) and is left untouched.
 
     PYTHONPATH=src python -m benchmarks.report
 """
@@ -152,11 +154,60 @@ def paper_section() -> str:
     return "\n".join(out)
 
 
+def channel_section() -> str:
+    """Personalization/communication trade-off on the BITS axis next to
+    the legacy T_dl axis (DESIGN.md §3b; BENCH_channel.json)."""
+    path = os.path.join(RESULTS_DIR, "BENCH_channel.json")
+    if not os.path.exists(path):
+        return ("(BENCH_channel.json not yet produced — run "
+                "`python -m benchmarks.perf_iterations --channel`)")
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["Accuracy vs cumulative DOWNLINK payload per (strategy × codec) "
+           "— the same trade-off the paper draws in T_dl broadcast units, "
+           "re-measured in bits.  The legacy axis charges every stream one "
+           "full model (T_dl = payloads × model); the bits axis charges the "
+           "codec-compressed payload.  `to target` = cumulative downlink "
+           "bits at the first eval reaching the uncompressed run's final "
+           "accuracy (its round budget is 1.5× — compression trades rounds "
+           "for bits).  Caveat: the engines compress only the UPLINK "
+           "values; the downlink bits assume a server-side codec twin "
+           "(ROADMAP follow-on) and are an accounting projection, exact "
+           "for qsgd (the mixed model quantizes the same way) but "
+           "optimistic for topk (a dense mix is not k-sparse).", "",
+           "| strategy | codec | final acc | downlink Mbit | legacy axis "
+           "(T_dl) | Mbit to target | beats uncompressed budget |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        tdl = r["dl_bits_total"] / r["payload_bits"]
+        hit = r["dl_bits_to_target"]
+        out.append(
+            f"| {r['strategy']} | {r['codec']} | {r['final_acc']:.3f} | "
+            f"{r['dl_bits_total']/1e6:.1f} | {tdl:.0f} | "
+            + (f"{hit/1e6:.1f} | " if hit is not None else "— | ")
+            + ("**yes**" if r["wins"] else
+               ("baseline" if r["codec"] == "identity" else "no")) + " |")
+    wins = sorted({r["codec"] for r in rows
+                   if r["strategy"] == "ucfl_k2" and r["wins"]})
+    if wins:
+        out += ["", f"ucfl_k2 reaches its uncompressed target accuracy "
+                f"with strictly fewer downlink bits under: {', '.join(wins)}."]
+    return "\n".join(out)
+
+
 MARKERS = {"Paper": paper_section, "Dry-run": dryrun_section,
-           "Roofline": roofline_section}
+           "Roofline": roofline_section, "Channel": channel_section}
+
+SKELETON = "# EXPERIMENTS\n\n" + "\n".join(
+    f"## §{name}\n\n<!-- AUTOGEN {name} -->\n<!-- /AUTOGEN {name} -->\n"
+    for name in MARKERS)
 
 
 def main():
+    if not os.path.exists(EXPERIMENTS):
+        with open(EXPERIMENTS, "w") as f:
+            f.write(SKELETON)
+        print("EXPERIMENTS.md missing — created a marker skeleton")
     with open(EXPERIMENTS) as f:
         text = f.read()
     for name, fn in MARKERS.items():

@@ -1,10 +1,15 @@
 """Communication/learning trade-off (paper §III-B + Fig.3): sweep the number
-of personalized streams, print accuracy AND wall-clock time under the three
-system models, plus the silhouette guidance for picking m_t.
+of personalized streams, print accuracy AND the two communication axes —
+wall-clock time under the three system models (the paper's T_dl units) and
+cumulative downlink BITS from the channel subsystem (DESIGN.md §3b) —
+plus the silhouette guidance for picking m_t.
 
 Each sweep point is a registered Strategy (DESIGN.md §4); the per-round
-downlink cost comes from the run's own `History.comm` record rather than a
-hand-maintained table.
+downlink cost comes from the run's own `History.comm` / `History.comm_bits`
+records rather than a hand-maintained table.  The identity-codec channel
+is bit-exact with the channel-less engine, so attaching it only adds the
+bits axis.  The last block re-runs the ucfl_k2 point through the lossy
+codecs: same trade-off, cheaper bits.
 
     PYTHONPATH=src python examples/comm_tradeoff.py
 """
@@ -13,7 +18,7 @@ import numpy as np
 
 from repro.core import kmeans, mixing_matrix, silhouette_score
 from repro.data.federated import scenario_covariate_shift
-from repro.fl import FLConfig, SYSTEMS, get_strategy, run_federated
+from repro.fl import Channel, FLConfig, SYSTEMS, get_strategy, run_federated
 
 
 def main():
@@ -22,18 +27,38 @@ def main():
     fed = scenario_covariate_shift(key, n=2000, m=m)
     fl = FLConfig(rounds=12, local_steps=5, batch_size=32, eval_every=11)
 
-    print("streams  mean_acc  worst_acc   t/round (slow-UL, fast-UL, wired)")
+    print("streams  mean_acc  worst_acc   t/round (slow-UL, fast-UL, wired)"
+          "   DL Mbit/round  cum DL Mbit")
     hist = {}
     for spec, k in [("fedavg", 1), ("ucfl_k2", 2), ("ucfl_k4", 4),
                     ("ucfl", m)]:
-        h = run_federated(strategy=get_strategy(spec), fed=fed, fl=fl)
+        h = run_federated(strategy=get_strategy(spec), fed=fed, fl=fl,
+                          channel=Channel())     # identity: bits axis only
         hist[spec] = h
         cost = h.comm[-1]
         times = [s.round_time(m, n_streams=cost.n_streams,
                               n_unicasts=cost.n_unicasts)
                  for s in SYSTEMS.values()]
+        dl_round = h.comm_bits[-1].dl_bits
+        dl_total = sum(c.dl_bits for c in h.comm_bits)
         print(f"{k:7d}  {h.mean_acc[-1]:.3f}     {h.worst_acc[-1]:.3f}     "
-              + "  ".join(f"{t:5.1f}" for t in times))
+              + "  ".join(f"{t:5.1f}" for t in times)
+              + f"        {dl_round/1e6:8.2f}     {dl_total/1e6:8.2f}")
+
+    # the same ucfl_k2 point on the bits axis, through the lossy codecs:
+    # compression moves along the OTHER lever of the same trade-off
+    print("\nucfl_k2 under uplink compression (error feedback on):")
+    print("codec      mean_acc  worst_acc  DL Mbit/round  cum DL Mbit")
+    for codec in ["identity", "qsgd:8", "qsgd:4", "topk:0.25"]:
+        # the identity row IS the stream-sweep run above (bit-parity
+        # anchor) — no need to train it twice
+        h = hist["ucfl_k2"] if codec == "identity" else \
+            run_federated("ucfl_k2", fed, fl=fl,
+                          channel=Channel(codec=codec))
+        dl_round = h.comm_bits[-1].dl_bits
+        dl_total = sum(c.dl_bits for c in h.comm_bits)
+        print(f"{codec:10s} {h.mean_acc[-1]:.3f}     {h.worst_acc[-1]:.3f}"
+              f"      {dl_round/1e6:8.2f}     {dl_total/1e6:8.2f}")
 
     # silhouette-guided m_t (paper: silhouette over the w_i rows)
     w = hist["ucfl"].extras.mixing_matrix

@@ -1,3 +1,5 @@
+from repro.fl.channel import (Channel, ChannelCost, Codec, LinkProfile,
+                              get_codec, get_link_profile, tree_bits)
 from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
 from repro.fl.placement import HostVmap, MeshShardMap, Placement
@@ -11,6 +13,8 @@ from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
                                  get_strategy, get_strategy_class, register)
 
 __all__ = ["AsyncConfig", "VirtualClock", "run_async",
+           "Channel", "ChannelCost", "Codec", "LinkProfile", "get_codec",
+           "get_link_profile", "tree_bits",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",

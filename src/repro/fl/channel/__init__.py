@@ -1,0 +1,80 @@
+"""Wireless channel subsystem (DESIGN.md §3b).
+
+Makes the paper's communication axis physical: exact bit-level payload
+accounting (`payload`), uplink compression codecs with error feedback
+(`codecs`), and per-client link profiles driving both clocks (`link`).
+
+    run_federated("ucfl_k2", fed,
+                  channel=Channel(codec="qsgd:8"), system=SYSTEMS["wired"])
+
+With a `Channel` attached the engines (sync and async) additionally record
+`History.comm_bits` (downlink/uplink bits per round) and, when a `system`
+is present, drive the clock from the link profile instead of the
+homogeneous ρ/T_dl constants.  ``Channel()`` — identity codec, uniform
+link — reproduces the channel-less engines bit-for-bit (the §3b anchor).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.fl.channel.codecs import (BACKENDS, CODECS, Codec, Identity, QSGD,
+                                     TopK, apply_uplink, get_codec,
+                                     register_codec, zeros_like_stack)
+from repro.fl.channel.link import (LINK_FAMILIES, LinkProfile,
+                                   get_link_profile, round_downlink_time)
+from repro.fl.channel.payload import (ChannelCost, dtype_bits, leaf_bits,
+                                      stacked_ravel, stacked_unravel,
+                                      tree_bits, tree_size)
+
+
+@dataclass(frozen=True)
+class Channel:
+    """The engine-facing channel configuration.
+
+    codec:           a `Codec` instance or spec string (``identity``,
+                     ``qsgd:<bits>``, ``topk:<frac>``).
+    link:            a `LinkProfile`, a profile spec string (``uniform``,
+                     ``tiered:<f>``, ``lognormal:<s>``), or None — None and
+                     ``uniform`` both resolve to the `from_system` profile
+                     that reproduces the legacy clock exactly.
+    error_feedback:  carry per-client EF residuals across rounds (the
+                     standard companion of biased codecs like top-k; exact
+                     no-op under ``identity``).
+    """
+    codec: Union[str, Codec] = "identity"
+    link: Union[str, LinkProfile, None] = None
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "codec", get_codec(self.codec))
+        if isinstance(self.link, str):
+            # validate the family early; the profile itself needs (system,
+            # ref_bits, m) and is resolved by the engine
+            family = self.link.partition(":")[0]
+            if family not in LINK_FAMILIES:
+                raise ValueError(f"unknown link profile {self.link!r}; "
+                                 f"families: {list(LINK_FAMILIES)}")
+
+    def resolve_link(self, system, ref_bits: int, m: int) -> LinkProfile:
+        spec = "uniform" if self.link is None else self.link
+        return get_link_profile(spec, system, ref_bits, m)
+
+
+def resolve_channel(channel: Union[str, "Channel", None]
+                    ) -> Optional["Channel"]:
+    """None -> None (legacy engines, zero new code paths); a codec spec
+    string -> Channel(codec=spec)."""
+    if channel is None or isinstance(channel, Channel):
+        return channel
+    return Channel(codec=channel)
+
+
+__all__ = [
+    "BACKENDS", "CODECS", "Channel", "ChannelCost", "Codec", "Identity",
+    "LINK_FAMILIES", "LinkProfile", "QSGD", "TopK", "apply_uplink",
+    "dtype_bits", "get_codec",
+    "get_link_profile", "leaf_bits", "register_codec", "resolve_channel",
+    "stacked_ravel", "stacked_unravel", "round_downlink_time",
+    "tree_bits", "tree_size", "zeros_like_stack",
+]

@@ -1,0 +1,242 @@
+"""Uplink compression codecs with error feedback (DESIGN.md §3b).
+
+A `Codec` is one lossy (or identity) channel code for the client->server
+update payload.  The simulation never materializes packed bitstreams: a
+codec exposes
+
+  * ``roundtrip(flat, key)``   — decode(encode(·)) on the (m, D) client-
+    flat view: the values the SERVER sees.  Rows are independent clients.
+  * ``payload_bits(tree)``     — exact wire bits for one client's payload
+    of ``tree``'s size (per-element code bits + per-client side info).
+
+Registered codecs (spec grammar ``<family>[:<param>]``, mirroring the
+strategy registry §5):
+
+  identity        lossless float passthrough (bit-parity anchor)
+  qsgd:<bits>     signed stochastic uniform quantization, b ∈ [2, 8]
+                  (QSGD, Alistarh et al. 2017): d·b bits + one 32-bit
+                  per-client scale
+  topk:<frac>     magnitude top-k sparsification, k = ⌈frac·d⌉:
+                  k · (32-bit value + 32-bit index)
+
+Error feedback (Seide et al. 2014 / EF-SGD): the engines keep a per-client
+residual stack e_i; each round the codec transmits v = Δ + e and the new
+residual is e' = v − decode(v), so *everything the channel drops is
+retransmitted later* — `apply_uplink` below owns that algebra, jitted and
+cached per (codec, backend, masking).  ``backend="pallas"`` executes the
+`repro.kernels` quantize/top-k-threshold kernels (HostVmap); ``"jnp"`` is
+the bit-identical-for-qsgd pure-jnp path the mesh placement shards under
+GSPMD.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+import math
+from typing import Any, ClassVar, Dict, Optional, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.channel.payload import (stacked_ravel, stacked_unravel,
+                                      tree_bits, tree_size)
+
+BACKENDS = ("pallas", "jnp")
+
+
+class Codec(abc.ABC):
+    """One uplink channel code; subclass + `@register_codec` to add."""
+
+    name: ClassVar[str]
+    is_identity: ClassVar[bool] = False
+
+    @property
+    def spec(self) -> str:
+        """Registry spec string that reconstructs this instance."""
+        return self.name
+
+    @abc.abstractmethod
+    def payload_bits(self, tree: Any) -> int:
+        """Exact uplink bits for ONE client's payload of ``tree``'s size."""
+
+    @abc.abstractmethod
+    def roundtrip(self, flat: jnp.ndarray, key: jnp.ndarray, *,
+                  backend: str = "pallas") -> jnp.ndarray:
+        """decode(encode(flat)) per row; (m, D) f32 -> (m, D) f32."""
+
+    # codecs are value objects: spec identity drives the jit caches
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Codec) and self.spec == other.spec
+
+    def __hash__(self) -> int:
+        return hash(self.spec)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+CODECS: Dict[str, Type[Codec]] = {}
+
+
+def register_codec(cls: Type[Codec]) -> Type[Codec]:
+    CODECS[cls.name] = cls
+    return cls
+
+
+@register_codec
+class Identity(Codec):
+    """Lossless passthrough: raw dtype bits, engines skip the value path
+    entirely (the bit-parity anchor of DESIGN.md §3b)."""
+
+    name = "identity"
+    is_identity = True
+
+    def payload_bits(self, tree: Any) -> int:
+        return tree_bits(tree)
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        return flat
+
+
+@register_codec
+class QSGD(Codec):
+    """Stochastic uniform quantization onto ``{-s..s}·scale`` per client,
+    s = 2^(b−1) − 1, scale = max|x|/s.  Unbiased given the scale:
+    E[roundtrip(x)] = x (stochastic rounding ``floor(y + u)``)."""
+
+    name = "qsgd"
+
+    def __init__(self, bits: int = 8):
+        if not 2 <= int(bits) <= 8:
+            raise ValueError(f"qsgd bits must be in [2, 8], got {bits}")
+        self.bits = int(bits)
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}:{self.bits}"
+
+    def payload_bits(self, tree: Any) -> int:
+        return tree_size(tree) * self.bits + 32     # + per-client scale
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        noise = jax.random.uniform(key, flat.shape, jnp.float32)
+        if backend == "pallas":
+            from repro.kernels import ops
+            return ops.qsgd_roundtrip(flat, noise, bits=self.bits)
+        from repro.kernels import ref
+        return ref.qsgd_roundtrip_ref(flat, noise, self.bits)
+
+
+@register_codec
+class TopK(Codec):
+    """Magnitude top-k sparsification: keep each client's k = ⌈frac·d⌉
+    largest-|x| coordinates exactly, zero the rest.  Biased — error
+    feedback is what makes it converge (the residual carries the tail)."""
+
+    name = "topk"
+
+    def __init__(self, frac: float = 0.1):
+        if not 0.0 < float(frac) <= 1.0:
+            raise ValueError(f"topk frac must be in (0, 1], got {frac}")
+        self.frac = float(frac)
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}:{self.frac:g}"
+
+    def k(self, d: int) -> int:
+        return max(1, min(d, int(math.ceil(self.frac * d))))
+
+    def payload_bits(self, tree: Any) -> int:
+        return self.k(tree_size(tree)) * (32 + 32)  # (value, index) pairs
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        k = self.k(flat.shape[1])
+        if backend == "pallas":
+            from repro.kernels import ops
+            thresh = ops.topk_threshold(jnp.abs(flat), k=k)
+            return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+        from repro.kernels import ref
+        return jnp.where(ref.topk_mask_ref(flat, k), flat, 0.0)
+
+
+def get_codec(spec) -> Codec:
+    """``"identity" | "qsgd:<bits>" | "topk:<frac>"`` -> Codec instance
+    (instances pass through)."""
+    if isinstance(spec, Codec):
+        return spec
+    family, _, param = str(spec).partition(":")
+    cls = CODECS.get(family)
+    if cls is None:
+        raise ValueError(f"unknown codec {spec!r}; families: "
+                         f"{sorted(CODECS)}")
+    if not param:
+        return cls()
+    try:
+        arg = int(param) if family == "qsgd" else float(param)
+    except ValueError:
+        raise ValueError(f"bad codec parameter in {spec!r}") from None
+    return cls(arg)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback uplink application (engine entry point)
+
+
+@functools.lru_cache(maxsize=32)
+def _uplink_fn(codec: Codec, backend: str, masked: bool):
+    """jit(uplink) cached per (codec, backend, masked) — sweeps re-entering
+    the engines with the same channel reuse the compiled step."""
+
+    def uplink(stacked, prev, ef, key, mask):
+        delta = jax.tree_util.tree_map(jnp.subtract, stacked, prev)
+        v = jax.tree_util.tree_map(jnp.add, delta, ef)
+        flat = stacked_ravel(v)
+        dec_flat = codec.roundtrip(flat, key, backend=backend)
+        dec = stacked_unravel(dec_flat, v)
+        new_ef = jax.tree_util.tree_map(jnp.subtract, v, dec)
+        # residuals ride in f32; the model stack keeps its own dtype
+        new_stacked = jax.tree_util.tree_map(
+            lambda p, d: (p + d).astype(p.dtype), prev, dec)
+        if masked:
+            # non-participants transmitted nothing: model and residual
+            # rows stay exactly as they were
+            sel = lambda a, b: jax.tree_util.tree_map(
+                lambda x, y: jnp.where(
+                    mask.reshape((-1,) + (1,) * (x.ndim - 1)), x, y), a, b)
+            new_stacked = sel(new_stacked, stacked)
+            new_ef = sel(new_ef, ef)
+        return new_stacked, new_ef
+
+    if masked:
+        return jax.jit(uplink)
+    return jax.jit(lambda s, p, e, k: uplink(s, p, e, k, None))
+
+
+def apply_uplink(codec: Codec, stacked: Any, prev: Any, ef: Any,
+                 key: jnp.ndarray, mask: Optional[jnp.ndarray] = None, *,
+                 backend: str = "pallas") -> Tuple[Any, Any]:
+    """One uplink crossing with error feedback.
+
+    ``stacked``/``prev`` are the post-/pre-update client stacks, ``ef`` the
+    residual stack.  Transmits v = (stacked − prev) + ef per participating
+    client, returns ``(prev + decode(v), v − decode(v))`` — the server-side
+    models and the carried-forward residuals.  Rows where ``mask`` is False
+    (non-participants / in-flight clients) are untouched.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown codec backend {backend!r}; one of "
+                         f"{BACKENDS}")
+    if codec.is_identity:
+        return stacked, ef
+    if mask is None:
+        return _uplink_fn(codec, backend, False)(stacked, prev, ef, key)
+    return _uplink_fn(codec, backend, True)(stacked, prev, ef, key, mask)
+
+
+def zeros_like_stack(stacked: Any) -> Any:
+    """Fresh all-zero error-feedback residual stack shaped like ``stacked``
+    (f32 — residuals accumulate in full precision regardless of the model
+    dtype)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, jnp.float32), stacked)

@@ -1,0 +1,69 @@
+"""Bit-level payload accounting (DESIGN.md §3b).
+
+The paper's communication axis is the abstract broadcast unit T_dl; this
+module makes it physical: exact bit counts for any model/update pytree,
+derived from the leaves' dtypes — nothing is assumed about architecture
+or layout.  `ChannelCost` is the bits-based sibling of the legacy
+`CommCost(n_streams, n_unicasts)` record: the engines append one per
+round/event to `History.comm_bits` whenever a `Channel` is attached.
+
+Codecs (repro.fl.channel.codecs) operate on the (m, D) client-flat view;
+`stacked_ravel`/`stacked_unravel` are the loss-free bridges between the
+client-stacked pytree and that view.
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ChannelCost(NamedTuple):
+    """Per-round bit accounting: total downlink and uplink payload bits."""
+    dl_bits: int
+    ul_bits: int
+
+
+def dtype_bits(dtype) -> int:
+    """Bits per element on the wire for ``dtype`` (8 · itemsize; bools ride
+    as bytes, matching their in-memory representation)."""
+    return int(np.dtype(dtype).itemsize) * 8
+
+
+def leaf_bits(leaf) -> int:
+    return int(np.prod(np.shape(leaf)) or 1) * dtype_bits(
+        getattr(leaf, "dtype", np.float32))
+
+
+def tree_bits(tree: Any) -> int:
+    """Exact payload bits of one pytree (e.g. a single client's model)."""
+    return sum(leaf_bits(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size(tree: Any) -> int:
+    """Total element count across all leaves (codec payload arithmetic)."""
+    return sum(int(np.prod(np.shape(l)) or 1)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def stacked_ravel(stacked: Any) -> jnp.ndarray:
+    """Client-stacked pytree (every leaf (m, ...)) -> (m, D) f32 flat view."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    m = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def stacked_unravel(flat: jnp.ndarray, like: Any) -> Any:
+    """Inverse of `stacked_ravel`: split (m, D) back into ``like``'s
+    structure/shapes/dtypes."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    m = leaves[0].shape[0]
+    sizes = [int(np.prod(l.shape[1:]) or 1) for l in leaves]
+    offsets = np.cumsum([0] + sizes)
+    out: List[jnp.ndarray] = []
+    for l, lo, hi in zip(leaves, offsets[:-1], offsets[1:]):
+        out.append(flat[:, lo:hi].reshape(l.shape).astype(l.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -51,14 +51,20 @@ class SystemModel:
         that actually compute (H_|S|, not H_m, under partial sampling)."""
         return self.compute_time(m) + self.rho + n_streams + n_unicasts
 
-    def sample_client_time(self, rng) -> float:
-        """One client's download-to-upload latency draw for the async
-        runtime (DESIGN.md §3a): the same shifted-exponential compute law
-        whose order statistics give the analytic ``E[max] = t_min + H_m/μ``,
-        plus the uplink.  ``inv_mu=0`` degenerates to the deterministic
-        ``t_min + rho`` (every client identical — lockstep arrivals)."""
+    def sample_compute_time(self, rng) -> float:
+        """One client's compute draw for the async runtime (DESIGN.md
+        §3a): the shifted-exponential law whose order statistics give the
+        analytic ``E[max] = t_min + H_m/μ``.  ``inv_mu=0`` degenerates to
+        the deterministic ``t_min`` (lockstep arrivals).  Exactly one RNG
+        draw when ``inv_mu > 0``, none otherwise."""
         extra = float(rng.exponential(self.inv_mu)) if self.inv_mu else 0.0
-        return self.t_min + extra + self.rho
+        return self.t_min + extra
+
+    def sample_client_time(self, rng) -> float:
+        """Compute draw plus the homogeneous ρ uplink — the full
+        download-to-upload round trip under this system's own channel
+        (a `LinkProfile` replaces the ρ term per client, DESIGN.md §3b)."""
+        return self.sample_compute_time(rng) + self.rho
 
 
 # the three systems of Fig. 3

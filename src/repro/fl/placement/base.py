@@ -48,6 +48,13 @@ class Placement(abc.ABC):
 
     name: ClassVar[str]
 
+    # Which codec implementation the channel uplink (DESIGN.md §3b) runs
+    # on this backend: "pallas" = the repro.kernels quantize / top-k
+    # threshold kernels (single-device stacks); "jnp" = the pure-jnp
+    # oracle math, which GSPMD shards over the client axis (bit-identical
+    # for qsgd; top-k differs only in tie handling).
+    codec_backend: ClassVar[str] = "pallas"
+
     @abc.abstractmethod
     def build_update(self, loss_fn: Callable, fl: Any, *,
                      donate: bool = False) -> Tuple[Any, Callable]:
@@ -94,6 +101,17 @@ class Placement(abc.ABC):
         upd, upd_opt = update_fn(stacked, opt_state, x, y, n, ckeys)
         return (self.select(mask, upd, stacked),
                 self.select(mask, upd_opt, opt_state))
+
+    def uplink(self, codec: Any, stacked: Any, prev: Any, ef: Any,
+               key: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+               ) -> Tuple[Any, Any]:
+        """Pass the participating clients' updates through the channel
+        codec with error feedback (DESIGN.md §3b): returns the server-side
+        ``(stacked', ef')``.  Rows where ``mask`` is False are untouched.
+        Identity codecs return the inputs unchanged (bit-parity anchor)."""
+        from repro.fl.channel import apply_uplink
+        return apply_uplink(codec, stacked, prev, ef, key, mask,
+                            backend=self.codec_backend)
 
     @abc.abstractmethod
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:

@@ -35,6 +35,12 @@ class MeshShardMap(Placement):
     """Clients sharded over ``axis`` of ``mesh``; collective mixing."""
 
     name = "mesh_shard_map"
+    # channel codec (DESIGN.md §3b) runs the pure-jnp oracle math here:
+    # plain rowwise jnp ops partition over the client axis under GSPMD,
+    # whereas a pallas_call carries no sharding rule and would gather the
+    # client stack to one device (bit-identical to the kernels for qsgd;
+    # top-k differs only on exact magnitude ties)
+    codec_backend = "jnp"
 
     def __init__(self, mesh: Optional[Mesh] = None, *,
                  axis: Optional[str] = None, schedule: str = "gspmd"):

@@ -1,26 +1,44 @@
-"""Virtual clock for the async runtime (DESIGN.md §3a).
+"""Virtual clock for the async runtime (DESIGN.md §3a, §3b).
 
 Event-driven simulated wall-clock over per-client upload arrivals.  Each
 `schedule(client, start)` draws one client round-trip from the
-`SystemModel`'s shifted-exponential compute law (`t_min + Exp(1/μ) + ρ`,
-units of T_dl — the law whose max-order-statistic gives the synchronous
-engine's analytic `E[max] = t_min + H_m/μ`) and pushes the arrival onto a
-heap; `pop()` returns the earliest pending arrival and advances `now`.
+`SystemModel`'s shifted-exponential compute law (`t_min + Exp(1/μ)`, units
+of T_dl — the law whose max-order-statistic gives the synchronous
+engine's analytic `E[max] = t_min + H_m/μ`) plus the client's uplink, and
+pushes the arrival onto a heap; `pop()` returns the earliest pending
+arrival and advances `now`.
+
+The uplink term is ρ by default (the homogeneous paper model).  With a
+channel attached (`link=` a `LinkProfile` and ``ul_bits`` per schedule
+call) it becomes the client's own ``payload_bits / uplink_rate`` — the
+per-client heterogeneous profile of DESIGN.md §3b.  A uniform
+`LinkProfile.from_system` profile carrying the uncompressed model
+reproduces ρ exactly, so the channel-less clock is a special case
+bit-for-bit.
 
 The parameter-server downlink is a serialized resource, mirroring the
 synchronous model where every round pays its broadcast streams in full:
 `serve(duration)` occupies the downlink and returns the completion time,
-queueing behind any broadcast still in flight.
+queueing behind any broadcast still in flight.  ``overlap=True`` is the
+async-aware charging fix (ROADMAP follow-on): an event's streams start at
+the event time on their own carriers and run CONCURRENTLY with any
+broadcast still in flight from an earlier event — completion is
+``now + duration``, not ``busy + duration``.  In lockstep operation every
+client re-downloads before the next event, the downlink is always idle,
+and the fix is exactly a no-op (the sync-equivalence anchor is preserved;
+regression-tested).
 
 Determinism: draws come from a private `numpy` Generator (the engine's JAX
-key stream is never touched, preserving sync↔async bit-equivalence), and
-heap ties break on client index — with `inv_mu=0` every draw is exactly
-`t_min + ρ`, so arrivals pop in lockstep client order.
+key stream is never touched, preserving sync↔async bit-equivalence), one
+exponential per `schedule` call regardless of the channel configuration —
+attaching a link profile never shifts the draw sequence.  Heap ties break
+on client index: with `inv_mu=0` every draw is exactly `t_min + ρ`, so
+arrivals pop in lockstep client order.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -30,16 +48,26 @@ from repro.fl.comm import SystemModel
 class VirtualClock:
     """Per-client arrival heap + serialized server downlink."""
 
-    def __init__(self, system: SystemModel, seed: int = 0):
+    def __init__(self, system: SystemModel, seed: int = 0, *, link=None):
         self.system = system
+        self.link = link                # Optional[LinkProfile] (§3b)
         self._rng = np.random.default_rng(seed)
         self._heap = []
         self.now = 0.0              # time of the latest popped arrival
         self._busy_until = 0.0      # downlink occupied through this time
 
-    def schedule(self, client: int, start: float) -> float:
-        """Client downloads at ``start``; returns its sampled arrival time."""
-        t = start + self.system.sample_client_time(self._rng)
+    def schedule(self, client: int, start: float,
+                 ul_bits: Optional[float] = None) -> float:
+        """Client downloads at ``start``; returns its sampled arrival time.
+
+        ``ul_bits`` (with a ``link`` profile) charges the client's own
+        uplink ``bits·ρ_i/rate_i`` instead of the homogeneous ρ."""
+        compute = self.system.sample_compute_time(self._rng)
+        if self.link is not None and ul_bits is not None:
+            uplink = self.link.uplink_time(client, ul_bits)
+        else:
+            uplink = self.system.rho
+        t = start + compute + uplink
         heapq.heappush(self._heap, (t, int(client)))
         return t
 
@@ -49,9 +77,16 @@ class VirtualClock:
         self.now = max(self.now, t)
         return t, c
 
-    def serve(self, duration: float) -> float:
+    def serve(self, duration: float, *, overlap: bool = False) -> float:
         """Occupy the server downlink for ``duration`` starting no earlier
-        than ``now``; returns the broadcast completion time."""
+        than ``now``; returns the broadcast completion time.  With
+        ``overlap=True`` a transmission still in flight from an earlier
+        event does NOT delay this one (concurrent carriers; see module
+        docstring) — a no-op whenever the downlink is idle."""
+        if overlap:
+            done = self.now + duration
+            self._busy_until = max(self._busy_until, done)
+            return done
         done = max(self.now, self._busy_until) + duration
         self._busy_until = done
         return done

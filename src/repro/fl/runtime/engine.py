@@ -40,11 +40,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedData
+from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
+                              round_downlink_time)
 from repro.fl.comm import SYSTEMS, SystemModel
 from repro.fl.placement import Placement, resolve_placement
 from repro.fl.runtime.clock import VirtualClock
-from repro.fl.simulator import (FLConfig, History, finalize_history,
-                                init_run, resolve_strategy)
+from repro.fl.simulator import (FLConfig, History, channel_extra,
+                                channel_uplink, finalize_history,
+                                init_channel, init_run, resolve_strategy)
 from repro.fl.strategies import CommCost, Strategy
 from repro.models import lenet
 
@@ -58,19 +61,31 @@ class AsyncConfig:
                         degenerates to the synchronous engine).
     max_staleness:      drop buffered updates whose base model is older than
                         this many server versions (None = keep everything).
-    staleness_discount: λ of the default `Strategy.reweight` column
-                        discount ``λ**age`` (1.0 = no discounting).
+    staleness_schedule: contributor-discount law routed through
+                        `Strategy.reweight`: ``"exp"`` (FedBuff-style
+                        ``λ**age``) or ``"poly"`` (FedAsync's
+                        ``(1+age)**-α``, Xie et al. 2019).
+    staleness_discount: λ of the ``exp`` schedule (1.0 = no discounting).
+    staleness_alpha:    α of the ``poly`` schedule.
     """
     buffer_k: int = 2
     max_staleness: Optional[float] = None
+    staleness_schedule: str = "exp"
     staleness_discount: float = 0.9
+    staleness_alpha: float = 0.5
 
     def __post_init__(self):
         if self.buffer_k < 1:
             raise ValueError(f"buffer_k must be >= 1, got {self.buffer_k}")
+        if self.staleness_schedule not in ("exp", "poly"):
+            raise ValueError("staleness_schedule must be 'exp' or 'poly', "
+                             f"got {self.staleness_schedule!r}")
         if not 0.0 < self.staleness_discount <= 1.0:
             raise ValueError("staleness_discount must be in (0, 1], got "
                              f"{self.staleness_discount}")
+        if self.staleness_alpha < 0.0:
+            raise ValueError("staleness_alpha must be >= 0, got "
+                             f"{self.staleness_alpha}")
         if self.max_staleness is not None and self.max_staleness < 0:
             raise ValueError("max_staleness must be >= 0 or None, got "
                              f"{self.max_staleness}")
@@ -86,6 +101,7 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
               acc_fn: Callable = lenet.accuracy,
               system: Optional[SystemModel] = None,
               placement: Optional[Placement] = None,
+              channel: Union[str, Channel, None] = None,
               keep_state: bool = False,
               seed: int = 0) -> History:
     """Run `fl.rounds` buffered-async aggregation events; returns History.
@@ -93,7 +109,9 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     Same surface as `run_federated` (which delegates here when passed
     ``async_cfg=``), minus ``sampler`` — the arrival buffer IS the per-event
     cohort.  ``system`` drives the virtual clock (default: the reliable
-    ``wired`` model, i.e. deterministic lockstep arrivals).
+    ``wired`` model, i.e. deterministic lockstep arrivals); ``channel``
+    (DESIGN.md §3b) adds uplink compression, bit accounting and per-client
+    link timing on top of it.
     """
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
@@ -102,6 +120,9 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     fl = FLConfig() if fl is None else fl
     system = SYSTEMS["wired"] if system is None else system
     placement = resolve_placement(placement)
+    channel = resolve_channel(channel)
+    codec = channel.codec if channel is not None else None
+    lossy = codec is not None and not codec.is_identity
 
     m = fed.m
     k_buf = min(cfg.buffer_k, m)
@@ -113,12 +134,18 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
                  placement, seed)
     ctx.staleness_discount = cfg.staleness_discount
+    ctx.staleness_schedule = cfg.staleness_schedule
+    ctx.staleness_alpha = cfg.staleness_alpha
+
+    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
+                                                 system, m)
 
     # clock draws come from a private numpy stream — the JAX key schedule
-    # below stays exactly the sync engine's
-    clock = VirtualClock(system, seed=seed)
+    # below stays exactly the sync engine's; the link profile (if any)
+    # swaps the homogeneous ρ uplink for each client's own payload/rate
+    clock = VirtualClock(system, seed=seed, link=link)
     for i in range(m):
-        clock.schedule(i, 0.0)
+        clock.schedule(i, 0.0, ul_bits=payload)
     # server version at each client's last model download; a model/update's
     # age at event e is  e - version[i]
     version = np.zeros(m, dtype=np.int64)
@@ -150,6 +177,14 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                 jnp.asarray(fresh_np[buffered]), stacked, opt_state,
                 x, y, n, ckeys)
 
+        if lossy:
+            # uplink channel crossing (DESIGN.md §3b): the fresh cohort's
+            # updates reach the server through the codec; in-flight /
+            # stale-dropped rows (mask False) transmit nothing and keep
+            # their error-feedback residuals
+            stacked, ef = channel_uplink(placement, channel, stacked, prev,
+                                         ef, kround, mask)
+
         ctx.rnd, ctx.key, ctx.participation = \
             event, jax.random.fold_in(kround, 1), mask
         ctx.staleness = jnp.asarray(age, jnp.float32) if age.any() else None
@@ -172,9 +207,29 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
         cost = CommCost(min(cost.n_streams, len(buffered)),
                         int(round(cost.n_unicasts * len(buffered) / m)))
         history.comm.append(cost)
-        t_done = clock.serve(cost.n_streams + cost.n_unicasts)
+        if channel is not None:
+            # every buffered client uploaded one payload (stale-dropped
+            # uploads still crossed the channel); the cohort downloads the
+            # codec-compressed model per stream (§3b)
+            history.comm_bits.append(ChannelCost(
+                dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
+                ul_bits=len(buffered) * payload))
+        if link is not None:
+            # same charging rule as the sync clock (slowest buffered
+            # subscriber per broadcast, receiver-mean per unicast)
+            duration = round_downlink_time(link, cost, payload, buffered)
+        else:
+            duration = cost.n_streams + cost.n_unicasts
+        # overlap=True: this event's streams run concurrently with any
+        # broadcast still in flight from an earlier event (the async-aware
+        # downlink charging fix) — an exact no-op in lockstep, where the
+        # downlink is always idle by the next event
+        done = clock.serve(duration, overlap=True)
+        # the reported clock stays monotone even if a later event's shorter
+        # broadcast completes before an earlier long one
+        t_done = max(t_done, done)
         for c in buffered:
-            clock.schedule(c, t_done)
+            clock.schedule(c, done, ul_bits=payload)
             version[c] = event + 1
 
         if event % fl.eval_every == 0 or event == fl.rounds - 1:
@@ -188,6 +243,10 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                                stacked, opt_state)
     history.extra["async"] = {"buffer_k": k_buf,
                               "max_staleness": cfg.max_staleness,
+                              "staleness_schedule": cfg.staleness_schedule,
                               "staleness_discount": cfg.staleness_discount,
+                              "staleness_alpha": cfg.staleness_alpha,
                               "events": fl.rounds}
+    if channel is not None:
+        channel_extra(history, channel, link, model_bits, payload)
     return history

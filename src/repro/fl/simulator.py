@@ -31,9 +31,13 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data.federated import FederatedData
-from repro.fl.comm import SystemModel
+from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
+                              round_downlink_time, tree_bits,
+                              zeros_like_stack)
+from repro.fl.comm import SYSTEMS, SystemModel
 from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export)
                                 Placement, evaluate, make_client_update,
                                 resolve_placement, stack_params,
@@ -131,6 +135,53 @@ def finalize_history(history: "History", strategy: Strategy, state: Any,
     return history
 
 
+def init_channel(channel: Optional[Channel], ctx: "RoundContext",
+                 stacked: Any, system: Optional[SystemModel], m: int):
+    """Shared channel prologue for the sync and async engines (so their
+    §3b semantics can't drift, like `init_run` for the round prologue):
+    payload bits, resolved link profile and the error-feedback residual
+    stack.  Returns ``(payload, link, model_bits, ef)`` — all None/0 when
+    no channel is attached.  The link is resolved (validating its spec)
+    even when no ``system`` will consume it, against the default wired
+    model, so ``extra["channel"]`` records it consistently."""
+    if channel is None:
+        return None, None, 0, None
+    codec = channel.codec
+    ef = None if codec.is_identity else zeros_like_stack(stacked)
+    model_bits = tree_bits(ctx.params0)
+    payload = codec.payload_bits(ctx.params0)
+    link = channel.resolve_link(system if system is not None
+                                else SYSTEMS["wired"], model_bits, m)
+    return payload, link, model_bits, ef
+
+
+def channel_uplink(placement: Placement, channel: Channel, stacked: Any,
+                   prev: Any, ef: Any, kround, mask):
+    """Shared per-round uplink crossing (lossy codecs only): both engines
+    derive the codec key as ``fold_in(kround, 2)`` — index 1 is the
+    strategies' derivation — and thread the EF residuals identically."""
+    stacked, new_ef = placement.uplink(
+        channel.codec, stacked, prev, ef, jax.random.fold_in(kround, 2),
+        mask)
+    return stacked, (new_ef if channel.error_feedback else ef)
+
+
+def channel_extra(history: "History", channel: Channel, link,
+                  model_bits: int, ul_payload: int) -> None:
+    """Shared `History.extra["channel"]` record of a channel-carrying run
+    (both engines): codec/link identity, per-payload bits and the run's
+    cumulative bit totals (the §3b bits axes)."""
+    history.extra["channel"] = {
+        "codec": channel.codec.spec,
+        "error_feedback": bool(channel.error_feedback),
+        "link": link.name if link is not None else None,
+        "model_bits": int(model_bits),
+        "payload_bits": int(ul_payload),
+        "dl_bits_total": int(sum(c.dl_bits for c in history.comm_bits)),
+        "ul_bits_total": int(sum(c.ul_bits for c in history.comm_bits)),
+    }
+
+
 @dataclass
 class History:
     rounds: List[int] = field(default_factory=list)
@@ -138,6 +189,9 @@ class History:
     worst_acc: List[float] = field(default_factory=list)
     time: List[float] = field(default_factory=list)
     comm: List[CommCost] = field(default_factory=list)
+    # bits-based sibling of `comm`, one entry per round — populated only
+    # when the run carries a Channel (DESIGN.md §3b)
+    comm_bits: List[ChannelCost] = field(default_factory=list)
     extras: Optional[StrategyExtras] = None
     # legacy mapping view, filled by the engine from `comm` + `extras`;
     # a real dict so pre-redesign callers that annotate it keep working
@@ -158,6 +212,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   acc_fn: Callable = lenet.accuracy,
                   system: Optional[SystemModel] = None,
                   placement: Optional[Placement] = None,
+                  channel: Union[str, Channel, None] = None,
                   keep_state: bool = False,
                   async_cfg: Optional[Any] = None,
                   seed: int = 0) -> History:
@@ -169,8 +224,11 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     ``placement`` selects the client layout backend (default `HostVmap`,
     bit-identical to the pre-placement engine); ``keep_state=True``
     attaches the final stacked params / opt state to the History.
-    ``async_cfg`` (an `AsyncConfig`) switches to the event-driven
-    buffered-async runtime (DESIGN.md §3a).
+    ``channel`` (a `Channel` or codec spec string, DESIGN.md §3b) turns on
+    bit-level payload accounting, uplink compression with error feedback
+    and per-client link timing; ``Channel()``/None with the identity codec
+    are bit-identical.  ``async_cfg`` (an `AsyncConfig`) switches to the
+    event-driven buffered-async runtime (DESIGN.md §3a).
     """
     if async_cfg is not None:
         if sampler is not None:
@@ -180,22 +238,29 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         return run_async(algorithm, fed, strategy=strategy,
                          async_cfg=async_cfg, fl=fl, model_init=model_init,
                          loss_fn=loss_fn, acc_fn=acc_fn, system=system,
-                         placement=placement, keep_state=keep_state,
-                         seed=seed)
+                         placement=placement, channel=channel,
+                         keep_state=keep_state, seed=seed)
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")
     fl = FLConfig() if fl is None else fl
     placement = resolve_placement(placement)
+    channel = resolve_channel(channel)
+    codec = channel.codec if channel is not None else None
+    lossy = codec is not None and not codec.is_identity
 
     m = fed.m
     # When no sampler can roll clients back and the strategy declares it
     # never reads `prev`, the update step may consume (donate) the old
     # stacked/opt buffers — peak memory drops from ~2× params+opt to ~1×.
-    donate = sampler is None and not strategy.reads_prev
+    # A lossy codec reads `prev` too (the uplink transmits Δ = new − prev).
+    donate = sampler is None and not strategy.reads_prev and not lossy
     key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
                  placement, seed, donate=donate)
+
+    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
+                                                 system, m)
 
     history = History()
     t_accum = 0.0
@@ -218,6 +283,12 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             stacked = placement.select(mask, stacked, prev)
             opt_state = placement.select(mask, opt_state, prev_opt)
 
+        if lossy:
+            # uplink channel crossing (DESIGN.md §3b): the server receives
+            # the codec's decode(encode(Δ + residual))
+            stacked, ef = channel_uplink(placement, channel, stacked, prev,
+                                         ef, kround, mask)
+
         # strategies get their own key derivation: kround's raw splits are
         # already consumed as the per-client minibatch keys
         ctx.rnd, ctx.key, ctx.participation = \
@@ -226,12 +297,28 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
 
         cost = strategy.comm(state)
         history.comm.append(cost)
-        if system is not None:
+        if channel is not None or system is not None:
             # the round only waits for the clients that computed: H_|S|
-            # under partial participation, not H_m
+            # under partial participation, not H_m (host-synced only when
+            # a clock or the bits axis consumes it)
             n_part = m if mask is None else int(jnp.sum(mask))
-            t_accum += system.round_time(n_part, n_streams=cost.n_streams,
-                                         n_unicasts=cost.n_unicasts)
+        if channel is not None:
+            # downlink streams move the codec-compressed model (§3b)
+            history.comm_bits.append(ChannelCost(
+                dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
+                ul_bits=n_part * payload))
+        if system is not None:
+            if link is not None:
+                participants = (None if mask is None
+                                else np.where(np.asarray(mask))[0])
+                t_accum += (system.compute_time(n_part)
+                            + link.max_uplink_time(payload, participants)
+                            + round_downlink_time(link, cost, payload,
+                                                       participants))
+            else:
+                t_accum += system.round_time(n_part,
+                                             n_streams=cost.n_streams,
+                                             n_unicasts=cost.n_unicasts)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
@@ -240,5 +327,8 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             history.worst_acc.append(worst_acc)
             history.time.append(t_accum)
 
-    return finalize_history(history, strategy, state, keep_state,
-                            stacked, opt_state)
+    history = finalize_history(history, strategy, state, keep_state,
+                               stacked, opt_state)
+    if channel is not None:
+        channel_extra(history, channel, link, model_bits, payload)
+    return history

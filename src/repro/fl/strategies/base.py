@@ -39,20 +39,41 @@ class CommCost(NamedTuple):
     n_unicasts: int
 
 
+def staleness_factors(staleness: jnp.ndarray, *, schedule: str = "exp",
+                      discount: float = 1.0,
+                      alpha: float = 0.5) -> jnp.ndarray:
+    """Per-contributor staleness weights s(age) ∈ (0, 1].
+
+    ``exp``  — FedBuff-style geometric decay ``discount ** age``;
+    ``poly`` — FedAsync's polynomial schedule ``(1 + age) ** −alpha``
+    (Xie et al. 2019), heavier-tailed: old-but-arriving updates keep more
+    mass than under any geometric λ.  Both are exactly 1 at age 0.
+    """
+    age = jnp.asarray(staleness, jnp.float32)
+    if schedule == "exp":
+        return jnp.asarray(discount, jnp.float32) ** age
+    if schedule == "poly":
+        return (1.0 + age) ** jnp.asarray(-alpha, jnp.float32)
+    raise ValueError(f"unknown staleness schedule {schedule!r}; "
+                     "one of exp | poly")
+
+
 def staleness_reweight(w: jnp.ndarray, staleness: jnp.ndarray,
-                       discount: float) -> jnp.ndarray:
+                       discount: float, *, schedule: str = "exp",
+                       alpha: float = 0.5) -> jnp.ndarray:
     """Discount stale contributor columns of an aggregation-rule matrix.
 
     ``w`` is any (r, m) weight matrix whose COLUMNS index contributing
     client models; ``staleness[j]`` is the age of model j in server
     versions (async runtime, DESIGN.md §3a).  Each column is scaled by
-    ``discount ** staleness[j]`` and each row rescaled back to its ORIGINAL
-    total mass — row-stochastic rules stay row-stochastic, and FedFOMO's
-    sub-stochastic rows keep their self-residual.  All-zero staleness (or
-    ``discount == 1``) is an exact identity.
+    `staleness_factors` (default: ``discount ** staleness[j]``) and each
+    row rescaled back to its ORIGINAL total mass — row-stochastic rules
+    stay row-stochastic, and FedFOMO's sub-stochastic rows keep their
+    self-residual.  All-zero staleness (or ``discount == 1`` under the
+    exp schedule) is an exact identity.
     """
-    d = jnp.asarray(discount, jnp.float32) ** \
-        jnp.asarray(staleness, jnp.float32)
+    d = staleness_factors(staleness, schedule=schedule, discount=discount,
+                          alpha=alpha)
     wd = w * d[None, :].astype(w.dtype)
     mass = jnp.sum(w, axis=1, keepdims=True)
     new_mass = jnp.sum(wd, axis=1, keepdims=True)
@@ -78,6 +99,8 @@ class RoundContext:
     # (None for sync rounds and for async events where every model is fresh)
     staleness: Optional[jnp.ndarray] = None
     staleness_discount: float = 1.0
+    staleness_schedule: str = "exp"     # exp | poly (DESIGN.md §3a)
+    staleness_alpha: float = 0.5        # poly schedule exponent
     strategy: Optional[Any] = None  # the running Strategy, for `reweight`
 
     @property
@@ -99,7 +122,9 @@ class RoundContext:
             return self.strategy.reweight(w, self)
         if self.staleness is None:   # engine-less driving with no strategy
             return w
-        return staleness_reweight(w, self.staleness, self.staleness_discount)
+        return staleness_reweight(w, self.staleness, self.staleness_discount,
+                                  schedule=self.staleness_schedule,
+                                  alpha=self.staleness_alpha)
 
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
         """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
@@ -176,12 +201,15 @@ class Strategy(abc.ABC):
         matrix through here (`ctx.mix_plan` its centroids, when the run
         carries staleness).  Default: identity for sync rounds
         (``ctx.staleness`` is None); under the async runtime, stale
-        contributor columns are discounted by ``ctx.staleness_discount **
-        age``, mass-preserving per row.  Override for strategy-specific
-        staleness handling."""
+        contributor columns are discounted per ``ctx.staleness_schedule``
+        (``discount ** age`` or FedAsync's ``(1+age)**-alpha``),
+        mass-preserving per row.  Override for strategy-specific staleness
+        handling."""
         if ctx.staleness is None:
             return w
-        return staleness_reweight(w, ctx.staleness, ctx.staleness_discount)
+        return staleness_reweight(w, ctx.staleness, ctx.staleness_discount,
+                                  schedule=ctx.staleness_schedule,
+                                  alpha=ctx.staleness_alpha)
 
     @classmethod
     def downlink_cost(cls, m: int, *, n_streams: int = 1,

@@ -16,6 +16,10 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mixing_aggregate import mixing_aggregate as _mix
 from repro.kernels.pairwise_sqdist import gram_matrix as _gram
 from repro.kernels.pairwise_sqdist import pairwise_sqdist as _sqdist
+from repro.kernels.quantize import (qsgd_dequantize as _qsgd_deq,
+                                    qsgd_quantize as _qsgd_q,
+                                    rowwise_absmax as _absmax)
+from repro.kernels.topk_threshold import topk_threshold as _topk
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -48,6 +52,42 @@ def gram_matrix(g: jnp.ndarray, *, dblk: int = 2048) -> jnp.ndarray:
     return _gram(g2, dblk=dblk, interpret=INTERPRET)[:m, :m]
 
 
+def qsgd_quantize(x: jnp.ndarray, noise: jnp.ndarray, *, bits: int,
+                  dblk: int = 2048):
+    """(levels int32, absmax (m,1)) of the QSGD channel codec; rows padded
+    to the sublane boundary and cropped."""
+    m = x.shape[0]
+    x2, _ = _pad_rows(x)
+    noise2, _ = _pad_rows(noise)
+    amax = _absmax(x2, dblk=dblk, interpret=INTERPRET)
+    q = _qsgd_q(x2, noise2, amax, bits=bits, dblk=dblk, interpret=INTERPRET)
+    return q[:m], amax[:m]
+
+
+def qsgd_dequantize(q: jnp.ndarray, absmax: jnp.ndarray, *, bits: int,
+                    dblk: int = 2048) -> jnp.ndarray:
+    m = q.shape[0]
+    q2, _ = _pad_rows(q)
+    amax2, _ = _pad_rows(absmax)
+    return _qsgd_deq(q2, amax2, bits=bits, dblk=dblk,
+                     interpret=INTERPRET)[:m]
+
+
+def qsgd_roundtrip(x: jnp.ndarray, noise: jnp.ndarray, *, bits: int,
+                   dblk: int = 2048) -> jnp.ndarray:
+    """Fused channel view: dequantize(quantize(x)) — what the server sees."""
+    q, amax = qsgd_quantize(x, noise, bits=bits, dblk=dblk)
+    return qsgd_dequantize(q, amax, bits=bits, dblk=dblk)
+
+
+def topk_threshold(absx: jnp.ndarray, *, k: int, rblk: int = 8
+                   ) -> jnp.ndarray:
+    """Per-row top-k magnitude cutoff (m, 1); rows padded to rblk."""
+    m = absx.shape[0]
+    absx2, _ = _pad_rows(absx, mult=rblk)
+    return _topk(absx2, k=k, rblk=rblk, interpret=INTERPRET)[:m]
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
@@ -57,4 +97,5 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 __all__ = ["mixing_aggregate", "pairwise_sqdist", "gram_matrix",
-           "flash_attention", "ref", "INTERPRET"]
+           "flash_attention", "qsgd_quantize", "qsgd_dequantize",
+           "qsgd_roundtrip", "topk_threshold", "ref", "INTERPRET"]

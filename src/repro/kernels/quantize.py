@@ -1,0 +1,147 @@
+"""Pallas TPU kernels: QSGD stochastic uniform quantization (channel uplink).
+
+The wireless channel subsystem (DESIGN.md §3b) compresses each client's
+update vector before it crosses the uplink.  The payload is the (m, D)
+client-stacked flat update; QSGD with b bits quantizes each row onto the
+signed grid ``{-s..s} · scale_i`` with ``s = 2^(b-1) − 1`` and a per-row
+scale ``max|x_i|/s``, using stochastic rounding so the quantizer is
+unbiased: ``E[q] = x/scale`` exactly (``floor(y + u)`` with ``u ~ U[0,1)``).
+
+Three kernels, all streaming D through VMEM in (m, DBLK) tiles:
+
+  * `rowwise_absmax`  — per-row max|x|, accumulated across the D grid.
+  * `qsgd_quantize`   — int32 levels from (x, absmax, uniform noise).  The
+    noise rides in as an input (the host engines draw it from the run's
+    JAX key) — deterministic given a key, and the kernel body is identical
+    under interpret mode, where the TPU-resident PRNG is unavailable.
+  * `qsgd_dequantize` — levels × per-row scale back to f32.
+
+Levels are carried as int32 (8-sublane tiling like the f32 tiles; the
+*accounted* payload is b bits/element + one 32-bit scale per row —
+`repro.fl.channel.payload` owns that arithmetic, the simulation never
+materializes the packed bitstream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_DBLK = 2048
+
+
+def _absmax_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+    tile = jnp.max(jnp.abs(x_ref[...]), axis=1, keepdims=True)   # (m, 1)
+    tile = jnp.broadcast_to(tile, out_ref.shape)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(i > 0)
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], tile)
+
+
+@functools.partial(jax.jit, static_argnames=("dblk", "interpret"))
+def rowwise_absmax(x: jnp.ndarray, *, dblk: int = DEFAULT_DBLK,
+                   interpret: bool = False) -> jnp.ndarray:
+    """(m, D) f32 -> (m, 1) per-row max|x| (0 for all-zero rows)."""
+    m, d = x.shape
+    pad_d = (-d) % dblk
+    if pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+    grid = (x.shape[1] // dblk,)
+    out = pl.pallas_call(
+        _absmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, dblk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, 128), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 128), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[:, :1]
+
+
+# The per-row scale is ``absmax · (1/levels)`` — an explicit reciprocal
+# multiply, NOT ``absmax / levels``: XLA rewrites division by a constant
+# into the reciprocal multiply anyway inside the kernel, so spelling it
+# out keeps the kernel bit-identical to the pure-jnp oracle
+# (`ref.qsgd_roundtrip_ref`), which the mesh codec path executes.
+
+
+def _quantize_kernel(x_ref, noise_ref, absmax_ref, q_ref, *, levels: float):
+    scale = absmax_ref[...][:, :1] * (1.0 / levels)             # (m, 1)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    y = x_ref[...] * inv
+    q = jnp.floor(y + noise_ref[...])                           # unbiased
+    q_ref[...] = jnp.clip(q, -levels, levels).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dblk", "interpret"))
+def qsgd_quantize(x: jnp.ndarray, noise: jnp.ndarray, absmax: jnp.ndarray, *,
+                  bits: int, dblk: int = DEFAULT_DBLK,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Stochastic-rounding quantization to signed b-bit levels.
+
+    x, noise: (m, D); absmax: (m, 1) from `rowwise_absmax`; noise ~ U[0,1).
+    Returns int32 levels in [-s, s], s = 2^(b-1) − 1.
+    """
+    if not 2 <= bits <= 8:
+        raise ValueError(f"qsgd bits must be in [2, 8], got {bits}")
+    m, d = x.shape
+    levels = float(2 ** (bits - 1) - 1)
+    pad_d = (-d) % dblk
+    if pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+        noise = jnp.pad(noise, ((0, 0), (0, pad_d)))
+    absmax = jnp.broadcast_to(absmax, (m, 128))
+    grid = (x.shape[1] // dblk,)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, dblk), lambda i: (0, i)),
+            pl.BlockSpec((m, dblk), lambda i: (0, i)),
+            pl.BlockSpec((m, 128), lambda i: (0, 0)),   # absmax resident
+        ],
+        out_specs=pl.BlockSpec((m, dblk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, x.shape[1]), jnp.int32),
+        interpret=interpret,
+    )(x, noise, absmax)
+    return out[:, :d] if pad_d else out
+
+
+def _dequantize_kernel(q_ref, absmax_ref, out_ref, *, levels: float):
+    scale = absmax_ref[...][:, :1] * (1.0 / levels)
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dblk", "interpret"))
+def qsgd_dequantize(q: jnp.ndarray, absmax: jnp.ndarray, *, bits: int,
+                    dblk: int = DEFAULT_DBLK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """int32 levels (m, D) × per-row scale -> f32 values."""
+    m, d = q.shape
+    levels = float(2 ** (bits - 1) - 1)
+    pad_d = (-d) % dblk
+    if pad_d:
+        q = jnp.pad(q, ((0, 0), (0, pad_d)))
+    absmax = jnp.broadcast_to(absmax, (m, 128))
+    grid = (q.shape[1] // dblk,)
+    out = pl.pallas_call(
+        functools.partial(_dequantize_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, dblk), lambda i: (0, i)),
+            pl.BlockSpec((m, 128), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, dblk), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, q.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(q, absmax)
+    return out[:, :d] if pad_d else out

@@ -23,6 +23,38 @@ def pairwise_sqdist_ref(g: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * gram, 0.0)
 
 
+def qsgd_roundtrip_ref(x: jnp.ndarray, noise: jnp.ndarray,
+                       bits: int) -> jnp.ndarray:
+    """QSGD quantize→dequantize on (m, D) rows: per-row scale max|x|/s with
+    s = 2^(b-1) − 1, stochastic rounding ``floor(y + u)`` (unbiased given
+    ``noise ~ U[0,1)``).  The mesh placement's GSPMD-friendly codec path
+    (DESIGN.md §3b) runs exactly this math."""
+    levels = float(2 ** (bits - 1) - 1)
+    # reciprocal multiply, matching the kernel's formulation bit-for-bit
+    # (XLA lowers in-kernel division by a constant to exactly this)
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) * (1.0 / levels)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.floor(x * inv + noise), -levels, levels)
+    return q * scale
+
+
+def topk_mask_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact per-row top-k-|x| survivor mask via `jax.lax.top_k`: (m, D)
+    bool, ties resolved by first-index (may keep slightly fewer than the
+    threshold kernel, which keeps all tied coordinates)."""
+    k = min(int(k), x.shape[1])
+    absx = jnp.abs(x)
+    kth = jax.lax.top_k(absx, k)[0][:, -1:]
+    return absx >= kth
+
+
+def topk_threshold_ref(absx: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact k-th largest magnitude per row: (m, 1) (0 when k >= D)."""
+    if k >= absx.shape[1]:
+        return jnp.zeros((absx.shape[0], 1), absx.dtype)
+    return jax.lax.top_k(absx, int(k))[0][:, -1:]
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True,
                         window: Optional[int] = None,

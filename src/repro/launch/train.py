@@ -36,8 +36,8 @@ from repro.checkpoint import save_train_state
 from repro.configs import get_config, reduced
 from repro.data.federated import FederatedData
 from repro.data.synthetic import synthetic_lm_tokens
-from repro.fl import (AsyncConfig, FLConfig, HostVmap, MeshShardMap, SYSTEMS,
-                      UniformFraction, get_strategy, run_federated)
+from repro.fl import (AsyncConfig, Channel, FLConfig, HostVmap, MeshShardMap,
+                      SYSTEMS, UniformFraction, get_strategy, run_federated)
 from repro.launch.steps import _loss_fn, init_model_params
 
 
@@ -118,7 +118,25 @@ def main(argv=None):
                    help="async: drop updates older than this many server "
                         "versions (default: keep all)")
     p.add_argument("--staleness-discount", type=float, default=0.9,
-                   help="async: λ of the λ**age contributor discount")
+                   help="async: λ of the exp-schedule λ**age discount")
+    p.add_argument("--staleness-schedule", default="exp",
+                   choices=("exp", "poly"),
+                   help="async: contributor discount law — FedBuff-style "
+                        "exp (λ**age) or FedAsync poly ((1+age)**-α)")
+    p.add_argument("--staleness-alpha", type=float, default=0.5,
+                   help="async: α of the poly staleness schedule")
+    p.add_argument("--codec", default=None,
+                   help="uplink channel codec (DESIGN.md §3b): identity | "
+                        "qsgd:<bits> | topk:<frac>; enables bit-level "
+                        "payload accounting")
+    p.add_argument("--link-profile", default=None,
+                   help="per-client link rates: uniform | tiered:<factor> "
+                        "| lognormal:<sigma> (implies a channel)")
+    p.add_argument("--error-feedback", dest="error_feedback",
+                   action="store_true", default=True,
+                   help="carry per-client codec residuals (default on)")
+    p.add_argument("--no-error-feedback", dest="error_feedback",
+                   action="store_false")
     p.add_argument("--system", default="wired", choices=tuple(SYSTEMS),
                    help="analytic clock (paper §IV-C); in --async mode "
                         "also the virtual clock's arrival law")
@@ -155,19 +173,28 @@ def main(argv=None):
                     "arrival buffer is the per-event cohort")
         async_cfg = AsyncConfig(buffer_k=args.buffer_k,
                                 max_staleness=args.max_staleness,
-                                staleness_discount=args.staleness_discount)
+                                staleness_schedule=args.staleness_schedule,
+                                staleness_discount=args.staleness_discount,
+                                staleness_alpha=args.staleness_alpha)
     sampler = (UniformFraction(args.participation)
                if args.participation < 1.0 else None)
+    channel = None
+    if args.codec is not None or args.link_profile is not None:
+        channel = Channel(codec=args.codec or "identity",
+                          link=args.link_profile,
+                          error_feedback=args.error_feedback)
 
     print(f"arch={cfg.name} preset={args.preset} clients={m} "
           f"alg={strategy.spec} placement={placement!r}"
-          + (f" async={async_cfg}" if async_cfg else ""))
+          + (f" async={async_cfg}" if async_cfg else "")
+          + (f" channel={channel}" if channel else ""))
     t0 = time.time()
     history = run_federated(
         strategy=strategy, fed=fed, fl=fl, sampler=sampler,
         model_init=lambda k: init_model_params(k, cfg),
         loss_fn=loss_fn, acc_fn=acc_fn, system=SYSTEMS[args.system],
-        placement=placement, keep_state=bool(args.checkpoint),
+        placement=placement, channel=channel,
+        keep_state=bool(args.checkpoint),
         async_cfg=async_cfg, seed=args.seed)
 
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(
@@ -187,6 +214,13 @@ def main(argv=None):
     unicasts = sum(c.n_unicasts for c in history.comm)
     print(f"downlink total: {streams} streams, {unicasts} unicasts "
           f"({args.system})")
+    if channel is not None:
+        ch = history.extra["channel"]
+        print(f"channel: codec={ch['codec']} link={ch['link']} "
+              f"payload={ch['payload_bits']/1e6:.2f} Mbit "
+              f"(model {ch['model_bits']/1e6:.2f} Mbit) | "
+              f"downlink {ch['dl_bits_total']/1e6:.1f} Mbit, "
+              f"uplink {ch['ul_bits_total']/1e6:.1f} Mbit")
 
     if args.checkpoint:
         save_train_state(args.checkpoint, args.steps,

@@ -124,7 +124,9 @@ def test_async_records_event_metadata(fed):
                       async_cfg=AsyncConfig(buffer_k=2, max_staleness=3.0,
                                             staleness_discount=0.8))
     assert h.extra["async"] == {"buffer_k": 2, "max_staleness": 3.0,
+                                "staleness_schedule": "exp",
                                 "staleness_discount": 0.8,
+                                "staleness_alpha": 0.5,
                                 "events": SMALL.rounds}
 
 
