@@ -208,15 +208,66 @@ ITERATIONS = {
 }
 
 
-def round_engine_bench(rounds: int = 8):
-    """Rounds/sec of the federated round engine per placement × schedule
-    (the tentpole perf trajectory seed) -> BENCH_round_engine.json.
+def _dispatch_probe(fed):
+    """A deliberately tiny dense model (flatten -> logits) for the round-
+    engine bench: on real accelerators the per-round model step is
+    microseconds and rounds/sec is governed by per-round ENGINE overhead
+    (Python re-entry, jit dispatches, host syncs) — the quantity the
+    superstep fuses away.  A LeNet miniature on this CPU container is
+    conv-compute-bound and would measure the host, not the engine.
+    Returns ``(model_init, loss_fn, acc_fn)`` in the engine's contract
+    (loss has aux, like `repro.models.lenet`)."""
+    import jax
+    import jax.numpy as jnp
 
-    Runs a paper-shaped miniature (LeNet, m=8 label-shift clients).  The
-    per-run fixed costs (strategy.setup similarity pre-round, data
-    placement, compiles, the round-0 and final evals) are removed by
-    timing the DELTA between a short and a long run on the same placement
-    instance: rounds/sec = (R_long − R_short) / (t_long − t_short).
+    d = int(fed.x.shape[2] * fed.x.shape[3] * fed.x.shape[4])
+    n_classes = int(jnp.max(fed.y)) + 1
+
+    def model_init(key):
+        # a single leaf: every per-leaf engine op (mix, sgd, donation)
+        # then costs exactly one kernel, keeping the probe about the
+        # ENGINE's per-round work, not the model's pytree size
+        return {"w": 0.01 * jax.random.normal(key, (d, n_classes),
+                                              jnp.float32)}
+
+    def apply(p, x):
+        return x.reshape((x.shape[0], -1)) @ p["w"]
+
+    def loss_fn(p, batch):
+        logits = apply(p, batch["x"])
+        lps = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            lps, batch["y"][:, None].astype(jnp.int32), axis=-1)[:, 0]
+        loss = jnp.mean(nll)
+        return loss, {"loss": loss}
+
+    def acc_fn(p, batch):
+        logits = apply(p, batch["x"])
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"])
+                        .astype(jnp.float32))
+
+    return model_init, loss_fn, acc_fn
+
+
+def round_engine_bench(rounds: int = 192):
+    """Rounds/sec of the federated round engine per placement × schedule,
+    eventful loop vs fused superstep (DESIGN.md §3c)
+    -> BENCH_round_engine.json.
+
+    Runs an m=8 label-shift miniature with the `_dispatch_probe` model so
+    the number measures engine throughput.  The per-run fixed costs
+    (strategy.setup, data placement, compiles, the round-0 and final
+    evals) are removed by timing the DELTA between a short and a long run
+    on the same placement instance: rounds/sec = (R_long − R_short) /
+    (t_long − t_short); both lengths are warmed up first so superstep
+    scan compiles never pollute the delta.
+
+    Also runs the superstep PARITY ANCHORS (ucfl_k2 + sampler + qsgd:4,
+    fused vs eventful) per placement row and RAISES if they diverge —
+    CI's bench step doubles as the parity smoke.  The mesh ``gspmd``
+    anchor is allclose (XLA owns its einsum partitioning and may
+    reassociate the mix inside the scan); the pinned shard_map schedules
+    and host are exact.
     """
     flags = os.environ.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
@@ -225,41 +276,102 @@ def round_engine_bench(rounds: int = 8):
         os.environ["XLA_FLAGS"] = \
             (flags + " --xla_force_host_platform_device_count=8").strip()
     import jax
+    import numpy as np
     from repro.core.distributed import MIX_SCHEDULES
     from repro.data.federated import scenario_label_shift
-    from repro.fl import FLConfig, HostVmap, MeshShardMap, run_federated
+    from repro.fl import (Channel, FLConfig, HostVmap, MeshShardMap, SYSTEMS,
+                          UniformFraction, run_federated)
 
     fed = scenario_label_shift(jax.random.PRNGKey(0), n=800, m=8)
+    model_init, loss_fn, acc_fn = _dispatch_probe(fed)
+    probe_kw = dict(model_init=model_init, loss_fn=loss_fn, acc_fn=acc_fn)
+    # sampler + analytic clock: the sweep-driver configuration (every
+    # paper figure carries a time axis).  The eventful loop pays one
+    # blocking mask pull per round for the clock's participant set — the
+    # superstep returns all masks as a single stacked transfer per chunk
+    kw = dict(sampler=UniformFraction(0.5), system=SYSTEMS["wired"],
+              **probe_kw)
+
+    # many marginal rounds: a fused round costs well under a millisecond,
+    # so the short/long delta needs a long lever arm to clear run-to-run
+    # fixed-cost noise (setup, placement, evals)
+    r_short, r_long = 2, rounds + 2
 
     def fl_for(r):
-        return FLConfig(rounds=r, local_steps=4, batch_size=32,
-                        eval_every=10 * (rounds + 2))
-    r_short, r_long = 2, rounds + 2
+        # one small momentum-less local step: the round is then ~pure
+        # engine overhead, which is what the probe is for (the
+        # fused/eventful compute term is identical either way — only the
+        # overhead differs); eval_every past r_long so no mid-run eval
+        # pollutes the short/long delta
+        return FLConfig(rounds=r, local_steps=1, batch_size=4,
+                        momentum=0.0, eval_every=10 * r_long)
     configs = [("host_vmap", None)] + \
         [("mesh_shard_map", s) for s in MIX_SCHEDULES]
     rows = []
     for name, schedule in configs:
         placement = HostVmap() if schedule is None else \
             MeshShardMap(schedule=schedule)
-        run_federated("ucfl_k2", fed, fl=fl_for(r_short),
-                      placement=placement)           # compile warmup
-        t0 = time.perf_counter()
-        run_federated("ucfl_k2", fed, fl=fl_for(r_short),
-                      placement=placement)
-        t1 = time.perf_counter()
-        run_federated("ucfl_k2", fed, fl=fl_for(r_long),
-                      placement=placement)
-        t2 = time.perf_counter()
-        delta = (t2 - t1) - (t1 - t0)
-        # noisy runner can make the short run cost more than the marginal
-        # long-run rounds; record null rather than a bogus huge number
-        rps = (r_long - r_short) / delta if delta > 0 else None
+        rps = {}
+        for fuse in (False, True):
+            # compile warmup — both scan lengths for the fused engine
+            # (one executable per chunk length); the eventful jits are
+            # round-count independent, one short run warms them
+            for r in ((r_short, r_long) if fuse else (r_short,)):
+                run_federated("ucfl_k2", fed, fl=fl_for(r),
+                              placement=placement, superstep=fuse, **kw)
+
+            def timed(r):
+                # best-of-3: the per-run fixed costs (setup, placement,
+                # evals) fluctuate by more than a fused round costs
+                best = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    run_federated("ucfl_k2", fed, fl=fl_for(r),
+                                  placement=placement, superstep=fuse,
+                                  **kw)
+                    best = min(best, time.perf_counter() - t0)
+                return best
+
+            delta = timed(r_long) - timed(r_short)
+            # noisy runner can make the short run cost more than the
+            # marginal long-run rounds; record null, not a bogus number
+            rps[fuse] = (r_long - r_short) / delta if delta > 0 else None
+
+        # parity anchor: fused vs eventful must agree on this placement
+        fl_p = FLConfig(rounds=4, local_steps=2, batch_size=16,
+                        eval_every=2)
+        pkw = dict(fl=fl_p, sampler=UniformFraction(0.5),
+                   channel=Channel(codec="qsgd:4"), placement=placement,
+                   system=SYSTEMS["wired"], **probe_kw)
+        h_ev = run_federated("ucfl_k2", fed, superstep=False, **pkw)
+        h_ss = run_federated("ucfl_k2", fed, superstep=True, **pkw)
+        exact = schedule != "gspmd" or len(jax.devices()) == 1
+        acc_ok = (h_ss.mean_acc == h_ev.mean_acc if exact else
+                  bool(np.allclose(h_ss.mean_acc, h_ev.mean_acc,
+                                   atol=1e-5)))
+        parity_ok = (acc_ok and h_ss.time == h_ev.time
+                     and h_ss.comm == h_ev.comm
+                     and h_ss.comm_bits == h_ev.comm_bits)
+        if not parity_ok:
+            raise RuntimeError(
+                f"superstep parity anchor diverged on {name}"
+                f"/{schedule or '-'}: eventful {h_ev.mean_acc} vs fused "
+                f"{h_ss.mean_acc} (time {h_ev.time} vs {h_ss.time})")
+
+        speedup = (rps[True] / rps[False]
+                   if rps[True] and rps[False] else None)
         rows.append({"placement": name, "schedule": schedule,
                      "m": fed.m, "devices": len(jax.devices()),
-                     "rounds": r_long - r_short, "rounds_per_sec": rps})
+                     "rounds": r_long - r_short, "model": "dispatch_probe",
+                     "rounds_per_sec": rps[False],
+                     "rounds_per_sec_superstep": rps[True],
+                     "superstep_speedup": speedup,
+                     "parity": "exact" if exact else "allclose"})
+        fmt = lambda v: f"{v:8.2f}" if v else "   noise"
         print(f"{name:16s} schedule={schedule or '-':20s} "
-              + (f"{rps:6.2f} rounds/s" if rps else
-                 "unmeasurable (timing noise)"))
+              f"eventful={fmt(rps[False])} r/s  "
+              f"superstep={fmt(rps[True])} r/s  "
+              + (f"({speedup:4.1f}x)" if speedup else ""))
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_round_engine.json")
     with open(path, "w") as f:

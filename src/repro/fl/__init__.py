@@ -3,7 +3,8 @@ from repro.fl.channel import (Channel, ChannelCost, Codec, LinkProfile,
 from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
 from repro.fl.placement import HostVmap, MeshShardMap, Placement
-from repro.fl.simulator import (FLConfig, History, evaluate, run_federated)
+from repro.fl.simulator import (FLConfig, History, evaluate, run_federated,
+                                superstep_support)
 from repro.fl.runtime import AsyncConfig, VirtualClock, run_async
 from repro.fl.stats import full_client_gradients, sigma2_estimates
 from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
@@ -18,7 +19,8 @@ __all__ = ["AsyncConfig", "VirtualClock", "run_async",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",
-           "History", "evaluate", "run_federated", "full_client_gradients",
+           "History", "evaluate", "run_federated", "superstep_support",
+           "full_client_gradients",
            "sigma2_estimates", "ClientSampler", "ClusterExtras", "CommCost",
            "FullParticipation", "MixingExtras", "RoundContext", "Strategy",
            "StrategyExtras", "UniformFraction", "available_strategies",

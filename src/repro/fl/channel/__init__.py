@@ -20,7 +20,8 @@ from typing import Optional, Union
 
 from repro.fl.channel.codecs import (BACKENDS, CODECS, Codec, Identity, QSGD,
                                      TopK, apply_uplink, get_codec,
-                                     register_codec, zeros_like_stack)
+                                     register_codec, uplink_roundtrip,
+                                     zeros_like_stack)
 from repro.fl.channel.link import (LINK_FAMILIES, LinkProfile,
                                    get_link_profile, round_downlink_time)
 from repro.fl.channel.payload import (ChannelCost, dtype_bits, leaf_bits,
@@ -76,5 +77,5 @@ __all__ = [
     "dtype_bits", "get_codec",
     "get_link_profile", "leaf_bits", "register_codec", "resolve_channel",
     "stacked_ravel", "stacked_unravel", "round_downlink_time",
-    "tree_bits", "tree_size", "zeros_like_stack",
+    "tree_bits", "tree_size", "uplink_roundtrip", "zeros_like_stack",
 ]

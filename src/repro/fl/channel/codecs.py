@@ -183,34 +183,43 @@ def get_codec(spec) -> Codec:
 # error-feedback uplink application (engine entry point)
 
 
+def uplink_roundtrip(codec: Codec, stacked: Any, prev: Any, ef: Any,
+                     key: jnp.ndarray, mask: Optional[jnp.ndarray], *,
+                     backend: str = "pallas") -> Tuple[Any, Any]:
+    """The EF uplink algebra as a PURE traced function: transmit v = Δ + e,
+    return ``(prev + decode(v), v − decode(v))`` with non-participant rows
+    untouched.  Used directly inside the superstep scan (DESIGN.md §3c);
+    `apply_uplink` wraps it in the cached per-round jit for the eventful
+    engines."""
+    delta = jax.tree_util.tree_map(jnp.subtract, stacked, prev)
+    v = jax.tree_util.tree_map(jnp.add, delta, ef)
+    flat = stacked_ravel(v)
+    dec_flat = codec.roundtrip(flat, key, backend=backend)
+    dec = stacked_unravel(dec_flat, v)
+    new_ef = jax.tree_util.tree_map(jnp.subtract, v, dec)
+    # residuals ride in f32; the model stack keeps its own dtype
+    new_stacked = jax.tree_util.tree_map(
+        lambda p, d: (p + d).astype(p.dtype), prev, dec)
+    if mask is not None:
+        # non-participants transmitted nothing: model and residual
+        # rows stay exactly as they were
+        sel = lambda a, b: jax.tree_util.tree_map(
+            lambda x, y: jnp.where(
+                mask.reshape((-1,) + (1,) * (x.ndim - 1)), x, y), a, b)
+        new_stacked = sel(new_stacked, stacked)
+        new_ef = sel(new_ef, ef)
+    return new_stacked, new_ef
+
+
 @functools.lru_cache(maxsize=32)
 def _uplink_fn(codec: Codec, backend: str, masked: bool):
-    """jit(uplink) cached per (codec, backend, masked) — sweeps re-entering
-    the engines with the same channel reuse the compiled step."""
-
-    def uplink(stacked, prev, ef, key, mask):
-        delta = jax.tree_util.tree_map(jnp.subtract, stacked, prev)
-        v = jax.tree_util.tree_map(jnp.add, delta, ef)
-        flat = stacked_ravel(v)
-        dec_flat = codec.roundtrip(flat, key, backend=backend)
-        dec = stacked_unravel(dec_flat, v)
-        new_ef = jax.tree_util.tree_map(jnp.subtract, v, dec)
-        # residuals ride in f32; the model stack keeps its own dtype
-        new_stacked = jax.tree_util.tree_map(
-            lambda p, d: (p + d).astype(p.dtype), prev, dec)
-        if masked:
-            # non-participants transmitted nothing: model and residual
-            # rows stay exactly as they were
-            sel = lambda a, b: jax.tree_util.tree_map(
-                lambda x, y: jnp.where(
-                    mask.reshape((-1,) + (1,) * (x.ndim - 1)), x, y), a, b)
-            new_stacked = sel(new_stacked, stacked)
-            new_ef = sel(new_ef, ef)
-        return new_stacked, new_ef
-
+    """jit(uplink_roundtrip) cached per (codec, backend, masked) — sweeps
+    re-entering the engines with the same channel reuse the compiled step."""
     if masked:
-        return jax.jit(uplink)
-    return jax.jit(lambda s, p, e, k: uplink(s, p, e, k, None))
+        return jax.jit(lambda s, p, e, k, m: uplink_roundtrip(
+            codec, s, p, e, k, m, backend=backend))
+    return jax.jit(lambda s, p, e, k: uplink_roundtrip(
+        codec, s, p, e, k, None, backend=backend))
 
 
 def apply_uplink(codec: Codec, stacked: Any, prev: Any, ef: Any,

@@ -121,6 +121,55 @@ class Placement(abc.ABC):
     def mix_plan(self, stacked: Any, plan: StreamPlan) -> Any:
         """Apply a k-stream `StreamPlan` (centroid mix + group broadcast)."""
 
+    # ---- superstep execution (DESIGN.md §3c) ------------------------------
+
+    def mix_traced(self, stacked: Any, w: jnp.ndarray) -> Any:
+        """Trace-safe sibling of `mix`, usable inside the superstep scan
+        (no jit dispatch of its own).  Default: `mix` itself — correct for
+        backends whose `mix` is already pure jnp (HostVmap)."""
+        return self.mix(stacked, w)
+
+    def mix_plan_traced(self, stacked: Any, centroids: jnp.ndarray,
+                        assignment: jnp.ndarray) -> Any:
+        """Trace-safe sibling of `mix_plan` (plan unpacked into arrays —
+        a traced scan carries arrays, not host NamedTuples)."""
+        return self.mix_plan(stacked, StreamPlan(centroids, assignment,
+                                                 jnp.float32(0.0)))
+
+    def build_round(self, round_fn: Callable, *, length: int,
+                    donate: bool = True) -> Callable:
+        """Compile ``length`` consecutive traced rounds as ONE `lax.scan`
+        superstep: returns ``fn(carry, data, consts) -> (carry', outs)``
+        where ``round_fn(carry, data, consts) -> (carry', out)`` is the
+        engine-built fused round (update → select → codec uplink →
+        aggregate).  The carry is donated by default — the input
+        stacked/opt/EF buffers are dead once the superstep returns, so
+        buffer donation survives fusion.  Backends whose arrays carry
+        shardings (MeshShardMap) rely on GSPMD propagating them through
+        the scan: the carry never leaves the mesh between rounds."""
+
+        def superstep(carry, data, consts):
+            return jax.lax.scan(lambda c, _: round_fn(c, data, consts),
+                                carry, None, length=length)
+
+        return jax.jit(superstep, donate_argnums=(0,) if donate else ())
+
+    def run_supersteps(self, round_fn: Callable, carry: Any, data: Any,
+                       consts: Any, length: int, *, cache: dict,
+                       donate: bool = True) -> Tuple[Any, Any]:
+        """Run ``length`` fused rounds, compiling (and caching in
+        ``cache``, keyed by length) the superstep on first use."""
+        fn = cache.get(length)
+        if fn is None:
+            fn = cache[length] = self.build_round(round_fn, length=length,
+                                                  donate=donate)
+        return fn(carry, data, consts)
+
+    def cache_key(self) -> Tuple:
+        """Hashable identity for the compiled-superstep cache: two
+        placements with equal keys must trace identical supersteps."""
+        return (type(self).__name__,)
+
     @abc.abstractmethod
     def evaluate(self, acc_fn: Callable, stacked: Any, fed: FederatedData
                  ) -> Tuple[float, float]:

@@ -41,6 +41,10 @@ def make_client_update(loss_fn: Callable, opt, fl):
             return (apply_updates(p, upd), o), None
 
         keys = jax.random.split(key, fl.local_steps)
+        # NOTE: do not be tempted to unroll this scan — unrolling lets XLA
+        # fuse across step boundaries differently in the eventful per-round
+        # jit vs the fused superstep program (§3c), breaking their
+        # final-params bit-parity at local_steps >= 2
         (p, o), _ = jax.lax.scan(step, (params_i, opt_i), keys)
         return p, o
 

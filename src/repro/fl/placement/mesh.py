@@ -121,6 +121,27 @@ class MeshShardMap(Placement):
                 self.mesh, (self.axis,), s, c, a, schedule=self.schedule))
         return self._mix_plan_jit(stacked, plan.centroids, plan.assignment)
 
+    # superstep hooks (DESIGN.md §3c): the same schedule-selected
+    # collectives, called WITHOUT the per-instance jit wrapper so they
+    # inline into the fused scan — the client-sharded carry stays on the
+    # mesh across all fused rounds (GSPMD propagates the input shardings
+    # through `lax.scan`), and the collectives run once per round inside
+    # the compiled loop instead of as a per-round dispatch
+
+    def mix_traced(self, stacked: Any, w: jnp.ndarray) -> Any:
+        return mix_schedule(self.mesh, (self.axis,), stacked, w,
+                            schedule=self.schedule)
+
+    def mix_plan_traced(self, stacked: Any, centroids: jnp.ndarray,
+                        assignment: jnp.ndarray) -> Any:
+        return mix_schedule(self.mesh, (self.axis,), stacked, centroids,
+                            assignment, schedule=self.schedule)
+
+    def cache_key(self):
+        # Mesh equality is by device assignment + axis names, so two
+        # auto-built placements over the same devices share compiles
+        return (type(self).__name__, self.mesh, self.axis, self.schedule)
+
     def evaluate(self, acc_fn: Callable, stacked: Any, fed: FederatedData
                  ) -> Tuple[float, float]:
         return evaluate(acc_fn, stacked, fed)

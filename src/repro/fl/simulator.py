@@ -36,7 +36,7 @@ import numpy as np
 from repro.data.federated import FederatedData
 from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
                               round_downlink_time, tree_bits,
-                              zeros_like_stack)
+                              uplink_roundtrip, zeros_like_stack)
 from repro.fl.comm import SYSTEMS, SystemModel
 from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export)
                                 Placement, evaluate, make_client_update,
@@ -44,7 +44,8 @@ from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export
                                 where_clients)
 from repro.fl.stats import full_client_gradients, sigma2_estimates  # noqa: F401 (re-exported for back-compat)
 from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
-                                 Strategy, StrategyExtras, get_strategy)
+                                 Strategy, StrategyExtras, TracedMix,
+                                 get_strategy)
 from repro.models import lenet
 
 
@@ -182,6 +183,170 @@ def channel_extra(history: "History", channel: Channel, link,
     }
 
 
+# ---------------------------------------------------------------------------
+# superstep execution (DESIGN.md §3c): fuse eval_every rounds into one scan
+
+
+def _mro_definer(cls: type, name: str) -> Optional[type]:
+    """The class in ``cls``'s MRO that actually defines ``name``."""
+    for c in cls.__mro__:
+        if name in vars(c):
+            return c
+    return None
+
+
+def superstep_support(strategy: Strategy,
+                      sampler: Optional[ClientSampler]) -> tuple:
+    """(ok, reason) — whether this run qualifies for the fused superstep.
+
+    Strategy and sampler must declare the traceability contract; every
+    registered codec's ``roundtrip`` is already a pure traced function, so
+    a `Channel` never blocks fusion.  A subclass of a traceable strategy
+    that overrides the eventful hooks (``aggregate``/``reweight``)
+    WITHOUT re-implementing ``aggregate_traced`` would silently fuse with
+    the parent's traced rule — detected here and routed to the eventful
+    loop instead."""
+    if not strategy.traceable:
+        return False, (f"strategy {strategy.spec!r} is not traceable "
+                       "(eventful per-round state)")
+    cls = type(strategy)
+    traced_at = _mro_definer(cls, "aggregate_traced")
+    for name in ("aggregate", "reweight"):
+        at = _mro_definer(cls, name)
+        if at is not Strategy and not issubclass(traced_at, at):
+            return False, (
+                f"{cls.__name__} overrides {name}() below the class "
+                f"defining aggregate_traced ({traced_at.__name__}); the "
+                "traced path would silently diverge — override "
+                "aggregate_traced too (or set traceable=False)")
+    if sampler is not None and not sampler.traceable:
+        return False, (f"sampler {type(sampler).__name__} does not "
+                       "implement sample_traced")
+    return True, ""
+
+
+# compiled supersteps, shared across `run_federated` calls: key ->
+# {scan length -> jitted superstep}.  The key captures everything the
+# trace closes over (the cached update step object carries the
+# loss_fn/FLConfig identity; strategy and sampler contribute their
+# spec-level identities; the placement its mesh/schedule).  Bounded like
+# the neighboring executable caches (`cached_update`, `_uplink_fn`):
+# oldest config evicted past the cap, so sweep processes iterating many
+# (scenario × algorithm × codec) configs don't pin executables forever.
+_SUPERSTEP_FNS: Dict[tuple, Dict[int, Callable]] = {}
+_SUPERSTEP_CACHE_MAX = 32
+
+
+def _superstep_cache(placement: Placement, strategy: Strategy,
+                     sampler: Optional[ClientSampler],
+                     codec, error_feedback: bool, update_fn: Callable,
+                     m: int) -> Dict[int, Callable]:
+    key = (placement.cache_key(), type(strategy), strategy.spec,
+           None if sampler is None else sampler.cache_key,
+           codec, bool(error_feedback), update_fn, m)
+    cache = _SUPERSTEP_FNS.pop(key, None)   # re-insert: LRU, not FIFO
+    if cache is None:
+        while len(_SUPERSTEP_FNS) >= _SUPERSTEP_CACHE_MAX:
+            _SUPERSTEP_FNS.pop(next(iter(_SUPERSTEP_FNS)))
+        cache = {}
+    _SUPERSTEP_FNS[key] = cache
+    return cache
+
+
+def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
+                        codec, error_feedback: bool, placement: Placement,
+                        update_fn: Callable, m: int) -> Callable:
+    """The fused round: (local update → sampler select → codec uplink with
+    error feedback → strategy aggregate) as one pure function
+
+        round_fn((key, stacked, opt_state, ef), (x, y, n), consts)
+            -> ((key', stacked', opt_state', ef'), mask | None)
+
+    with EXACTLY the eventful engine's key derivation — ``ksample`` split
+    first (stochastic samplers only), then ``kround``; per-client batch
+    keys are ``split(kround, m)``, the codec key ``fold_in(kround, 2)``
+    (index 1 stays reserved for the strategies' derivation) — so the
+    fused run is bit-identical to the per-round loop."""
+    tmix = TracedMix(placement)
+    lossy = codec is not None and not codec.is_identity
+    backend = placement.codec_backend
+
+    def round_fn(carry, data, consts):
+        key, stacked, opt_state, ef = carry
+        x, y, n = data
+        ksample = None
+        if sampler is not None and sampler.needs_key:
+            key, ksample = jax.random.split(key)
+        key, kround = jax.random.split(key)
+        ckeys = jax.random.split(kround, m)
+        prev, prev_opt = stacked, opt_state
+        stacked, opt_state = update_fn(stacked, opt_state, x, y, n, ckeys)
+        mask = None
+        if sampler is not None:
+            # all-True where the eventful sampler would return None: the
+            # row-select below is then a bitwise identity.  Through the
+            # placement's `select` hook (pure on both backends) so a
+            # backend overriding rollback keeps working under fusion.
+            mask = sampler.sample_traced(ksample, m)
+            stacked = placement.select(mask, stacked, prev)
+            opt_state = placement.select(mask, opt_state, prev_opt)
+        if lossy:
+            new_stacked, new_ef = uplink_roundtrip(
+                codec, stacked, prev, ef, jax.random.fold_in(kround, 2),
+                mask, backend=backend)
+            stacked = new_stacked
+            ef = new_ef if error_feedback else ef
+        stacked = strategy.aggregate_traced(consts, stacked, prev, tmix)
+        return (key, stacked, opt_state, ef), mask
+
+    return round_fn
+
+
+def _eval_rounds(rounds: int, eval_every: int):
+    """The eventful engine's eval boundaries (``rnd % eval_every == 0 or
+    rnd == rounds - 1``) as consecutive chunk ends: yields the round index
+    each superstep runs up to (inclusive)."""
+    rnd = 0
+    while rnd < rounds:
+        nxt = min(((rnd + eval_every - 1) // eval_every) * eval_every,
+                  rounds - 1)
+        yield rnd, nxt
+        rnd = nxt + 1
+
+
+def charge_round(history: "History", cost: CommCost, mask_np, m: int,
+                 payload: int, link, system: Optional[SystemModel],
+                 channel: Optional[Channel], t_accum: float) -> float:
+    """One round's comm/bits/clock accounting, SHARED by the eventful loop
+    and the superstep replay so the two engines can't drift (like
+    `init_run`/`init_channel` for the prologue).  ``mask_np`` is the
+    HOST-side participation row (None or all-True = full cohort — the
+    eventful sampler returns None there); returns the updated clock."""
+    history.comm.append(cost)
+    n_part, participants = m, None
+    if channel is not None or system is not None:
+        # the round only waits for the clients that computed: H_|S| under
+        # partial participation, not H_m
+        if mask_np is not None and not mask_np.all():
+            n_part = int(mask_np.sum())
+            participants = np.where(mask_np)[0]
+    if channel is not None:
+        # downlink streams move the codec-compressed model (§3b)
+        history.comm_bits.append(ChannelCost(
+            dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
+            ul_bits=n_part * payload))
+    if system is not None:
+        if link is not None:
+            t_accum += (system.compute_time(n_part)
+                        + link.max_uplink_time(payload, participants)
+                        + round_downlink_time(link, cost, payload,
+                                              participants))
+        else:
+            t_accum += system.round_time(n_part, n_streams=cost.n_streams,
+                                         n_unicasts=cost.n_unicasts)
+    return t_accum
+
+
 @dataclass
 class History:
     rounds: List[int] = field(default_factory=list)
@@ -202,6 +367,66 @@ class History:
     final_opt_state: Any = None
 
 
+def _run_superstep(strategy: Strategy, fed: FederatedData, *,
+                   sampler: Optional[ClientSampler], fl: "FLConfig",
+                   model_init: Optional[Callable], loss_fn: Callable,
+                   acc_fn: Callable, system: Optional[SystemModel],
+                   placement: Placement, channel: Optional[Channel],
+                   keep_state: bool, seed: int) -> "History":
+    """Scan-compiled sync run (DESIGN.md §3c): Python re-enters only at
+    eval boundaries; per-round participation masks come back as ONE
+    stacked device->host transfer per superstep and the clock/CommCost/
+    ChannelCost accounting is replayed from them in the eventful engine's
+    exact per-round order (bit-identical histories)."""
+    m = fed.m
+    key, update_fn, stacked, opt_state, data, ctx, state = init_run(
+        strategy, fed, fl, model_init, loss_fn, acc_fn, placement, seed,
+        donate=False)   # donation happens at the superstep boundary instead
+    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
+                                                 system, m)
+    lossy = channel is not None and not channel.codec.is_identity
+    # identity codecs trace no uplink: normalize so channel-less and
+    # identity-channel runs share one compiled superstep
+    codec = channel.codec if lossy else None
+    ef_flag = channel.error_feedback if lossy else True
+    consts = strategy.traced_state(state)
+    round_fn = _build_traced_round(strategy, sampler, codec, ef_flag,
+                                   placement, update_fn, m)
+    cache = _superstep_cache(placement, strategy, sampler, codec, ef_flag,
+                             update_fn, m)
+    cost = strategy.comm(state)     # round-constant by the traceability
+    history = History()             # contract (state never changes)
+    t_accum = 0.0
+    carry = (key, stacked, opt_state, ef if lossy else None)
+
+    for rnd, nxt in _eval_rounds(fl.rounds, fl.eval_every):
+        length = nxt - rnd + 1
+        carry, masks = placement.run_supersteps(round_fn, carry, data,
+                                                consts, length, cache=cache)
+        # the chunk's ONE blocking device->host transfer — and only when a
+        # clock or the bits axis actually consumes the masks
+        masks_np = (np.asarray(masks)
+                    if masks is not None
+                    and (channel is not None or system is not None)
+                    else None)
+        for i in range(length):
+            t_accum = charge_round(
+                history, cost, None if masks_np is None else masks_np[i],
+                m, payload, link, system, channel, t_accum)
+        mean_acc, worst_acc = placement.evaluate(acc_fn, carry[1], fed)
+        history.rounds.append(nxt)
+        history.mean_acc.append(mean_acc)
+        history.worst_acc.append(worst_acc)
+        history.time.append(t_accum)
+
+    _, stacked, opt_state, _ = carry
+    history = finalize_history(history, strategy, state, keep_state,
+                               stacked, opt_state)
+    if channel is not None:
+        channel_extra(history, channel, link, model_bits, payload)
+    return history
+
+
 def run_federated(algorithm: Union[str, Strategy, None] = None,
                   fed: Optional[FederatedData] = None, *,
                   strategy: Optional[Strategy] = None,
@@ -215,6 +440,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   channel: Union[str, Channel, None] = None,
                   keep_state: bool = False,
                   async_cfg: Optional[Any] = None,
+                  superstep: Optional[bool] = None,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
@@ -228,12 +454,20 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     bit-level payload accounting, uplink compression with error feedback
     and per-client link timing; ``Channel()``/None with the identity codec
     are bit-identical.  ``async_cfg`` (an `AsyncConfig`) switches to the
-    event-driven buffered-async runtime (DESIGN.md §3a).
+    event-driven buffered-async runtime (DESIGN.md §3a).  ``superstep``
+    (DESIGN.md §3c) compiles ``eval_every`` consecutive rounds as one
+    device-resident `lax.scan`: None (default) fuses exactly when
+    strategy and sampler satisfy the traceability contract (bit-identical
+    histories either way), False forces the eventful per-round loop, True
+    raises if the configuration cannot fuse.
     """
     if async_cfg is not None:
         if sampler is not None:
             raise TypeError("the async runtime takes no ClientSampler — "
                             "the arrival buffer is the per-event cohort")
+        if superstep:
+            raise TypeError("superstep fusion is a synchronous-engine "
+                            "feature; the async runtime is event-driven")
         from repro.fl.runtime import run_async
         return run_async(algorithm, fed, strategy=strategy,
                          async_cfg=async_cfg, fl=fl, model_init=model_init,
@@ -248,6 +482,18 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     channel = resolve_channel(channel)
     codec = channel.codec if channel is not None else None
     lossy = codec is not None and not codec.is_identity
+
+    if superstep is None or superstep:
+        ok, why = superstep_support(strategy, sampler)
+        if not ok and superstep:
+            raise ValueError(f"superstep=True but this run cannot fuse: "
+                             f"{why}")
+        if ok:
+            return _run_superstep(strategy, fed, sampler=sampler, fl=fl,
+                                  model_init=model_init, loss_fn=loss_fn,
+                                  acc_fn=acc_fn, system=system,
+                                  placement=placement, channel=channel,
+                                  keep_state=keep_state, seed=seed)
 
     m = fed.m
     # When no sampler can roll clients back and the strategy declares it
@@ -295,30 +541,16 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             rnd, jax.random.fold_in(kround, 1), mask
         stacked, state = strategy.aggregate(state, stacked, prev, ctx)
 
-        cost = strategy.comm(state)
-        history.comm.append(cost)
-        if channel is not None or system is not None:
-            # the round only waits for the clients that computed: H_|S|
-            # under partial participation, not H_m (host-synced only when
-            # a clock or the bits axis consumes it)
-            n_part = m if mask is None else int(jnp.sum(mask))
-        if channel is not None:
-            # downlink streams move the codec-compressed model (§3b)
-            history.comm_bits.append(ChannelCost(
-                dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
-                ul_bits=n_part * payload))
-        if system is not None:
-            if link is not None:
-                participants = (None if mask is None
-                                else np.where(np.asarray(mask))[0])
-                t_accum += (system.compute_time(n_part)
-                            + link.max_uplink_time(payload, participants)
-                            + round_downlink_time(link, cost, payload,
-                                                       participants))
-            else:
-                t_accum += system.round_time(n_part,
-                                             n_streams=cost.n_streams,
-                                             n_unicasts=cost.n_unicasts)
+        # ONE host sync per round at most (the mask pull), none when no
+        # clock or bits axis consumes it — n_part and the link-clock
+        # participants both come from the same host-side array inside
+        # `charge_round` (shared with the superstep replay)
+        mask_np = (np.asarray(mask)
+                   if mask is not None
+                   and (channel is not None or system is not None)
+                   else None)
+        t_accum = charge_round(history, strategy.comm(state), mask_np, m,
+                               payload, link, system, channel, t_accum)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)

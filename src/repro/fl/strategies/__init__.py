@@ -9,7 +9,8 @@ entry — the round engine (`repro.fl.simulator.run_federated`) never
 dispatches on algorithm names.
 """
 from repro.fl.strategies.base import (ClusterExtras, CommCost, MixingExtras,
-                                      RoundContext, Strategy, StrategyExtras)
+                                      RoundContext, Strategy, StrategyExtras,
+                                      TracedMix)
 from repro.fl.strategies.registry import (STRATEGIES, available_strategies,
                                           get_strategy, get_strategy_class,
                                           parse_spec, register)
@@ -26,7 +27,8 @@ from repro.fl.strategies.ucfl import UCFL
 __all__ = [
     "CFL", "ClientSampler", "ClusterExtras", "CommCost", "FedAvg", "FedFOMO",
     "FullParticipation", "Local", "MixingExtras", "Oracle", "RoundContext",
-    "STRATEGIES", "Strategy", "StrategyExtras", "UCFL", "UniformFraction",
+    "STRATEGIES", "Strategy", "StrategyExtras", "TracedMix", "UCFL",
+    "UniformFraction",
     "available_strategies", "get_strategy", "get_strategy_class",
     "parse_spec", "register",
 ]

@@ -144,6 +144,28 @@ class RoundContext:
         return self.placement.mix_plan(stacked, plan)
 
 
+class TracedMix:
+    """Aggregation dispatcher handed to `Strategy.aggregate_traced` inside
+    the superstep scan (DESIGN.md §3c).
+
+    Same math as `RoundContext.mix` / `mix_plan` for a synchronous round
+    (staleness reweighting is async-only and the superstep is sync-only),
+    but routed through the placement's trace-safe hooks so no per-call jit
+    dispatch happens inside the fused round."""
+
+    def __init__(self, placement: Any):
+        self.placement = placement
+
+    def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
+        """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
+        return self.placement.mix_traced(stacked, w)
+
+    def mix_plan(self, stacked: Any, centroids: jnp.ndarray,
+                 assignment: jnp.ndarray) -> Any:
+        """k-stream aggregation: centroid mix + group broadcast."""
+        return self.placement.mix_plan_traced(stacked, centroids, assignment)
+
+
 @dataclass
 class StrategyExtras:
     """Base for typed per-strategy results attached to `History.extras`."""
@@ -172,6 +194,16 @@ class Strategy(abc.ABC):
     # ``prev=None`` — declare False only if `aggregate` never touches it.
     reads_prev: ClassVar[bool] = True
 
+    # Whether this strategy's aggregation is a PURE jnp function of
+    # per-round arrays (the superstep traceability contract, DESIGN.md
+    # §3c): True means `traced_state`/`aggregate_traced` are implemented,
+    # the per-round state never changes (so `comm(state)` is round-
+    # constant), and the engine may fuse `eval_every` rounds into one
+    # `lax.scan`.  Strategies with eventful host-side state transitions
+    # (CFL's cluster splits, FedFOMO's numpy weighting) stay False and
+    # the engine transparently falls back to the per-round loop.
+    traceable: ClassVar[bool] = False
+
     @property
     def spec(self) -> str:
         """Registry spec string that reconstructs this instance."""
@@ -195,6 +227,28 @@ class Strategy(abc.ABC):
     def extras(self, state: Any) -> Optional[StrategyExtras]:
         """Typed end-of-run results for `History.extras`."""
         return None
+
+    def traced_state(self, state: Any) -> Any:
+        """The pytree of device arrays `aggregate_traced` consumes,
+        extracted once from the `setup` state before the superstep scan
+        is traced (DESIGN.md §3c).  Must be implemented when
+        ``traceable=True``; its STRUCTURE must be a pure function of
+        ``(type(self), self.spec)`` — the compiled superstep is cached
+        across runs on that identity."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets traceable=True but does not "
+            "implement traced_state")
+
+    def aggregate_traced(self, arrays: Any, stacked: Any, prev: Any,
+                         tmix: TracedMix) -> Any:
+        """Pure-jnp server aggregation for the superstep scan: the traced
+        sibling of `aggregate`.  ``arrays`` is `traced_state(state)`;
+        mixing goes through ``tmix.mix`` / ``tmix.mix_plan`` (the
+        trace-safe placement dispatch).  Returns only ``stacked'`` — a
+        traceable strategy's state is round-constant by contract."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets traceable=True but does not "
+            "implement aggregate_traced")
 
     def reweight(self, w: jnp.ndarray, ctx: RoundContext) -> jnp.ndarray:
         """Staleness hook (DESIGN.md §3a): `ctx.mix` routes every weight

@@ -3,6 +3,15 @@
 Each client evaluates candidate models on its own validation set and mixes
 the ones that reduce its loss; the server therefore unicasts candidate
 models (no broadcast sharing is possible).
+
+The candidate-loss matrix is ONE batched (m, m) evaluation — a vmap over
+candidate models of the vmap over client validation sets — instead of m
+per-candidate device->host round trips, which is what makes FedFOMO viable
+at mesh scale: on `MeshShardMap` the client-stacked candidates stay
+sharded through the outer vmap rather than being pulled to host one model
+at a time.  Orientation convention (pinned by a regression test):
+``losses[i, j]`` is candidate j's loss on client i's OWN validation set,
+and ``prev_losses[i]`` is client i's pre-round model on its own set.
 """
 from __future__ import annotations
 
@@ -20,27 +29,25 @@ from repro.fl.strategies.registry import register
 
 
 class FomoState(NamedTuple):
-    val_loss_fn: Callable       # jitted (params, x_val, y_val) -> (m,) losses
+    cand_loss_fn: Callable      # jitted (stacked, x_val, y_val) -> (m, m):
+                                # row j = candidate j on every client's val set
+    self_loss_fn: Callable      # jitted diagonal: model i on client i -> (m,)
     m: int
     candidates: int
 
 
-def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
-                   n_candidates: int, mix=None):
+def _fedfomo_round(stacked, prev, fed: FederatedData, cand_loss_fn,
+                   self_loss_fn, n_candidates: int, mix=None):
     # deterministic: candidates are the top-M by weight (the paper samples)
     m = fed.m
-    # loss of every candidate model on every client's validation set
-    losses = np.zeros((m, m), np.float32)
     flat = jax.vmap(flatten_pytree)(stacked)
     flat_prev = jax.vmap(flatten_pytree)(prev)
-    for j in range(m):
-        pj = jax.tree_util.tree_map(lambda l: l[j], stacked)
-        losses[:, j] = np.asarray(val_loss_fn(pj, fed.x_val, fed.y_val))
-    prev_losses = np.zeros((m,), np.float32)
-    for i in range(m):
-        pi = jax.tree_util.tree_map(lambda l: l[i], prev)
-        prev_losses[i] = float(val_loss_fn(pi, fed.x_val[i:i + 1],
-                                           fed.y_val[i:i + 1])[0])
+    # loss of every candidate model on every client's validation set, as a
+    # single batched eval; the jitted result comes back (candidate j,
+    # client i) and is transposed to the (i, j) convention
+    losses = np.asarray(cand_loss_fn(stacked, fed.x_val, fed.y_val)).T
+    # client i's own pre-round model on its own validation set
+    prev_losses = np.asarray(self_loss_fn(prev, fed.x_val, fed.y_val))
     dist = np.asarray(jnp.linalg.norm(
         flat[None, :, :] - flat_prev[:, None, :], axis=-1)) + 1e-9
     wmat = np.maximum((prev_losses[:, None] - losses) / dist, 0.0)
@@ -64,22 +71,32 @@ def _fedfomo_round(stacked, prev, fed: FederatedData, val_loss_fn,
 class FedFOMO(Strategy):
     name = "fedfomo"
     reads_prev = True       # candidate weighting compares against prev
+    traceable = False       # numpy thresholding/weighting per round: the
+                            # engine falls back to the eventful loop
 
     def __init__(self, candidates: Optional[int] = None):
         self.candidates = candidates   # None -> FLConfig.fomo_candidates
 
     def setup(self, ctx: RoundContext) -> FomoState:
         loss_fn = ctx.loss_fn
-        val_loss = jax.jit(jax.vmap(
+        # one model on every client's validation set -> (m,)
+        per_client = jax.vmap(
             lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0],
-            in_axes=(None, 0, 0)))
+            in_axes=(None, 0, 0))
+        # ... and over the candidate stack -> (m candidates, m clients)
+        cand_loss = jax.jit(jax.vmap(per_client, in_axes=(0, None, None)))
+        # the diagonal: model i on client i's own validation set -> (m,)
+        self_loss = jax.jit(jax.vmap(
+            lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0]))
         n_cand = (self.candidates if self.candidates is not None
                   else ctx.fl.fomo_candidates)
-        return FomoState(val_loss_fn=val_loss, m=ctx.fed.m, candidates=n_cand)
+        return FomoState(cand_loss_fn=cand_loss, self_loss_fn=self_loss,
+                         m=ctx.fed.m, candidates=n_cand)
 
     def aggregate(self, state: FomoState, stacked, prev, ctx):
-        out = _fedfomo_round(stacked, prev, ctx.fed, state.val_loss_fn,
-                             state.candidates, mix=ctx.mix)
+        out = _fedfomo_round(stacked, prev, ctx.fed, state.cand_loss_fn,
+                             state.self_loss_fn, state.candidates,
+                             mix=ctx.mix)
         return out, state
 
     def comm(self, state: FomoState) -> CommCost:

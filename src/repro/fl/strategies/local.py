@@ -9,9 +9,16 @@ from repro.fl.strategies.registry import register
 class Local(Strategy):
     name = "local"
     reads_prev = False      # engine may donate the pre-round buffers
+    traceable = True        # identity aggregation: trivially fusible
 
     def aggregate(self, state, stacked, prev, ctx):
         return stacked, state
+
+    def traced_state(self, state):
+        return ()
+
+    def aggregate_traced(self, arrays, stacked, prev, tmix):
+        return stacked
 
     def comm(self, state) -> CommCost:
         return CommCost(0, 0)

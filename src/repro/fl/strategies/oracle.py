@@ -20,6 +20,7 @@ class OracleState(NamedTuple):
 class Oracle(Strategy):
     name = "oracle"
     reads_prev = False      # engine may donate the pre-round buffers
+    traceable = True        # pure block-diagonal W-mix
 
     def setup(self, ctx: RoundContext) -> OracleState:
         group = np.asarray(ctx.fed.group)
@@ -28,6 +29,12 @@ class Oracle(Strategy):
 
     def aggregate(self, state: OracleState, stacked, prev, ctx):
         return ctx.mix(stacked, state.weights), state
+
+    def traced_state(self, state: OracleState):
+        return state.weights
+
+    def aggregate_traced(self, arrays, stacked, prev, tmix):
+        return tmix.mix(stacked, arrays)
 
     def comm(self, state: OracleState) -> CommCost:
         return CommCost(state.n_streams, 0)

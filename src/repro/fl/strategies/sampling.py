@@ -10,7 +10,7 @@ via `RoundContext.participation` for rules that want to reweight.
 """
 from __future__ import annotations
 
-from typing import ClassVar, Optional
+from typing import ClassVar, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,16 +23,42 @@ class ClientSampler:
                                         # stochastic samplers, preserving the
                                         # full-participation RNG stream
 
+    # Whether `sample_traced` is implemented (superstep traceability
+    # contract, DESIGN.md §3c): mask generation must be a pure jnp
+    # function of the round key so it stays inside the fused scan.
+    traceable: ClassVar[bool] = False
+
     def sample(self, rnd: int, m: int,
                key: Optional[jnp.ndarray]) -> Optional[jnp.ndarray]:
         raise NotImplementedError
+
+    def sample_traced(self, key: Optional[jnp.ndarray],
+                      m: int) -> jnp.ndarray:
+        """Traced sibling of `sample`: ALWAYS returns a (m,) bool mask
+        (all-True where `sample` would return None — the engine-side
+        select with an all-True mask is a bitwise identity), from the
+        same key the eventful engine would spend."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets traceable=True but does not "
+            "implement sample_traced")
+
+    @property
+    def cache_key(self) -> Tuple:
+        """Hashable identity for the compiled-superstep cache: two
+        samplers with equal keys must produce identical traces."""
+        return (type(self).__name__,)
 
 
 class FullParticipation(ClientSampler):
     """Every client, every round — identical to passing no sampler."""
 
+    traceable = True
+
     def sample(self, rnd, m, key):
         return None
+
+    def sample_traced(self, key, m):
+        return jnp.ones((m,), dtype=bool)
 
 
 class UniformFraction(ClientSampler):
@@ -41,6 +67,7 @@ class UniformFraction(ClientSampler):
     ``count`` — the latter lets async arrival tests pin cohort sizes."""
 
     needs_key = True
+    traceable = True
 
     def __init__(self, fraction: Optional[float] = None,
                  min_clients: int = 1, *, count: Optional[int] = None):
@@ -54,12 +81,29 @@ class UniformFraction(ClientSampler):
         self.count = None if count is None else int(count)
         self.min_clients = int(min_clients)
 
-    def sample(self, rnd, m, key):
+    def cohort(self, m: int) -> int:
+        """This sampler's per-round cohort size — static given m, which is
+        what lets the mask generation trace (the full-cohort k >= m
+        short-circuit is decided before any key is spent)."""
         if self.count is not None:
-            k = min(m, max(self.min_clients, self.count))
-        else:
-            k = min(m, max(self.min_clients, int(round(self.fraction * m))))
+            return min(m, max(self.min_clients, self.count))
+        return min(m, max(self.min_clients, int(round(self.fraction * m))))
+
+    def sample(self, rnd, m, key):
+        k = self.cohort(m)
         if k >= m:
             return None
         idx = jax.random.permutation(key, m)[:k]
         return jnp.zeros((m,), dtype=bool).at[idx].set(True)
+
+    def sample_traced(self, key, m):
+        # delegate so the eventful and fused masks CANNOT drift: `sample`
+        # ignores rnd, and at full cohorts (k >= m) returns None before
+        # touching the key — exactly the all-True case
+        mask = self.sample(0, m, key)
+        return jnp.ones((m,), dtype=bool) if mask is None else mask
+
+    @property
+    def cache_key(self):
+        return (type(self).__name__, self.fraction, self.count,
+                self.min_clients)
