@@ -20,6 +20,7 @@ narrative log.
     PYTHONPATH=src python -m benchmarks.perf_iterations --round-engine
     PYTHONPATH=src python -m benchmarks.perf_iterations --async-engine
     PYTHONPATH=src python -m benchmarks.perf_iterations --channel
+    PYTHONPATH=src python -m benchmarks.perf_iterations --serve
 
 MUST run standalone: the dry-run groups force 512 host devices (via the
 repro.launch.dryrun import) and --round-engine forces 8, both through
@@ -507,6 +508,104 @@ def channel_bench(rounds: int = 16, seed: int = 0):
     return rows
 
 
+def serve_bench(requests: int = 128, reps: int = 3, max_batch: int = 16,
+                seed: int = 0):
+    """Personalized-model serving plane (DESIGN.md §3d)
+    -> BENCH_serve.json: QPS / per-batch latency / at-rest store bytes per
+    (placement × codec).
+
+    One FULL-personalization ucfl run (LeNet, m=8 label-shift clients,
+    keep_state=True — every user ends with a DISTINCT model) feeds every
+    cell; the store keys the users against the scenario's k ground-truth
+    cluster bases (`assignment=fed.group`), so every per-user delta is
+    genuinely nonzero — the deployment shape the §3d store exists for
+    (stream-reduced runs like ucfl_k2 end with members bit-identical to
+    their stream base, i.e. all-zero deltas).  The §3d parity anchor runs
+    IN-BENCH before any timing — served output must be bit-identical to a
+    direct forward pass through the store's reference reconstruction
+    (`check_parity` raises on divergence), and the identity store must
+    reconstruct the trained personalized params exactly, so a QPS number
+    can never ship from a store that serves the wrong model.
+    """
+    import jax
+    import numpy as np
+    from repro.data.federated import scenario_label_shift
+    from repro.fl import (DeltaStore, FLConfig, HostVmap, MeshShardMap,
+                          ServeEngine, check_parity, run_federated)
+    from repro.fl.channel import stacked_ravel
+    from repro.models import lenet
+
+    fed = scenario_label_shift(jax.random.PRNGKey(seed), n=1000, m=8)
+    fl = FLConfig(rounds=6, local_steps=2, batch_size=32, eval_every=3)
+    h = run_federated("ucfl", fed, fl=fl, seed=seed, keep_state=True)
+    true_flat = np.asarray(stacked_ravel(h.final_params), np.float32)
+    asn = np.asarray(fed.group, np.int64)
+    print(f"trained ucfl m={fed.m}: final acc={h.mean_acc[-1]:.3f}")
+
+    def apply_one(p_, x):
+        return lenet.apply(p_, x[None])[0]
+
+    rng = np.random.default_rng(seed)
+    users = rng.integers(0, fed.m, requests)
+    xs_all = np.asarray(fed.x_val)[users, 0]
+    probe = list(range(fed.m))
+    xs_probe = np.asarray(fed.x_val)[probe, 0]
+
+    placements = [("host_vmap", HostVmap()),
+                  ("mesh_shard_map", MeshShardMap(schedule="shard_map_streams"))]
+    rows = []
+    for pname, pl in placements:
+        for codec in ["identity", "qsgd:4", "topk:0.25"]:
+            store = DeltaStore.build(h.final_params, assignment=asn,
+                                     codec=codec, backend=pl.codec_backend)
+            if codec == "identity" and not np.array_equal(
+                    np.asarray(store.params_flat()), true_flat):
+                raise RuntimeError(
+                    "identity DeltaStore is not lossless — §3d anchor")
+            eng = ServeEngine(store, apply_one, placement=pl,
+                              max_batch=max_batch)
+            check_parity(eng, probe, xs_probe)       # raises on divergence
+            # warmup: compile the (gather, forward) pair for max_batch
+            for u, x in zip(users[:max_batch], xs_all[:max_batch]):
+                eng.submit(int(u), x)
+            eng.flush()
+            lat = []
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for u, x in zip(users, xs_all):
+                    eng.submit(int(u), x)
+                eng.flush()
+                lat += eng.last_stats["latency_s"]
+            dt = time.perf_counter() - t0
+            qps = reps * requests / dt
+            row = {
+                "placement": pname, "codec": codec,
+                "m": fed.m, "k": store.k, "d": store.d,
+                "requests": reps * requests, "max_batch": max_batch,
+                "qps": qps,
+                "batch_p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "batch_p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "store_bytes": int(store.bits.total_bytes),
+                "base_bits": int(store.bits.base_bits),
+                "delta_bits": int(store.bits.delta_bits.sum()),
+                "dense_bytes": (fed.m * store.d * 32 + 7) // 8,
+                "max_recon_err": float(store.recon_err.max()),
+                "parity": "ok",
+            }
+            rows.append(row)
+            print(f"{pname:15s} {codec:10s} qps={qps:7.1f} "
+                  f"p50={row['batch_p50_ms']:6.1f}ms "
+                  f"p99={row['batch_p99_ms']:6.1f}ms "
+                  f"store={row['store_bytes']/1e6:.2f}MB "
+                  f"(dense {row['dense_bytes']/1e6:.2f}MB) parity=ok")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
@@ -520,6 +619,9 @@ def main(argv=None):
     p.add_argument("--channel", action="store_true",
                    help="accuracy vs cumulative downlink bits per "
                         "(strategy × codec) — the §3b channel benchmark")
+    p.add_argument("--serve", action="store_true",
+                   help="personalized serving QPS/latency/store-bytes per "
+                        "(placement × codec) — the §3d serve benchmark")
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
@@ -529,6 +631,9 @@ def main(argv=None):
         return
     if args.channel:
         channel_bench()
+        return
+    if args.serve:
+        serve_bench()
         return
     # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
     from repro.launch.dryrun import run_case

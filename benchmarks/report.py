@@ -195,8 +195,46 @@ def channel_section() -> str:
     return "\n".join(out)
 
 
+def serve_section() -> str:
+    """Personalized serving QPS/latency vs at-rest store bytes per codec
+    (DESIGN.md §3d; BENCH_serve.json)."""
+    path = os.path.join(RESULTS_DIR, "BENCH_serve.json")
+    if not os.path.exists(path):
+        return ("(BENCH_serve.json not yet produced — run "
+                "`python -m benchmarks.perf_iterations --serve`)")
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["Serving throughput vs at-rest store size per (placement × "
+           "codec): one ucfl_k2 run (m=8, keep_state=True) ingested into a "
+           "`DeltaStore` (k stream base models + per-user codec-encoded "
+           "deltas), served through the `ServeEngine` micro-batcher.  "
+           "`dense` = storing all m full models; the identity store can "
+           "EXCEED it (k bases + m dense deltas) — it buys bit-exactness, "
+           "the lossy codecs buy the compression.  Every row passed the "
+           "§3d parity anchor (served output ≡ direct forward through the "
+           "reconstructed params) before timing.", "",
+           "| placement | codec | QPS | batch p50 ms | batch p99 ms | "
+           "store MB | vs dense | max recon err |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ratio = r["store_bytes"] / r["dense_bytes"]
+        out.append(
+            f"| {r['placement']} | {r['codec']} | {r['qps']:.0f} | "
+            f"{r['batch_p50_ms']:.1f} | {r['batch_p99_ms']:.1f} | "
+            f"{r['store_bytes']/1e6:.2f} | {ratio:.2f}× | "
+            f"{r['max_recon_err']:.1e} |")
+    best = min((r for r in rows if r["codec"] != "identity"),
+               key=lambda r: r["store_bytes"])
+    out += ["", f"Smallest store: {best['codec']} at "
+            f"{best['store_bytes']/1e6:.2f} MB "
+            f"({best['store_bytes']/best['dense_bytes']:.2f}× dense) while "
+            f"serving {best['qps']:.0f} QPS on {best['placement']}."]
+    return "\n".join(out)
+
+
 MARKERS = {"Paper": paper_section, "Dry-run": dryrun_section,
-           "Roofline": roofline_section, "Channel": channel_section}
+           "Roofline": roofline_section, "Channel": channel_section,
+           "Serve": serve_section}
 
 SKELETON = "# EXPERIMENTS\n\n" + "\n".join(
     f"## §{name}\n\n<!-- AUTOGEN {name} -->\n<!-- /AUTOGEN {name} -->\n"

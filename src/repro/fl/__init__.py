@@ -6,6 +6,7 @@ from repro.fl.placement import HostVmap, MeshShardMap, Placement
 from repro.fl.simulator import (FLConfig, History, evaluate, run_federated,
                                 superstep_support)
 from repro.fl.runtime import AsyncConfig, VirtualClock, run_async
+from repro.fl.serve import DeltaStore, ServeEngine, StoreBits, check_parity
 from repro.fl.stats import full_client_gradients, sigma2_estimates
 from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
                                  FullParticipation, MixingExtras,
@@ -16,6 +17,7 @@ from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
 __all__ = ["AsyncConfig", "VirtualClock", "run_async",
            "Channel", "ChannelCost", "Codec", "LinkProfile", "get_codec",
            "get_link_profile", "tree_bits",
+           "DeltaStore", "ServeEngine", "StoreBits", "check_parity",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",

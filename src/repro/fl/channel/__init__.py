@@ -18,7 +18,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional, Union
 
-from repro.fl.channel.codecs import (BACKENDS, CODECS, Codec, Identity, QSGD,
+from repro.fl.channel.codecs import (BACKENDS, CODECS, Adaptive,
+                                     BoundAdaptive, Codec, Identity, QSGD,
                                      TopK, apply_uplink, get_codec,
                                      register_codec, uplink_roundtrip,
                                      zeros_like_stack)
@@ -72,7 +73,8 @@ def resolve_channel(channel: Union[str, "Channel", None]
 
 
 __all__ = [
-    "BACKENDS", "CODECS", "Channel", "ChannelCost", "Codec", "Identity",
+    "Adaptive", "BACKENDS", "BoundAdaptive", "CODECS", "Channel",
+    "ChannelCost", "Codec", "Identity",
     "LINK_FAMILIES", "LinkProfile", "QSGD", "TopK", "apply_uplink",
     "dtype_bits", "get_codec",
     "get_link_profile", "leaf_bits", "register_codec", "resolve_channel",

@@ -37,6 +37,7 @@ from typing import Any, ClassVar, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fl.channel.payload import (stacked_ravel, stacked_unravel,
                                       tree_bits, tree_size)
@@ -63,6 +64,46 @@ class Codec(abc.ABC):
     def roundtrip(self, flat: jnp.ndarray, key: jnp.ndarray, *,
                   backend: str = "pallas") -> jnp.ndarray:
         """decode(encode(flat)) per row; (m, D) f32 -> (m, D) f32."""
+
+    # ---- at-rest wire format (serving plane, DESIGN.md §3d) ---------------
+    # `encode` materializes the codec's payload as a dict of row-aligned
+    # arrays (every value has leading dim m) so a store can GATHER a request
+    # batch's rows and decode only those; `decode(encode(x)) ==
+    # roundtrip(x)` bit-for-bit per backend.  The default keeps the decoded
+    # dense values (identity and any codec without a compact residency).
+
+    def encode(self, flat: jnp.ndarray, key: jnp.ndarray, *,
+               backend: str = "pallas") -> Dict[str, jnp.ndarray]:
+        """(m, D) f32 -> payload dict of (m, ...) arrays."""
+        return {"dense": self.roundtrip(flat, key, backend=backend)}
+
+    def decode(self, payload: Dict[str, jnp.ndarray], *,
+               backend: str = "pallas", d: Optional[int] = None
+               ) -> jnp.ndarray:
+        """Payload dict (rows possibly gathered) -> (m, D) f32 values.
+        ``d`` is the dense width — required only by sparse payloads."""
+        return payload["dense"]
+
+    def store_bound(self, payload: Dict[str, np.ndarray],
+                    d: int) -> Optional[np.ndarray]:
+        """(m,) per-row max-abs reconstruction error bound of
+        ``decode(encode(x)) - x``, computable from the HOST-side payload
+        alone — the serving store enforces it at build time.  None when
+        the codec documents no bound (the store then skips the check)."""
+        return None
+
+    # ---- link adaptation (rate-adaptive codecs, DESIGN.md §3b) ------------
+
+    def bind_link(self, link: Any, tree: Any) -> "Codec":
+        """Specialize this codec to a resolved `LinkProfile` (the engines
+        call it from `init_channel`).  Fixed codecs return themselves;
+        `Adaptive` returns a bound instance with per-client parameters."""
+        return self
+
+    def per_client_bits(self, tree: Any, m: int) -> np.ndarray:
+        """(m,) exact uplink bits per client (vector sibling of
+        `payload_bits`; non-uniform only for link-bound adaptive codecs)."""
+        return np.full(m, self.payload_bits(tree), dtype=np.int64)
 
     # codecs are value objects: spec identity drives the jit caches
     def __eq__(self, other) -> bool:
@@ -97,6 +138,9 @@ class Identity(Codec):
     def roundtrip(self, flat, key, *, backend="pallas"):
         return flat
 
+    def store_bound(self, payload, d):
+        return np.zeros(payload["dense"].shape[0])  # lossless: exact
+
 
 @register_codec
 class QSGD(Codec):
@@ -125,6 +169,37 @@ class QSGD(Codec):
             return ops.qsgd_roundtrip(flat, noise, bits=self.bits)
         from repro.kernels import ref
         return ref.qsgd_roundtrip_ref(flat, noise, self.bits)
+
+    def encode(self, flat, key, *, backend="pallas"):
+        """Resident payload: int32 levels (m, D) + per-row absmax (m, 1) —
+        the accounted b bits/element + 32-bit scale of `payload_bits`."""
+        noise = jax.random.uniform(key, flat.shape, jnp.float32)
+        if backend == "pallas":
+            from repro.kernels import ops
+            q, amax = ops.qsgd_quantize(flat, noise, bits=self.bits)
+            return {"levels": q, "absmax": amax}
+        # pure-jnp split of ref.qsgd_roundtrip_ref — same op sequence, so
+        # decode(encode(x)) stays bit-identical to roundtrip(x)
+        s = float(2 ** (self.bits - 1) - 1)
+        amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+        scale = amax * (1.0 / s)
+        inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+        q = jnp.clip(jnp.floor(flat * inv + noise), -s, s).astype(jnp.int32)
+        return {"levels": q, "absmax": amax}
+
+    def decode(self, payload, *, backend="pallas", d=None):
+        q, amax = payload["levels"], payload["absmax"]
+        if backend == "pallas":
+            from repro.kernels import ops
+            return ops.qsgd_dequantize(q, amax, bits=self.bits)
+        s = float(2 ** (self.bits - 1) - 1)
+        return q.astype(jnp.float32) * (amax * (1.0 / s))
+
+    def store_bound(self, payload, d):
+        # stochastic rounding moves each element at most one level:
+        # |x - decode| <= scale_i = absmax_i / s
+        s = float(2 ** (self.bits - 1) - 1)
+        return np.asarray(payload["absmax"])[:, 0].astype(np.float64) / s
 
 
 @register_codec
@@ -159,10 +234,151 @@ class TopK(Codec):
         from repro.kernels import ref
         return jnp.where(ref.topk_mask_ref(flat, k), flat, 0.0)
 
+    def encode(self, flat, key, *, backend="pallas"):
+        """Resident payload: the k largest-|x| (value, index) pairs per row.
+        Ties at the k-th magnitude resolve to the FIRST index (top_k order);
+        `roundtrip` keeps every tied coordinate — both drop nothing larger
+        than the k-th magnitude, so the documented error bound is shared."""
+        k = self.k(flat.shape[1])
+        idx = jax.lax.top_k(jnp.abs(flat), k)[1].astype(jnp.int32)
+        vals = jnp.take_along_axis(flat, idx, axis=1)
+        return {"values": vals, "indices": idx}
+
+    def decode(self, payload, *, backend="pallas", d=None):
+        vals, idx = payload["values"], payload["indices"]
+        if d is None:
+            raise ValueError("topk decode needs the dense width d")
+        m = vals.shape[0]
+        rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+        # scatter-add: every stored index appears once per row, so add ==
+        # set on real entries and is a GSPMD-friendly single scatter
+        return jnp.zeros((m, d), jnp.float32).at[rows, idx].add(vals)
+
+    def store_bound(self, payload, d):
+        # every dropped coordinate is <= the k-th kept magnitude
+        vals = np.abs(np.asarray(payload["values"], np.float64))
+        if vals.shape[1] >= d:
+            return np.zeros(vals.shape[0])      # k == d keeps everything
+        return np.min(vals, axis=1)
+
+
+@register_codec
+class Adaptive(Codec):
+    """Rate-adaptive uplink code (DESIGN.md §3b): each client's qsgd bit
+    width is picked from its `LinkProfile` so that EVERY upload fits the
+    time budget of the slowest client sending the minimum spec — faster
+    links spend their headroom on fidelity instead of idling at the
+    round barrier.
+
+    Spec grammar: ``adaptive`` (qsgd, bits ∈ [2, 8]) or
+    ``adaptive:<min_bits>`` to raise the floor.  The instance the engines
+    run is produced by `bind_link` (init_channel calls it once the link is
+    resolved); using an UNBOUND adaptive codec's value path is an error.
+    On a uniform profile every client lands exactly on ``min_bits``, so
+    the charge equals ``qsgd:<min_bits>`` bit-for-bit.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, min_bits: int = 2, max_bits: int = 8):
+        if not 2 <= int(min_bits) <= int(max_bits) <= 8:
+            raise ValueError("adaptive bits must satisfy 2 <= min <= max "
+                             f"<= 8, got [{min_bits}, {max_bits}]")
+        self.min_bits = int(min_bits)
+        self.max_bits = int(max_bits)
+
+    @property
+    def spec(self) -> str:
+        return (self.name if self.min_bits == 2 and self.max_bits == 8
+                else f"{self.name}:{self.min_bits}")
+
+    def payload_bits(self, tree: Any) -> int:
+        raise RuntimeError(
+            "adaptive codec is link-dependent: the engines bind it via "
+            "Channel(link_profile=...) -> init_channel; call "
+            "bind_link(link, tree) first")
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        raise RuntimeError(
+            "adaptive codec is link-dependent; bind_link(link, tree) first")
+
+    def bind_link(self, link: Any, tree: Any) -> "Codec":
+        d = tree_size(tree)
+        # uplink bits per T_dl of client i; the budget is the slowest
+        # client transmitting the minimum spec — nobody is ever charged
+        # more than the fixed qsgd:<min_bits> round would charge
+        rate = np.asarray(link.dl_rate, np.float64) / np.asarray(
+            link.ul_ratio, np.float64)
+        budget = (d * self.min_bits + 32) / rate.min()
+        bits = np.floor((budget * rate - 32.0) / d)
+        bits = np.clip(bits, self.min_bits, self.max_bits).astype(np.int64)
+        return BoundAdaptive(self.spec, bits)
+
+
+class BoundAdaptive(Codec):
+    """`Adaptive` specialized to one resolved link: a per-client qsgd bit
+    vector.  NOT registered — only `Adaptive.bind_link` constructs it.
+    Equality/hash fold in the bit vector: two runs over different link
+    profiles must never share a compiled superstep or uplink jit."""
+
+    name = "adaptive"
+
+    def __init__(self, spec: str, bits: np.ndarray):
+        self._spec = str(spec)
+        self.bits = np.asarray(bits, np.int64)
+
+    @property
+    def spec(self) -> str:
+        return self._spec
+
+    def bind_link(self, link: Any, tree: Any) -> "Codec":
+        return self                       # already bound — idempotent
+
+    def payload_bits(self, tree: Any) -> int:
+        """Scalar (downlink/broadcast) payload: the broadcast carries the
+        server model re-encoded for the best subscriber, so charge the
+        LARGEST assigned width — the per-client uplink truth lives in
+        `per_client_bits`."""
+        return tree_size(tree) * int(self.bits.max()) + 32
+
+    def per_client_bits(self, tree: Any, m: int) -> np.ndarray:
+        if m != self.bits.shape[0]:
+            raise ValueError(f"bound for m={self.bits.shape[0]} clients, "
+                             f"asked for {m}")
+        return tree_size(tree) * self.bits + 32
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        """ref.qsgd_roundtrip_ref with the scalar level count replaced by a
+        per-row (m, 1) column — rows whose width equals b are bit-identical
+        to ``qsgd:<b>`` on the jnp backend (same op sequence elementwise).
+        Pure jnp on BOTH backends: the Pallas quantize kernel bakes a
+        scalar level count into its body."""
+        noise = jax.random.uniform(key, flat.shape, jnp.float32)
+        s = jnp.asarray(2.0 ** (self.bits - 1) - 1.0,
+                        jnp.float32)[:, None]               # (m, 1)
+        amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+        scale = amax * (1.0 / s)
+        inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+        q = jnp.clip(jnp.floor(flat * inv + noise), -s, s)
+        return q * scale
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, BoundAdaptive)
+                and self._spec == other._spec
+                and self.bits.shape == other.bits.shape
+                and bool(np.all(self.bits == other.bits)))
+
+    def __hash__(self) -> int:
+        return hash((self._spec, self.bits.tobytes()))
+
+    def __repr__(self) -> str:
+        return (f"BoundAdaptive({self._spec!r}, "
+                f"bits=[{self.bits.min()}..{self.bits.max()}])")
+
 
 def get_codec(spec) -> Codec:
-    """``"identity" | "qsgd:<bits>" | "topk:<frac>"`` -> Codec instance
-    (instances pass through)."""
+    """``"identity" | "qsgd:<bits>" | "topk:<frac>" | "adaptive[:<min>]"``
+    -> Codec instance (instances pass through)."""
     if isinstance(spec, Codec):
         return spec
     family, _, param = str(spec).partition(":")
@@ -173,7 +389,7 @@ def get_codec(spec) -> Codec:
     if not param:
         return cls()
     try:
-        arg = int(param) if family == "qsgd" else float(param)
+        arg = int(param) if family in ("qsgd", "adaptive") else float(param)
     except ValueError:
         raise ValueError(f"bad codec parameter in {spec!r}") from None
     return cls(arg)

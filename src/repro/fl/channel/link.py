@@ -12,11 +12,12 @@ follow-on the ROADMAP names from the authors' sequel (arXiv:2304.12930):
 Client time is payload/rate: ``downlink_time(i, b) = b / dl_rate[i]`` and
 ``uplink_time(i, b) = b · ρ_i / dl_rate[i]``.  A broadcast must reach its
 slowest subscriber, so a group stream is charged at ``min dl_rate`` over
-the receiving cohort — a deliberate UPPER BOUND when several streams
-serve disjoint subsets: `CommCost` carries stream counts, not membership,
-so every stream is charged as if its slowest possible subscriber listens
-(per-stream membership-aware charging is a ROADMAP follow-on).  Unicasts
-each reach one receiver and are charged the cohort-mean per-client time.
+the receiving cohort — an UPPER BOUND when several streams serve disjoint
+subsets.  When the strategy exposes its client→stream map
+(`Strategy.membership`), `round_downlink_time` charges each stream at its
+OWN slowest subscriber instead — strictly tighter on heterogeneous
+profiles, bit-identical on uniform ones.  Unicasts each reach one
+receiver and are charged the cohort-mean per-client time.
 
 `from_system(system, ref_bits, m)` is the exactness anchor: a uniform
 profile with ``dl_rate = ref_bits`` and ``ul_ratio = ρ`` charges the
@@ -82,15 +83,19 @@ class LinkProfile:
     def uplink_time(self, client: int, bits: float) -> float:
         return float((bits * self.ul_ratio[client]) / self.dl_rate[client])
 
-    def max_uplink_time(self, bits: float,
+    def max_uplink_time(self, bits,
                         clients: Optional[Sequence[int]] = None) -> float:
         """Slowest participant's upload (the sync round waits for it);
-        0.0 for an empty cohort — nobody uploads, nothing to wait for."""
+        0.0 for an empty cohort — nobody uploads, nothing to wait for.
+        ``bits`` may be a scalar or an (m,) per-client payload vector
+        (rate-adaptive codecs); the scalar path is the vector path with a
+        constant, so the two agree bit-for-bit on fixed codecs."""
         idx = (slice(None) if clients is None
                else np.asarray(clients, np.int64))
         if clients is not None and idx.size == 0:
             return 0.0
-        return float(np.max((bits * self.ul_ratio[idx]) / self.dl_rate[idx]))
+        b = bits[idx] if isinstance(bits, np.ndarray) and bits.ndim else bits
+        return float(np.max((b * self.ul_ratio[idx]) / self.dl_rate[idx]))
 
     def mean_unicast_time(self, bits: float,
                           clients: Optional[Sequence[int]] = None) -> float:
@@ -170,8 +175,8 @@ def get_link_profile(spec, system: SystemModel, ref_bits: int,
 
 
 def round_downlink_time(link: LinkProfile, cost, payload_bits: int,
-                        participants: Optional[Sequence[int]] = None
-                        ) -> float:
+                        participants: Optional[Sequence[int]] = None,
+                        assignment: Optional[np.ndarray] = None) -> float:
     """Total serialized downlink of one round/event — BOTH engines charge
     through here (the sync analytic clock directly, the async engine as
     its event's `serve` duration): ``n_streams`` group broadcasts plus
@@ -180,7 +185,43 @@ def round_downlink_time(link: LinkProfile, cost, payload_bits: int,
     stream must reach its slowest subscriber); unicasts each reach ONE
     receiver, so they are charged the cohort-mean per-client time.  With
     a uniform `from_system` profile and the identity codec every term is
-    exactly 1.0, recovering the legacy ``n_streams + n_unicasts``."""
+    exactly 1.0, recovering the legacy ``n_streams + n_unicasts``.
+
+    ``assignment`` — optional (m,) client→stream map from
+    `Strategy.membership` (the `StreamPlan` assignment / CFL clusters).
+    When given, each broadcast is charged at ITS OWN stream's slowest
+    subscriber instead of the cohort-wide minimum — strictly tighter on
+    heterogeneous profiles.  The refinement only engages when some
+    stream's rate actually beats the cohort minimum: whenever every
+    stream bottoms out at the same rate (uniform profiles in particular)
+    the legacy ``n_streams × t`` multiply is kept verbatim, so the
+    identity-codec parity anchors stay bit-exact (``n·t`` and ``t`` summed
+    n times differ in floating point)."""
+    if assignment is not None and cost.n_streams:
+        asn = np.asarray(assignment, np.int64)
+        if asn.shape != (link.m,):
+            raise ValueError(f"assignment must be (m,)=({link.m},), got "
+                             f"{asn.shape}")
+        part = (np.arange(link.m, dtype=np.int64) if participants is None
+                else np.asarray(participants, np.int64))
+        cohort = part if part.size else np.arange(link.m, dtype=np.int64)
+        slowest = float(np.min(link.dl_rate[cohort]))
+        rates = []                     # per-stream slowest subscriber rate
+        for s in np.unique(asn[cohort]):
+            rates.append(float(np.min(link.dl_rate[cohort[
+                asn[cohort] == s]])))
+        # idle streams (no subscriber in the cohort) are still charged at
+        # the cohort floor: the server transmits them regardless
+        rates += [slowest] * (cost.n_streams - len(rates))
+        # a clamped CommCost (async buffering) can charge FEWER streams
+        # than the cohort spans — membership no longer maps 1:1, keep the
+        # legacy upper bound
+        if len(rates) <= cost.n_streams and any(r > slowest for r in rates):
+            t = float(sum(payload_bits / r for r in rates))
+            if cost.n_unicasts:
+                t += cost.n_unicasts * link.mean_unicast_time(
+                    payload_bits, participants)
+            return t
     t = cost.n_streams * link.downlink_time(payload_bits, participants)
     if cost.n_unicasts:
         t += cost.n_unicasts * link.mean_unicast_time(payload_bits,

@@ -81,6 +81,13 @@ class Placement(abc.ABC):
         """Place the (m, 2) per-client round keys."""
         return ckeys
 
+    def place_stack(self, tree: Any, m: int) -> Any:
+        """Place an ALREADY-stacked (m, ...) pytree on this backend (the
+        serving plane hands request batches / decoded parameter stacks
+        through here; `stack` is its broadcast-from-one-model sibling).
+        Host default: identity."""
+        return tree
+
     def select(self, mask: jnp.ndarray, new: Any, old: Any) -> Any:
         """Participation rollback: keep `old` where ``mask`` is False."""
         return where_clients(mask, new, old)

@@ -105,6 +105,10 @@ class MeshShardMap(Placement):
     def place_keys(self, ckeys: jnp.ndarray) -> jnp.ndarray:
         return self._shard(ckeys)
 
+    def place_stack(self, tree: Any, m: int) -> Any:
+        self._ensure_mesh(m)
+        return self._shard(tree)
+
     # mix/mix_plan run eagerly once per round: hold one jit wrapper per
     # instance so the shard_map collective traces and compiles once, not
     # per call (jax's dispatch cache does not cache fresh shard_map objects)

@@ -47,7 +47,8 @@ from repro.fl.placement import Placement, resolve_placement
 from repro.fl.runtime.clock import VirtualClock
 from repro.fl.simulator import (FLConfig, History, channel_extra,
                                 channel_uplink, finalize_history,
-                                init_channel, init_run, resolve_strategy)
+                                init_channel, init_run,
+                                per_client_uplink_bits, resolve_strategy)
 from repro.fl.strategies import CommCost, Strategy
 from repro.models import lenet
 
@@ -137,15 +138,19 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     ctx.staleness_schedule = cfg.staleness_schedule
     ctx.staleness_alpha = cfg.staleness_alpha
 
-    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
-                                                 system, m)
+    payload, link, model_bits, ef, channel = init_channel(
+        channel, ctx, stacked, system, m)
+    ul_bits_pc = per_client_uplink_bits(channel, ctx, payload, m)
+
+    def _ul_bits(c: int):
+        return payload if ul_bits_pc is None else int(ul_bits_pc[c])
 
     # clock draws come from a private numpy stream — the JAX key schedule
     # below stays exactly the sync engine's; the link profile (if any)
     # swaps the homogeneous ρ uplink for each client's own payload/rate
     clock = VirtualClock(system, seed=seed, link=link)
     for i in range(m):
-        clock.schedule(i, 0.0, ul_bits=payload)
+        clock.schedule(i, 0.0, ul_bits=_ul_bits(i))
     # server version at each client's last model download; a model/update's
     # age at event e is  e - version[i]
     version = np.zeros(m, dtype=np.int64)
@@ -213,11 +218,13 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
             # codec-compressed model per stream (§3b)
             history.comm_bits.append(ChannelCost(
                 dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
-                ul_bits=len(buffered) * payload))
+                ul_bits=sum(_ul_bits(c) for c in buffered)))
         if link is not None:
             # same charging rule as the sync clock (slowest buffered
-            # subscriber per broadcast, receiver-mean per unicast)
-            duration = round_downlink_time(link, cost, payload, buffered)
+            # subscriber per broadcast, receiver-mean per unicast;
+            # membership-aware when the strategy exposes its stream map)
+            duration = round_downlink_time(link, cost, payload, buffered,
+                                           strategy.membership(state))
         else:
             duration = cost.n_streams + cost.n_unicasts
         # overlap=True: this event's streams run concurrently with any
@@ -229,7 +236,7 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
         # broadcast completes before an earlier long one
         t_done = max(t_done, done)
         for c in buffered:
-            clock.schedule(c, done, ul_bits=payload)
+            clock.schedule(c, done, ul_bits=_ul_bits(c))
             version[c] = event + 1
 
         if event % fl.eval_every == 0 or event == fl.rounds - 1:

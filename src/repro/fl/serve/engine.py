@@ -1,0 +1,220 @@
+"""Batched personalized-model serving engine (DESIGN.md §3d).
+
+Request path, two jitted stages per batch size:
+
+  1. ``params_for(users)`` — ONE batched gather of the users' base rows +
+     encoded delta rows from the `DeltaStore`, decoded for just those B
+     rows (`Codec.decode`: Pallas dequant kernels on `HostVmap`,
+     GSPMD-friendly pure-jnp ops on `MeshShardMap`), re-added and
+     unraveled to a (B, ...) stacked parameter pytree;
+  2. ``forward(params, xs)`` — a single ``vmap(apply_fn)`` over the batch.
+
+The micro-batcher (`submit`/`flush`) groups concurrent requests by the
+users' stream assignment so a batch's base-row gather touches few distinct
+base models, chunks to ``max_batch``, and returns outputs in submit order.
+
+Parity anchor (`check_parity`, enforced in tests AND the `--serve`
+bench): stage 2 is shared, so the served output must match a direct
+forward pass through `DeltaStore.params_flat` (decode-everything-then-
+gather) reconstructed params — BIT-IDENTICAL for the ``identity`` codec
+on both placements.  For lossy codecs the two decode paths compute the
+same dequant algebra under different XLA fusion scopes (the batched
+gather fuses dequant into the base re-add, the reference path rounds
+separately), so the anchor instead pins the reconstructed params to
+within a few ulps between paths and the outputs to float-reassociation
+tolerance; the codecs' divergence from the user's TRUE trained params is
+bounded separately at store build time (`Codec.store_bound`).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.placement import resolve_placement
+from repro.fl.serve.store import DeltaStore
+
+
+class ServeEngine:
+    """Micro-batching request engine over one `DeltaStore`.
+
+    apply_fn(params, x) -> output for ONE user's params and ONE request
+    payload; the engine vmaps it over the batch.  ``placement`` selects
+    where batches land (`HostVmap` default; `MeshShardMap` shards the
+    batch over its client axis) and which codec backend decodes deltas.
+    """
+
+    def __init__(self, store: DeltaStore, apply_fn: Callable, *,
+                 placement=None, max_batch: int = 32):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.store = store
+        self.apply_fn = apply_fn
+        self.placement = resolve_placement(placement)
+        self.backend = self.placement.codec_backend
+        self.max_batch = int(max_batch)
+        self._gather_jit: Dict[int, Callable] = {}       # B -> stage 1
+        self._forward_jit: Optional[Callable] = None     # stage 2 (shared)
+        self._pending: List[Tuple[int, int, Any]] = []   # (ticket, user, x)
+        self._tickets = 0
+        self.last_stats: Dict[str, Any] = {}
+
+    # ---- stage 1: batched gather + decode ----------------------------------
+
+    def _gather_fn(self, b: int) -> Callable:
+        fn = self._gather_jit.get(b)
+        if fn is None:
+            store, backend = self.store, self.backend
+
+            def gather(users, rows, base_flat, payload, fv, fi):
+                base = jnp.take(base_flat, rows, axis=0)        # (B, D)
+                enc = {k: jnp.take(v, users, axis=0)
+                       for k, v in payload.items()}
+                delta = store.codec.decode(enc, backend=backend, d=store.d)
+                flat = store.apply_fix(base + delta,
+                                       jnp.take(fv, users, axis=0),
+                                       jnp.take(fi, users, axis=0))
+                return store.unravel_batch(flat)
+
+            fn = self._gather_jit[b] = jax.jit(gather)
+        return fn
+
+    def params_for(self, users: Sequence[int]) -> Any:
+        """Personalized params for ``users`` as a (B, ...) stacked pytree:
+        gather-THEN-decode — only the B requested delta rows are decoded."""
+        users_np = np.asarray(users, np.int64).ravel()
+        b = users_np.shape[0]
+        users_j = jnp.asarray(users_np, jnp.int32)
+        rows_j = jnp.asarray(self.store.assignment[users_np], jnp.int32)
+        params = self._gather_fn(b)(users_j, rows_j, self.store.base_flat,
+                                    self.store.payload,
+                                    self.store.fix_values,
+                                    self.store.fix_indices)
+        return self.placement.place_stack(params, b)
+
+    # ---- stage 2: one vmapped forward per batch -----------------------------
+
+    def forward(self, params: Any, xs: Any) -> Any:
+        """``vmap(apply_fn)`` over the batch — the SAME compiled function
+        serves requests and the parity reference path."""
+        if self._forward_jit is None:
+            self._forward_jit = jax.jit(jax.vmap(self.apply_fn))
+        return self._forward_jit(params, xs)
+
+    def serve(self, users: Sequence[int], xs: Any) -> Any:
+        """One batch end-to-end: params gather/decode + vmapped forward."""
+        b = np.asarray(users).size
+        xs = self.placement.place_stack(jnp.asarray(xs), b)
+        return self.forward(self.params_for(users), xs)
+
+    # ---- micro-batcher -------------------------------------------------------
+
+    def submit(self, user: int, x: Any) -> int:
+        """Queue one request; returns its ticket (index into `flush`'s
+        output list)."""
+        t = self._tickets
+        self._tickets += 1
+        self._pending.append((t, int(user), np.asarray(x)))
+        return t
+
+    def flush(self) -> List[np.ndarray]:
+        """Serve every pending request: sort by (stream, user) so each
+        batch gathers few distinct base rows, chunk to ``max_batch``, one
+        gather+decode and one vmapped forward per chunk.  Returns outputs
+        in submit order; per-chunk wall latencies land in `last_stats`."""
+        pending, self._pending = self._pending, []
+        self._tickets = 0
+        if not pending:
+            self.last_stats = {"requests": 0, "batches": 0, "latency_s": []}
+            return []
+        asn = self.store.assignment
+        order = sorted(range(len(pending)),
+                       key=lambda i: (asn[pending[i][1]], pending[i][1],
+                                      pending[i][0]))
+        outputs: List[Optional[np.ndarray]] = [None] * len(pending)
+        latencies = []
+        for lo in range(0, len(order), self.max_batch):
+            chunk = [pending[i] for i in order[lo:lo + self.max_batch]]
+            users = np.asarray([c[1] for c in chunk], np.int64)
+            xs = np.stack([c[2] for c in chunk])
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(self.serve(users, xs))
+            latencies.append(time.perf_counter() - t0)
+            out_np = np.asarray(out)
+            for j, (ticket, _, _) in enumerate(chunk):
+                outputs[ticket] = out_np[j]
+        self.last_stats = {"requests": len(pending),
+                           "batches": len(latencies),
+                           "latency_s": latencies}
+        return outputs                       # type: ignore[return-value]
+
+
+# lossy codecs only: ulps of per-row param slack between the two decode
+# paths (the jitted gather may fuse dequant·scale into the base re-add —
+# one rounding — where the eager reference rounds twice), and the matching
+# relative output tolerance for the forward through those params
+_PARITY_ULPS = 8.0
+_PARITY_RTOL = 1e-5
+
+
+def check_parity(engine: ServeEngine, users: Sequence[int], xs: Any,
+                 served: Any = None) -> float:
+    """The §3d serving parity anchor: the engine's gather-then-decode
+    output must equal a direct forward pass through the store's decode-
+    everything reference reconstruction — BIT-IDENTICAL for the
+    ``identity`` codec on every placement; for lossy codecs the two
+    paths' reconstructed params must agree within `_PARITY_ULPS` ulps
+    (XLA fusion reassociation, module docstring) and the outputs within
+    `_PARITY_RTOL`.  Raises on divergence; returns the max |served| as a
+    liveness datum."""
+    users_np = np.asarray(users, np.int64).ravel()
+    b = users_np.shape[0]
+    xs = engine.placement.place_stack(jnp.asarray(xs), b)
+    if served is None:
+        served = engine.serve(users_np, xs)
+    ref_flat = engine.store.params_flat(users_np, backend=engine.backend)
+    ref_params = engine.placement.place_stack(
+        engine.store.unravel_batch(ref_flat), b)
+    direct = engine.forward(ref_params, xs)
+    served_np, direct_np = np.asarray(served), np.asarray(direct)
+
+    def fail(why: str):
+        raise RuntimeError(
+            "serving parity anchor violated: served output != direct "
+            f"forward through reconstructed params ({why}; codec="
+            f"{engine.store.codec.spec}, placement="
+            f"{type(engine.placement).__name__})")
+
+    if served_np.shape != direct_np.shape:
+        fail(f"shape {served_np.shape} != {direct_np.shape}")
+    exact = np.array_equal(served_np, direct_np)
+    if engine.store.codec.is_identity:
+        if not exact:
+            bad = np.max(np.abs(served_np.astype(np.float64)
+                                - direct_np.astype(np.float64)))
+            fail(f"identity codec must be bit-identical, max|diff|={bad:.3e}")
+    elif not exact:
+        # both decode paths inside the same float-reassociation envelope?
+        from repro.fl.channel import stacked_ravel
+        got = np.asarray(stacked_ravel(
+            jax.device_get(engine.params_for(users_np))))
+        ref = np.asarray(ref_flat)
+        # f32 ulps: the params are float32, so one reassociated rounding
+        # moves a value by spacing(max|row|) in f32 terms
+        slack = _PARITY_ULPS * np.spacing(
+            np.max(np.abs(ref), axis=1).astype(np.float32)).astype(np.float64)
+        perr = np.max(np.abs(got.astype(np.float64)
+                             - ref.astype(np.float64)), axis=1)
+        if np.any(perr > slack):
+            fail(f"two-path param divergence {perr.max():.3e} > "
+                 f"{_PARITY_ULPS} ulp slack")
+        oerr = np.max(np.abs(served_np.astype(np.float64)
+                             - direct_np.astype(np.float64)))
+        scale = max(float(np.max(np.abs(direct_np))), 1e-30)
+        if oerr > _PARITY_RTOL * scale:
+            fail(f"output divergence {oerr:.3e} > rtol {_PARITY_RTOL} "
+                 f"of {scale:.3e}")
+    return float(np.max(np.abs(served_np)))

@@ -1,0 +1,304 @@
+"""Per-user personalized-model delta store (DESIGN.md §3d).
+
+`run_federated(keep_state=True)` ends with an (m, ...) client-stacked
+parameter pytree — one personalized model per user.  Storing m full
+models is exactly the deployment cost the personalization literature
+flags as the practical bottleneck; this store keeps instead
+
+  * the k stream/cluster BASE models (one representative per stream of
+    the strategy's client→stream map — `StreamPlan` assignment, CFL
+    clusters, or a byte-level dedup of identical rows), flat (k, D);
+  * one per-user personalization DELTA against the user's base, encoded
+    at rest with a PR 4 `Codec` (``identity | qsgd:<bits> | topk:<frac>``)
+    in its row-gatherable wire format (`Codec.encode`/`decode`);
+
+so storage cost rides the same exact bit accounting as training comm
+(`channel/payload.py`).  Reconstruction contract, enforced at build time:
+
+  * ``identity`` — bit-exact.  ``fl(base + fl(x − base)) != x`` in
+    general, and for magnitude-mismatched elements (|x| ≪ |base|) NO
+    single f32 delta reproduces x, so reconstruction is the two-term
+    error-free transform ``fl(fl(base + delta) + fix)``: the delta is
+    iteratively refined, then a SPARSE per-user fixup (value, index)
+    catches the few elements the one-add grid cannot reach.  The fixup's
+    64 bits/entry ride the bit accounting;
+  * lossy codecs — per-user max-abs error within the codec's documented
+    bound (`Codec.store_bound`): the per-row quantization scale for qsgd,
+    the k-th magnitude for top-k, plus 4 ulp of re-add slack.  The fixup
+    is empty — the bound already covers the re-add.
+
+`save`/`load` persist through `repro.checkpoint` (msgpack; dict/list/
+array pytrees only — the template rides as a zeros pytree).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.fl.channel import get_codec, stacked_ravel, stacked_unravel
+from repro.fl.channel.payload import tree_bits
+
+_REFINE_ITERS = 8
+# float re-add slack on top of the codec's own bound: reconstruct does two
+# f32 rounding steps (encode-side subtract, decode-side add) per element
+_ULP_SLACK = 4.0
+
+
+@dataclass(frozen=True)
+class StoreBits:
+    """Exact at-rest size: k base models + m encoded deltas."""
+    base_bits: int
+    delta_bits: np.ndarray              # (m,) per-user encoded delta bits
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.base_bits) + int(self.delta_bits.sum())
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.total_bits + 7) // 8
+
+
+class DeltaStore:
+    """k base models + per-user codec-encoded deltas; see module docstring.
+
+    Construct via `from_history` / `build` / `load` — the raw constructor
+    takes already-validated pieces.
+    """
+
+    def __init__(self, *, base_flat, assignment, codec, payload, template,
+                 recon_err, delta_bits, fix_values, fix_indices,
+                 seed: int = 0, backend: str = "pallas"):
+        self.base_flat = jnp.asarray(base_flat, jnp.float32)    # (k, D)
+        self.assignment = np.asarray(assignment, np.int64)      # (m,)
+        self.codec = get_codec(codec)
+        self.payload = {k: jnp.asarray(v) for k, v in payload.items()}
+        self.template = template          # single-model pytree of np zeros
+        # sparse two-term fixup, (m, K) value/index pairs (K may be 0):
+        # applied AFTER the base+delta add — see module docstring
+        self.fix_values = jnp.asarray(fix_values, jnp.float32)
+        self.fix_indices = jnp.asarray(fix_indices, jnp.int32)
+        self.recon_err = np.asarray(recon_err, np.float64)      # (m,)
+        self.seed = int(seed)
+        self.backend = backend
+        # raw codec bits kept separate so save/load doesn't double-count
+        # the fixup entries
+        self._delta_bits_raw = np.asarray(delta_bits, np.int64)
+        fix_bits = 64 * np.count_nonzero(np.asarray(fix_values), axis=1)
+        self.bits = StoreBits(
+            base_bits=self.k * tree_bits(template),
+            delta_bits=self._delta_bits_raw + fix_bits)
+        self._asn_dev = jnp.asarray(self.assignment, jnp.int32)
+
+    # ---- shape facts -------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return int(self.assignment.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.base_flat.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.base_flat.shape[1])
+
+    def summary(self) -> Dict[str, Any]:
+        return {"codec": self.codec.spec, "m": self.m, "k": self.k,
+                "d": self.d, "base_bits": int(self.bits.base_bits),
+                "delta_bits": int(self.bits.delta_bits.sum()),
+                "total_bytes": int(self.bits.total_bytes),
+                "max_recon_err": float(self.recon_err.max())}
+
+    # ---- reconstruction ----------------------------------------------------
+
+    def unravel_batch(self, flat: jnp.ndarray) -> Any:
+        """(B, D) flat rows -> stacked parameter pytree with leading B."""
+        b = flat.shape[0]
+        like = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((b,) + tuple(l.shape), l.dtype),
+            self.template)
+        return stacked_unravel(flat, like)
+
+    @staticmethod
+    def apply_fix(flat: jnp.ndarray, fix_values: jnp.ndarray,
+                  fix_indices: jnp.ndarray) -> jnp.ndarray:
+        """Second term of the error-free reconstruction: add the sparse
+        per-row fixups ONTO the already-added (rows, D) flat params.
+        Padding entries are (0.0, 0) — adding 0 is exact."""
+        if fix_values.shape[1] == 0:
+            return flat
+        rows = jnp.arange(flat.shape[0], dtype=jnp.int32)[:, None]
+        return flat.at[rows, fix_indices].add(fix_values)
+
+    def params_flat(self, users: Optional[Sequence[int]] = None,
+                    *, backend: Optional[str] = None) -> jnp.ndarray:
+        """Decode the FULL store, then gather ``users``' rows — the
+        reference path the serving engine's gather-then-decode is checked
+        against (`check_parity`)."""
+        backend = self.backend if backend is None else backend
+        dec = self.codec.decode(self.payload, backend=backend, d=self.d)
+        flat = jnp.take(self.base_flat, self._asn_dev, axis=0) + dec
+        flat = self.apply_fix(flat, self.fix_values, self.fix_indices)
+        if users is None:
+            return flat
+        return jnp.take(flat, jnp.asarray(np.asarray(users), jnp.int32),
+                        axis=0)
+
+    def params(self, users: Optional[Sequence[int]] = None) -> Any:
+        """Reconstructed personalized params as a stacked pytree."""
+        return self.unravel_batch(self.params_flat(users))
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def from_history(cls, history, *, codec="identity", assignment=None,
+                     link=None, seed: int = 0,
+                     backend: str = "pallas") -> "DeltaStore":
+        """Ingest a `run_federated(keep_state=True)` History.  Base-model
+        assignment resolution: explicit ``assignment`` > the strategy's
+        extras (`MixingExtras.assignment` / `ClusterExtras.clusters`) >
+        byte-level dedup of identical parameter rows (stream members end
+        the run with identical params, so dedup recovers the plan)."""
+        if history.final_params is None:
+            raise ValueError(
+                "history has no final_params — run "
+                "run_federated(..., keep_state=True) to serve from it")
+        if assignment is None:
+            ex = history.extras
+            assignment = getattr(ex, "assignment", None)
+            if assignment is None:
+                assignment = getattr(ex, "clusters", None)
+        return cls.build(history.final_params, assignment=assignment,
+                         codec=codec, link=link, seed=seed, backend=backend)
+
+    @classmethod
+    def build(cls, final_params, *, assignment=None, codec="identity",
+              link=None, seed: int = 0,
+              backend: str = "pallas") -> "DeltaStore":
+        codec = get_codec(codec)
+        flat = np.asarray(stacked_ravel(final_params), np.float32)
+        m, d = flat.shape
+        template = jax.tree_util.tree_map(
+            lambda l: np.zeros(l.shape[1:], l.dtype), final_params)
+        if link is not None:
+            codec = codec.bind_link(link, template)
+
+        if assignment is None:
+            # identical rows share a stream: dedup recovers the plan even
+            # when the strategy recorded none (fedavg => k=1, per-user
+            # personalization => k=m)
+            _, assignment = np.unique(flat, axis=0, return_inverse=True)
+        asn = np.asarray(assignment, np.int64).ravel()
+        if asn.shape != (m,):
+            raise ValueError(f"assignment must be (m,)=({m},), got "
+                             f"{asn.shape}")
+        _, asn = np.unique(asn, return_inverse=True)   # labels -> 0..k-1
+        k = int(asn.max()) + 1
+        first = np.asarray([int(np.argmax(asn == j)) for j in range(k)])
+        base = flat[first]                              # (k, D)
+
+        # iterative refinement: drive fl(base + delta) as close to flat as
+        # a single f32 add can get (the plain subtract is not enough)
+        delta = (flat - base[asn]).astype(np.float32)
+        for _ in range(_REFINE_ITERS):
+            r = (base[asn] + delta).astype(np.float32)
+            if np.array_equal(r, flat):
+                break
+            delta = (delta + (flat - r)).astype(np.float32)
+
+        payload = codec.encode(jnp.asarray(delta),
+                               jax.random.PRNGKey(seed), backend=backend)
+        dec = codec.decode(payload, backend=backend, d=d)
+        recon = np.asarray(jnp.asarray(base)[jnp.asarray(asn)] + dec,
+                           np.float32)
+
+        # identity only: the sparse second term of the error-free
+        # reconstruction — elements whose magnitude mismatches the base so
+        # badly that no single f32 delta lands on them exactly
+        fix_values = np.zeros((m, 0), np.float32)
+        fix_indices = np.zeros((m, 0), np.int32)
+        if codec.is_identity and not np.array_equal(recon, flat):
+            lo = np.zeros_like(flat)
+            for _ in range(_REFINE_ITERS):
+                v = (recon + lo).astype(np.float32)
+                if np.array_equal(v, flat):
+                    break
+                lo = (lo + (flat - v)).astype(np.float32)
+            else:
+                raise RuntimeError(
+                    "identity fixup refinement did not converge in "
+                    f"{_REFINE_ITERS} iterations — lossless reconstruction "
+                    "contract cannot hold")
+            nnz = int(np.max(np.count_nonzero(lo, axis=1)))
+            fix_values = np.zeros((m, nnz), np.float32)
+            fix_indices = np.zeros((m, nnz), np.int32)
+            for i in range(m):
+                idx = np.nonzero(lo[i])[0]
+                fix_values[i, :idx.size] = lo[i, idx]
+                fix_indices[i, :idx.size] = idx
+            recon = np.asarray(DeltaStore.apply_fix(
+                jnp.asarray(recon), jnp.asarray(fix_values),
+                jnp.asarray(fix_indices)), np.float32)
+
+        recon_err = np.max(np.abs(recon.astype(np.float64)
+                                  - flat.astype(np.float64)), axis=1)
+
+        bound = codec.store_bound({n: np.asarray(v)
+                                   for n, v in payload.items()}, d)
+        if bound is not None:
+            slack = _ULP_SLACK * np.spacing(
+                np.max(np.abs(flat), axis=1).astype(np.float64))
+            if np.any(recon_err > bound + slack):
+                worst = int(np.argmax(recon_err - bound))
+                raise RuntimeError(
+                    f"store reconstruction violates the {codec.spec!r} "
+                    f"error bound: user {worst} err={recon_err[worst]:.3e} "
+                    f"> bound={float(bound[worst]):.3e}")
+
+        return cls(base_flat=base, assignment=asn, codec=codec,
+                   payload=payload, template=template, recon_err=recon_err,
+                   delta_bits=codec.per_client_bits(template, m),
+                   fix_values=fix_values, fix_indices=fix_indices,
+                   seed=seed, backend=backend)
+
+    # ---- persistence (repro.checkpoint msgpack) ----------------------------
+
+    def save(self, path: str) -> None:
+        checkpoint.save(path, {
+            "version": 1,
+            "codec": self.codec.spec,
+            "backend": self.backend,
+            "seed": self.seed,
+            "assignment": self.assignment,
+            "base_flat": np.asarray(self.base_flat),
+            "payload": {k: np.asarray(v) for k, v in self.payload.items()},
+            "template": self.template,
+            "recon_err": self.recon_err,
+            "delta_bits": self._delta_bits_raw,
+            "fix_values": np.asarray(self.fix_values),
+            "fix_indices": np.asarray(self.fix_indices),
+        })
+
+    @classmethod
+    def load(cls, path: str) -> "DeltaStore":
+        t = checkpoint.restore(path)
+        if t.get("version") != 1:
+            raise ValueError(f"unknown DeltaStore version {t.get('version')}"
+                             f" in {path}")
+        template = jax.tree_util.tree_map(np.asarray, t["template"])
+        return cls(base_flat=t["base_flat"],
+                   assignment=np.asarray(t["assignment"]),
+                   codec=t["codec"], payload=t["payload"],
+                   template=template,
+                   recon_err=np.asarray(t["recon_err"]),
+                   delta_bits=np.asarray(t["delta_bits"]),
+                   fix_values=np.asarray(t["fix_values"]),
+                   fix_indices=np.asarray(t["fix_indices"]),
+                   seed=int(t["seed"]), backend=t["backend"])

@@ -141,19 +141,36 @@ def init_channel(channel: Optional[Channel], ctx: "RoundContext",
     """Shared channel prologue for the sync and async engines (so their
     §3b semantics can't drift, like `init_run` for the round prologue):
     payload bits, resolved link profile and the error-feedback residual
-    stack.  Returns ``(payload, link, model_bits, ef)`` — all None/0 when
-    no channel is attached.  The link is resolved (validating its spec)
-    even when no ``system`` will consume it, against the default wired
-    model, so ``extra["channel"]`` records it consistently."""
+    stack.  Returns ``(payload, link, model_bits, ef, channel)`` — all
+    None/0 when no channel is attached.  The link is resolved FIRST
+    (validating its spec even when no ``system`` will consume it, against
+    the default wired model, so ``extra["channel"]`` records it
+    consistently), then the codec is bound to it — rate-adaptive codecs
+    pick their per-client parameters here, so callers must use the
+    RETURNED channel from this point on."""
     if channel is None:
-        return None, None, 0, None
-    codec = channel.codec
-    ef = None if codec.is_identity else zeros_like_stack(stacked)
+        return None, None, 0, None, None
     model_bits = tree_bits(ctx.params0)
-    payload = codec.payload_bits(ctx.params0)
     link = channel.resolve_link(system if system is not None
                                 else SYSTEMS["wired"], model_bits, m)
-    return payload, link, model_bits, ef
+    codec = channel.codec.bind_link(link, ctx.params0)
+    if codec is not channel.codec:
+        channel = dataclasses.replace(channel, codec=codec)
+    ef = None if codec.is_identity else zeros_like_stack(stacked)
+    payload = codec.payload_bits(ctx.params0)
+    return payload, link, model_bits, ef, channel
+
+
+def per_client_uplink_bits(channel: Optional[Channel], ctx: "RoundContext",
+                           payload: Optional[int],
+                           m: int) -> Optional[np.ndarray]:
+    """(m,) per-client uplink payload vector when the bound codec's bits
+    are NOT uniform (rate-adaptive codecs), else None — keeping the fixed-
+    codec accounting on its exact scalar path."""
+    if channel is None:
+        return None
+    vec = channel.codec.per_client_bits(ctx.params0, m)
+    return None if np.all(vec == payload) else vec
 
 
 def channel_uplink(placement: Placement, channel: Channel, stacked: Any,
@@ -316,12 +333,18 @@ def _eval_rounds(rounds: int, eval_every: int):
 
 def charge_round(history: "History", cost: CommCost, mask_np, m: int,
                  payload: int, link, system: Optional[SystemModel],
-                 channel: Optional[Channel], t_accum: float) -> float:
+                 channel: Optional[Channel], t_accum: float,
+                 assignment: Optional[np.ndarray] = None,
+                 ul_bits_pc: Optional[np.ndarray] = None) -> float:
     """One round's comm/bits/clock accounting, SHARED by the eventful loop
     and the superstep replay so the two engines can't drift (like
     `init_run`/`init_channel` for the prologue).  ``mask_np`` is the
     HOST-side participation row (None or all-True = full cohort — the
-    eventful sampler returns None there); returns the updated clock."""
+    eventful sampler returns None there); returns the updated clock.
+    ``assignment`` is the strategy's client→stream map (membership-aware
+    broadcast charging, None = legacy cohort-slowest upper bound);
+    ``ul_bits_pc`` the (m,) per-client uplink payload vector (rate-
+    adaptive codecs; None = uniform ``payload`` per client)."""
     history.comm.append(cost)
     n_part, participants = m, None
     if channel is not None or system is not None:
@@ -332,15 +355,21 @@ def charge_round(history: "History", cost: CommCost, mask_np, m: int,
             participants = np.where(mask_np)[0]
     if channel is not None:
         # downlink streams move the codec-compressed model (§3b)
+        if ul_bits_pc is None:
+            ul_bits = n_part * payload
+        else:
+            idx = participants if participants is not None else slice(None)
+            ul_bits = int(np.sum(ul_bits_pc[idx]))
         history.comm_bits.append(ChannelCost(
             dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
-            ul_bits=n_part * payload))
+            ul_bits=ul_bits))
     if system is not None:
         if link is not None:
+            ul = payload if ul_bits_pc is None else ul_bits_pc
             t_accum += (system.compute_time(n_part)
-                        + link.max_uplink_time(payload, participants)
+                        + link.max_uplink_time(ul, participants)
                         + round_downlink_time(link, cost, payload,
-                                              participants))
+                                              participants, assignment))
         else:
             t_accum += system.round_time(n_part, n_streams=cost.n_streams,
                                          n_unicasts=cost.n_unicasts)
@@ -382,8 +411,8 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
     key, update_fn, stacked, opt_state, data, ctx, state = init_run(
         strategy, fed, fl, model_init, loss_fn, acc_fn, placement, seed,
         donate=False)   # donation happens at the superstep boundary instead
-    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
-                                                 system, m)
+    payload, link, model_bits, ef, channel = init_channel(
+        channel, ctx, stacked, system, m)
     lossy = channel is not None and not channel.codec.is_identity
     # identity codecs trace no uplink: normalize so channel-less and
     # identity-channel runs share one compiled superstep
@@ -396,6 +425,8 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
                              update_fn, m)
     cost = strategy.comm(state)     # round-constant by the traceability
     history = History()             # contract (state never changes)
+    assignment = strategy.membership(state)      # round-constant too
+    ul_bits_pc = per_client_uplink_bits(channel, ctx, payload, m)
     t_accum = 0.0
     carry = (key, stacked, opt_state, ef if lossy else None)
 
@@ -412,7 +443,8 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
         for i in range(length):
             t_accum = charge_round(
                 history, cost, None if masks_np is None else masks_np[i],
-                m, payload, link, system, channel, t_accum)
+                m, payload, link, system, channel, t_accum,
+                assignment, ul_bits_pc)
         mean_acc, worst_acc = placement.evaluate(acc_fn, carry[1], fed)
         history.rounds.append(nxt)
         history.mean_acc.append(mean_acc)
@@ -505,8 +537,9 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
                  placement, seed, donate=donate)
 
-    payload, link, model_bits, ef = init_channel(channel, ctx, stacked,
-                                                 system, m)
+    payload, link, model_bits, ef, channel = init_channel(
+        channel, ctx, stacked, system, m)
+    ul_bits_pc = per_client_uplink_bits(channel, ctx, payload, m)
 
     history = History()
     t_accum = 0.0
@@ -550,7 +583,8 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                    and (channel is not None or system is not None)
                    else None)
         t_accum = charge_round(history, strategy.comm(state), mask_np, m,
-                               payload, link, system, channel, t_accum)
+                               payload, link, system, channel, t_accum,
+                               strategy.membership(state), ul_bits_pc)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)

@@ -173,8 +173,12 @@ class StrategyExtras:
 
 @dataclass
 class MixingExtras(StrategyExtras):
-    """UCFL family: the Eq. 6 collaboration matrix used all run."""
+    """UCFL family: the Eq. 6 collaboration matrix used all run, plus the
+    client→stream assignment when the run used the k-stream reduction
+    (None for full per-client unicast) — the serving plane's
+    `DeltaStore.from_history` reads it to pick base models."""
     mixing_matrix: np.ndarray
+    assignment: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -226,6 +230,14 @@ class Strategy(abc.ABC):
 
     def extras(self, state: Any) -> Optional[StrategyExtras]:
         """Typed end-of-run results for `History.extras`."""
+        return None
+
+    def membership(self, state: Any) -> Optional[np.ndarray]:
+        """(m,) int client→stream map backing ``comm(state).n_streams``
+        broadcasts, or None when the strategy doesn't know one (fedavg,
+        local, fomo).  Two consumers: membership-aware downlink charging
+        (`round_downlink_time`, DESIGN.md §3b) and the serving plane's
+        base-model selection (`DeltaStore.from_history`, §3d)."""
         return None
 
     def traced_state(self, state: Any) -> Any:

@@ -60,6 +60,9 @@ class CFL(Strategy):
     def comm(self, clusters: np.ndarray) -> CommCost:
         return CommCost(int(clusters.max()) + 1, 0)
 
+    def membership(self, clusters: np.ndarray) -> np.ndarray:
+        return np.asarray(clusters, np.int64)
+
     def extras(self, clusters: np.ndarray) -> ClusterExtras:
         return ClusterExtras(clusters=clusters.copy())
 

@@ -79,8 +79,14 @@ class UCFL(Strategy):
     def comm(self, state: UCFLState) -> CommCost:
         return CommCost(state.n_streams, 0)
 
+    def membership(self, state: UCFLState) -> np.ndarray:
+        if state.plan is None:          # full personalization: own stream
+            return np.arange(state.w.shape[0], dtype=np.int64)
+        return np.asarray(state.plan.assignment, np.int64)
+
     def extras(self, state: UCFLState) -> MixingExtras:
-        return MixingExtras(mixing_matrix=np.asarray(state.w))
+        return MixingExtras(mixing_matrix=np.asarray(state.w),
+                            assignment=self.membership(state))
 
     @classmethod
     def downlink_cost(cls, m, *, n_streams=1, fomo_candidates=5):

@@ -1,0 +1,427 @@
+"""Personalized-model serving plane (DESIGN.md §3d): DeltaStore
+reconstruction contracts, the ServeEngine parity anchor, checkpoint
+round-tripping, plus the §3b satellites that ride the same PR —
+rate-adaptive codecs and membership-aware broadcast charging.
+
+The §3d anchor, enforced here and inside ``perf_iterations.py --serve``:
+for every user the served output equals a direct forward pass through
+that user's reconstructed personalized params — bit-identical with the
+``identity`` codec on both placements, within the documented codec error
+bound (`Codec.store_bound`) for lossy codecs.
+
+CI's serve-smoke job re-runs this file under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 so the mesh decode
+path exercises real (host) sharding.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.data.federated import scenario_label_shift
+from repro.fl import (Channel, DeltaStore, FLConfig, HostVmap, MeshShardMap,
+                      ServeEngine, SYSTEMS, check_parity, get_codec,
+                      run_federated)
+from repro.fl.channel import get_link_profile, stacked_ravel, tree_bits
+from repro.fl.channel.codecs import Adaptive, BoundAdaptive
+from repro.fl.channel.link import round_downlink_time
+from repro.fl.strategies import CommCost
+from repro.models import lenet
+
+KEY = jax.random.PRNGKey(0)
+FL = FLConfig(rounds=3, local_steps=2, batch_size=16, eval_every=3)
+CODECS = ["identity", "qsgd:4", "topk:0.25"]
+
+
+def apply_one(params, x):
+    """One user's params x one example -> logits (the engine vmaps it)."""
+    return lenet.apply(params, x[None])[0]
+
+
+def mesh():
+    """Collectives pinned: bit-exact on any (forced) device count."""
+    return MeshShardMap(schedule="shard_map_streams")
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=4)
+
+
+@pytest.fixture(scope="module")
+def hist(fed):
+    return run_federated("ucfl_k2", fed, fl=FL, keep_state=True)
+
+
+@pytest.fixture(scope="module")
+def hist_mesh(fed):
+    return run_federated("ucfl_k2", fed, fl=FL, placement=mesh(),
+                         keep_state=True)
+
+
+@pytest.fixture(scope="module")
+def hist_full(fed):
+    # FULL personalization: every user ends with a distinct model, so a
+    # store keyed on the coarse ground-truth clusters has genuinely
+    # NONZERO per-user deltas (stream-reduced runs end bit-identical to
+    # their base — zero deltas — which would make lossy tests vacuous)
+    return run_federated("ucfl", fed, fl=FL, keep_state=True)
+
+
+# ---------------------------------------------------------------------------
+# DeltaStore reconstruction contracts
+
+
+def test_identity_store_is_lossless(hist):
+    store = DeltaStore.from_history(hist, codec="identity")
+    true = np.asarray(stacked_ravel(hist.final_params), np.float32)
+    got = np.asarray(store.params_flat())
+    assert np.array_equal(got, true)
+    assert store.recon_err.max() == 0.0
+
+
+def test_store_uses_strategy_assignment(hist):
+    store = DeltaStore.from_history(hist, codec="identity")
+    assert store.k == 2                       # ucfl_k2: two streams
+    np.testing.assert_array_equal(store.assignment,
+                                  hist.extras.assignment)
+
+
+def test_store_dedup_recovers_plan_without_extras(fed):
+    # fedavg records no assignment: byte-level dedup finds the single
+    # consensus model; "local" never mixes, so every user is its own base
+    h1 = run_federated("fedavg", fed, fl=FL, keep_state=True)
+    assert DeltaStore.from_history(h1, codec="identity").k == 1
+    h2 = run_federated("local", fed, fl=FL, keep_state=True)
+    assert DeltaStore.from_history(h2, codec="identity").k == fed.m
+
+
+@pytest.mark.parametrize("codec", ["qsgd:4", "topk:0.25"])
+def test_lossy_store_within_documented_bound(hist, codec):
+    # build() raises when the bound is violated; re-assert it here
+    # explicitly against the true trained params
+    store = DeltaStore.from_history(hist, codec=codec)
+    true = np.asarray(stacked_ravel(hist.final_params), np.float64)
+    got = np.asarray(store.params_flat(), np.float64)
+    err = np.max(np.abs(got - true), axis=1)
+    bound = store.codec.store_bound(
+        {k: np.asarray(v) for k, v in store.payload.items()}, store.d)
+    slack = 4.0 * np.spacing(np.max(np.abs(true), axis=1))
+    assert np.all(err <= bound + slack)
+
+
+def test_store_bits_accounting(hist):
+    m, d = 4, None
+    store = DeltaStore.from_history(hist, codec="identity")
+    d = store.d
+    assert store.bits.base_bits == store.k * tree_bits(store.template)
+    # identity deltas are dense f32 (+64 bits per sparse fixup entry)
+    assert np.all(store.bits.delta_bits >= d * 32)
+    q = DeltaStore.from_history(hist, codec="qsgd:4")
+    np.testing.assert_array_equal(q.bits.delta_bits, np.full(m, d * 4 + 32))
+    assert q.bits.total_bytes < store.bits.total_bytes
+
+
+def test_coarse_assignment_identity_still_lossless(hist_full, fed):
+    # nonzero deltas force the iterative delta refinement (and, where the
+    # one-add f32 grid can't reach, the sparse fixup) — reconstruction
+    # must STILL be bit-exact
+    asn = np.asarray(fed.group, np.int64)
+    store = DeltaStore.build(hist_full.final_params, assignment=asn,
+                             codec="identity")
+    true = np.asarray(stacked_ravel(hist_full.final_params), np.float32)
+    base = np.asarray(store.base_flat)[store.assignment]
+    assert np.abs(true - base).max() > 0          # deltas genuinely nonzero
+    assert np.array_equal(np.asarray(store.params_flat()), true)
+    assert store.recon_err.max() == 0.0
+
+
+@pytest.mark.parametrize("codec", ["qsgd:4", "topk:0.25"])
+def test_coarse_assignment_lossy_bound_nonvacuous(hist_full, fed, codec):
+    asn = np.asarray(fed.group, np.int64)
+    store = DeltaStore.build(hist_full.final_params, assignment=asn,
+                             codec=codec)
+    assert store.recon_err.max() > 0.0            # the bound does real work
+    true = np.asarray(stacked_ravel(hist_full.final_params), np.float64)
+    got = np.asarray(store.params_flat(), np.float64)
+    err = np.max(np.abs(got - true), axis=1)
+    bound = store.codec.store_bound(
+        {k: np.asarray(v) for k, v in store.payload.items()}, store.d)
+    slack = 4.0 * np.spacing(np.max(np.abs(true), axis=1))
+    assert np.all(err <= bound + slack)
+
+
+@pytest.mark.parametrize("placement", [None, "mesh"])
+@pytest.mark.parametrize("codec", CODECS)
+def test_serve_parity_nonzero_deltas(hist_full, fed, codec, placement):
+    pl = mesh() if placement else HostVmap()
+    asn = np.asarray(fed.group, np.int64)
+    store = DeltaStore.build(hist_full.final_params, assignment=asn,
+                             codec=codec, backend=pl.codec_backend)
+    eng = ServeEngine(store, apply_one, placement=pl, max_batch=4)
+    users = [2, 0, 3, 1]
+    xs = np.asarray(fed.x_val)[users, 0]
+    check_parity(eng, users, xs)
+
+
+def test_from_history_requires_keep_state(fed):
+    h = run_federated("fedavg", fed, fl=FL)
+    with pytest.raises(ValueError, match="keep_state"):
+        DeltaStore.from_history(h)
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: the §3d parity anchor
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_serve_parity_host(hist, fed, codec):
+    store = DeltaStore.from_history(hist, codec=codec)
+    eng = ServeEngine(store, apply_one, max_batch=3)
+    users = [3, 0, 2, 1, 0]
+    xs = np.asarray(fed.x_val)[users, 0]
+    check_parity(eng, users, xs)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_serve_parity_mesh(hist_mesh, fed, codec):
+    store = DeltaStore.from_history(hist_mesh, codec=codec, backend="jnp")
+    eng = ServeEngine(store, apply_one, placement=mesh(), max_batch=4)
+    users = [1, 3, 0, 2]
+    xs = np.asarray(fed.x_val)[users, 0]
+    check_parity(eng, users, xs)
+
+
+@pytest.mark.parametrize("placement", [None, "mesh"])
+def test_identity_serves_true_trained_params(hist, fed, placement):
+    # end-to-end: the served logits equal a direct forward through the
+    # user's TRUE personalized final params, bit-identical (lossless
+    # store + parity anchor composed)
+    pl = mesh() if placement else HostVmap()
+    store = DeltaStore.from_history(hist, codec="identity",
+                                    backend=pl.codec_backend)
+    eng = ServeEngine(store, apply_one, placement=pl)
+    users = [0, 1, 2, 3]
+    xs = np.asarray(fed.x_val)[users, 0]
+    served = eng.serve(users, xs)
+    true_flat = jnp.asarray(stacked_ravel(hist.final_params))
+    ref = eng.forward(
+        pl.place_stack(store.unravel_batch(true_flat), len(users)),
+        pl.place_stack(jnp.asarray(xs), len(users)))
+    assert np.array_equal(np.asarray(served), np.asarray(ref))
+
+
+def test_microbatcher_submit_order_and_chunking(hist, fed):
+    store = DeltaStore.from_history(hist, codec="qsgd:4")
+    eng = ServeEngine(store, apply_one, max_batch=2)
+    users = [2, 0, 3, 1, 2]
+    xs = np.asarray(fed.x_val)[users, 0]
+    tickets = [eng.submit(u, x) for u, x in zip(users, xs)]
+    outs = eng.flush()
+    assert tickets == [0, 1, 2, 3, 4]
+    assert eng.last_stats["requests"] == 5
+    assert eng.last_stats["batches"] == 3          # ceil(5 / max_batch=2)
+    for i, (u, x) in enumerate(zip(users, xs)):
+        one = np.asarray(eng.serve([u], x[None]))[0]
+        assert np.array_equal(outs[i], one)
+
+
+def test_engine_validates_max_batch(hist):
+    store = DeltaStore.from_history(hist)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeEngine(store, apply_one, max_batch=0)
+
+
+# ---------------------------------------------------------------------------
+# keep_state round-tripping: History -> checkpoint -> DeltaStore
+
+
+@pytest.mark.parametrize("mesh_run", [False, True])
+@pytest.mark.parametrize("codec", ["identity", "qsgd:4"])
+def test_keep_state_checkpoint_roundtrip(hist, hist_mesh, fed, codec,
+                                         mesh_run):
+    h = hist_mesh if mesh_run else hist
+    backend = "jnp" if mesh_run else "pallas"
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "state.msgpack")
+        checkpoint.save_train_state(
+            path, FL.rounds, jax.device_get(h.final_params),
+            jax.device_get(h.final_opt_state),
+            extra={"assignment": np.asarray(h.extras.assignment)})
+        step, params, opt_state, extra = checkpoint.restore_train_state(path)
+        assert step == FL.rounds
+        store = DeltaStore.build(params, codec=codec,
+                                 assignment=extra["assignment"],
+                                 backend=backend)
+        live = DeltaStore.from_history(h, codec=codec, backend=backend)
+        # the checkpointed store reconstructs the SAME params as the live
+        # one, and (identity) exactly the user's trained personalized model
+        assert np.array_equal(np.asarray(store.params_flat()),
+                              np.asarray(live.params_flat()))
+        if codec == "identity":
+            true = np.asarray(stacked_ravel(h.final_params), np.float32)
+            assert np.array_equal(np.asarray(store.params_flat()), true)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+def test_store_save_load_roundtrip(hist, fed, codec):
+    store = DeltaStore.from_history(hist, codec=codec)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "store.msgpack")
+        store.save(path)
+        loaded = DeltaStore.load(path)
+    assert loaded.codec.spec == store.codec.spec
+    np.testing.assert_array_equal(loaded.assignment, store.assignment)
+    np.testing.assert_array_equal(loaded.bits.delta_bits,
+                                  store.bits.delta_bits)
+    assert loaded.bits.total_bytes == store.bits.total_bytes
+    assert np.array_equal(np.asarray(loaded.params_flat()),
+                          np.asarray(store.params_flat()))
+    # a loaded store serves bit-identically
+    eng_a = ServeEngine(store, apply_one)
+    eng_b = ServeEngine(loaded, apply_one)
+    xs = np.asarray(fed.x_val)[[1, 2], 0]
+    assert np.array_equal(np.asarray(eng_a.serve([1, 2], xs)),
+                          np.asarray(eng_b.serve([1, 2], xs)))
+
+
+# ---------------------------------------------------------------------------
+# satellite: rate-adaptive codec selection (spec "adaptive[:<min>]")
+
+
+def _tree(d=64):
+    return {"w": np.zeros((d,), np.float32)}
+
+
+def test_adaptive_unbound_raises():
+    c = get_codec("adaptive:4")
+    assert isinstance(c, Adaptive)
+    with pytest.raises(RuntimeError, match="bind_link"):
+        c.payload_bits(_tree())
+    with pytest.raises(RuntimeError, match="bind_link"):
+        c.roundtrip(jnp.zeros((2, 4)), KEY)
+    with pytest.raises(ValueError):
+        get_codec("adaptive:1")                # below the 2-bit floor
+
+
+def test_adaptive_uniform_link_collapses_to_min_bits():
+    link = get_link_profile("uniform", SYSTEMS["wired"], 64 * 32 + 32, 4)
+    bound = get_codec("adaptive:4").bind_link(link, _tree())
+    assert isinstance(bound, BoundAdaptive)
+    np.testing.assert_array_equal(bound.bits, np.full(4, 4))
+    # identical charge to the fixed qsgd:4 codec
+    q4 = get_codec("qsgd:4")
+    assert bound.payload_bits(_tree()) == q4.payload_bits(_tree())
+    np.testing.assert_array_equal(bound.per_client_bits(_tree(), 4),
+                                  q4.per_client_bits(_tree(), 4))
+
+
+def test_adaptive_uniform_run_matches_qsgd_bitwise(fed):
+    ha = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="adaptive:4"),
+                       system=SYSTEMS["wired"])
+    hq = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="qsgd:4"),
+                       system=SYSTEMS["wired"])
+    assert ha.mean_acc == hq.mean_acc
+    assert ha.comm_bits == hq.comm_bits
+    assert ha.time == hq.time
+
+
+def test_adaptive_tiered_spends_headroom_within_budget():
+    m, d = 8, 64
+    link = get_link_profile("tiered:4", SYSTEMS["wired"], d * 32 + 32, m)
+    bound = get_codec("adaptive:4").bind_link(link, _tree(d))
+    pc = bound.per_client_bits(_tree(d), m)
+    fixed = get_codec("qsgd:4").payload_bits(_tree(d))
+    # faster clients carry MORE bits than the fixed-codec charge...
+    assert int(pc.sum()) > m * fixed
+    assert bound.bits.min() == 4 and bound.bits.max() > 4
+    # ...but the round's uplink TIME never exceeds the qsgd:<min> budget
+    # (the slowest client transmitting the minimum spec)
+    assert (link.max_uplink_time(pc)
+            <= link.max_uplink_time(fixed) * (1 + 1e-12))
+    # per-client: every upload fits that same budget
+    t_budget = max(link.uplink_time(i, fixed) for i in range(m))
+    for i in range(m):
+        assert link.uplink_time(i, int(pc[i])) <= t_budget * (1 + 1e-12)
+
+
+def test_adaptive_charge_recorded_per_client(fed):
+    h = run_federated("ucfl_k2", fed, fl=FL,
+                      channel=Channel(codec="adaptive:4", link="tiered:4"),
+                      system=SYSTEMS["wired"])
+    hq = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="qsgd:4", link="tiered:4"),
+                       system=SYSTEMS["wired"])
+    # strictly more uplink bits (headroom spent); the broadcast is
+    # charged at the LARGEST assigned width (BoundAdaptive.payload_bits),
+    # so downlink bits can only grow — the budget rule binds the uplink
+    # TIME, which test_adaptive_tiered_spends_headroom_within_budget pins
+    assert h.comm_bits[-1].ul_bits > hq.comm_bits[-1].ul_bits
+    assert h.comm_bits[-1].dl_bits >= hq.comm_bits[-1].dl_bits
+
+
+# ---------------------------------------------------------------------------
+# satellite: membership-aware broadcast charging
+
+
+def _tiered_link(m=4):
+    return get_link_profile("tiered:4", SYSTEMS["wired"], 1000, m)
+
+
+def test_membership_charge_tighter_and_bounded_by_legacy():
+    link = _tiered_link()
+    cost, bits = CommCost(2, 0), 1000
+    asn = np.asarray([0, 0, 1, 1])
+    legacy = round_downlink_time(link, cost, bits)
+    aware = round_downlink_time(link, cost, bits, assignment=asn)
+    # regression pin: the legacy charge is an UPPER BOUND on the
+    # membership-aware charge, strictly tighter on a tiered profile
+    # whenever some stream avoids the slowest subscriber
+    assert aware <= legacy * (1 + 1e-12)
+    fast_stream = round_downlink_time(link, cost, bits,
+                                      assignment=np.asarray([0, 1, 1, 1]))
+    if link.dl_rate[0] != link.dl_rate[-1]:
+        assert fast_stream < legacy
+
+
+def test_membership_charge_uniform_profile_is_bit_identical():
+    link = get_link_profile("uniform", SYSTEMS["wired"], 1000, 4)
+    cost, bits = CommCost(2, 0), 1000
+    legacy = round_downlink_time(link, cost, bits)
+    aware = round_downlink_time(link, cost, bits,
+                                assignment=np.asarray([0, 0, 1, 1]))
+    assert aware == legacy
+
+
+def test_membership_charge_respects_participants():
+    link = _tiered_link()
+    cost, bits = CommCost(2, 0), 1000
+    asn = np.asarray([0, 0, 1, 1])
+    # cohort excludes the slowest subscribers of stream 0
+    aware = round_downlink_time(link, cost, bits, participants=[1, 2, 3],
+                                assignment=asn)
+    legacy = round_downlink_time(link, cost, bits, participants=[1, 2, 3])
+    assert aware <= legacy * (1 + 1e-12)
+
+
+def test_membership_run_time_never_exceeds_legacy(fed):
+    # engine-level regression: ucfl_k2 (which exposes its StreamPlan
+    # assignment) on a tiered profile clocks <= the legacy upper bound,
+    # here reproduced by fedavg-style single-stream accounting equality:
+    # identical configs modulo the membership map can only speed up
+    h = run_federated("ucfl_k2", fed, fl=FL,
+                      channel=Channel(link="tiered:4"),
+                      system=SYSTEMS["wired"])
+    link = _tiered_link()
+    payload = h.extra["channel"]["payload_bits"]
+    legacy_t = sum(
+        SYSTEMS["wired"].compute_time(fed.m)
+        + link.max_uplink_time(payload)
+        + round_downlink_time(link, c, payload) for c in h.comm)
+    assert h.time[-1] <= legacy_t * (1 + 1e-9)
