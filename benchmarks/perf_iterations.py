@@ -18,6 +18,7 @@ narrative log.
 
     PYTHONPATH=src python -m benchmarks.perf_iterations [--group NAME]
     PYTHONPATH=src python -m benchmarks.perf_iterations --round-engine
+    PYTHONPATH=src python -m benchmarks.perf_iterations --paging
     PYTHONPATH=src python -m benchmarks.perf_iterations --async-engine
     PYTHONPATH=src python -m benchmarks.perf_iterations --channel
     PYTHONPATH=src python -m benchmarks.perf_iterations --serve
@@ -381,6 +382,154 @@ def round_engine_bench(rounds: int = 192):
     return rows
 
 
+def paging_bench(rounds: int = 64, seed: int = 0):
+    """Cohort paging engine (DESIGN.md §3e) -> BENCH_paging.json:
+    paged-vs-resident rounds/sec at EQUAL cohort, per placement, across
+    population sizes — plus the analytic device-memory claim.
+
+    The paged engine's promise is that device state scales with the
+    cohort while the population lives in the host store — at the price of
+    per-superstep gather/stage/scatter traffic.  Each row times a paged
+    run (population n, sweep schedule, cohort 8) against the RESIDENT
+    superstep engine on an m=8 federation — the same compiled superstep,
+    so the ratio isolates the paging overhead.  Timing uses the
+    round-engine bench's short/long delta (best-of-3, warmed up); the
+    dispatch-probe model keeps the number about the engine, not convs.
+
+    Before any timing, the §3e parity anchor runs IN-BENCH per placement
+    and RAISES on divergence: a paged `FixedCohort` run over the
+    population must be bit-identical (history AND final cohort rows) to a
+    resident run on that sub-federation — a throughput number can never
+    ship from an engine that pages wrong bits.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + " --xla_force_host_platform_device_count=8").strip()
+    import jax
+    import numpy as np
+    from repro.data.federated import FederatedData, scenario_label_shift
+    from repro.fl import (FLConfig, FixedCohort, HostVmap, MeshShardMap,
+                          PagingConfig, SYSTEMS, run_federated,
+                          sub_federated)
+
+    cohort = 8
+    fed8 = scenario_label_shift(jax.random.PRNGKey(seed), n=800, m=cohort)
+    model_init, loss_fn, acc_fn = _dispatch_probe(fed8)
+    probe_kw = dict(model_init=model_init, loss_fn=loss_fn, acc_fn=acc_fn)
+
+    def tile(fed, reps):
+        # population = `reps` copies of the m=8 federation: identical row
+        # shapes, so resident-on-fed8 is the equal-cohort reference
+        return FederatedData(*[jnp_concat(l, reps) for l in fed])
+
+    def jnp_concat(leaf, reps):
+        import jax.numpy as jnp
+        return jnp.concatenate([leaf] * reps)
+
+    # eval cadence IS the superstep boundary, i.e. the paging cadence:
+    # every 4 rounds the paged engine gathers, stages and scatters a
+    # fresh cohort — identical cadence on the resident reference, so the
+    # delta compares equal work plus the paging traffic.  local_steps=8 x
+    # batch 16 gives each round the local-epoch-scale compute the paper's
+    # configs run — the double buffer needs real device work to hide the
+    # staging behind; a 1-step batch-4 round is all engine and no client,
+    # and nothing can hide multi-MB cohort traffic behind it
+    def fl_for(r):
+        return FLConfig(rounds=r, local_steps=8, batch_size=16,
+                        momentum=0.0, eval_every=4)
+
+    r_short, r_long = 8, 8 + rounds
+
+    def timed(run):
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def delta_rps(run_for):
+        for r in (r_short, r_long):        # warm both scan-length sets
+            run_for(r)
+        d = timed(lambda: run_for(r_long)) - timed(lambda: run_for(r_short))
+        return (r_long - r_short) / d if d > 0 else None
+
+    placements = [("host_vmap", HostVmap),
+                  ("mesh_shard_map",
+                   lambda: MeshShardMap(schedule="shard_map_streams"))]
+    rows = []
+    for pname, pfac in placements:
+        placement = pfac()
+        # ---- §3e parity anchor (raises): paged == resident, bit for bit
+        pop = tile(fed8, 8)
+        idx = np.arange(cohort) * (pop.m // cohort)
+        fl_p = FLConfig(rounds=6, local_steps=2, batch_size=16,
+                        eval_every=2)
+        akw = dict(fl=fl_p, system=SYSTEMS["wired"], placement=placement,
+                   keep_state=True, **probe_kw)
+        h_res = run_federated("ucfl_k2", sub_federated(pop, idx),
+                              superstep=True, **akw)
+        h_pag = run_federated("ucfl_k2", pop,
+                              paging=PagingConfig(schedule=FixedCohort(idx)),
+                              **akw)
+        rows_ok = all(
+            np.array_equal(np.asarray(lp)[idx], np.asarray(lr))
+            for lp, lr in zip(
+                jax.tree_util.tree_leaves(h_pag.final_params),
+                jax.tree_util.tree_leaves(h_res.final_params)))
+        if not (h_pag.mean_acc == h_res.mean_acc
+                and h_pag.time == h_res.time
+                and h_pag.comm == h_res.comm and rows_ok):
+            raise RuntimeError(
+                f"§3e paging parity anchor diverged on {pname}: "
+                f"paged {h_pag.mean_acc} vs resident {h_res.mean_acc} "
+                f"(rows_ok={rows_ok})")
+
+        # ---- resident reference: the same cohort, never paged
+        res_rps = delta_rps(lambda r: run_federated(
+            "fedavg", fed8, fl=fl_for(r), placement=placement,
+            superstep=True, **probe_kw))
+
+        for reps in (8, 64):               # populations 64 and 512
+            popn = tile(fed8, reps)
+            paging = PagingConfig(cohort=cohort, schedule="sweep")
+            pag_rps = delta_rps(lambda r: run_federated(
+                "fedavg", popn, fl=fl_for(r), placement=placement,
+                paging=paging, **probe_kw))
+            h = run_federated("fedavg", popn, fl=fl_for(r_short),
+                              placement=placement, paging=paging,
+                              **probe_kw)
+            pg = h.extra["paging"]
+            bpc = pg["store_bytes"] // pg["population"]
+            ratio = (res_rps / pag_rps if res_rps and pag_rps else None)
+            rows.append({
+                "placement": pname, "population": pg["population"],
+                "cohort": cohort, "devices": len(jax.devices()),
+                "rounds": r_long - r_short, "model": "dispatch_probe",
+                "rounds_per_sec_resident": res_rps,
+                "rounds_per_sec_paged": pag_rps,
+                "resident_over_paged": ratio,
+                "store_bytes": pg["store_bytes"],
+                "bytes_per_client": bpc,
+                # double-buffered device footprint: two cohorts of rows
+                # in flight vs the whole population resident
+                "device_state_bytes_paged": bpc * cohort * 2,
+                "device_state_bytes_resident": bpc * pg["population"],
+                "parity": "exact",
+            })
+            fmt = lambda v: f"{v:8.2f}" if v else "   noise"
+            print(f"{pname:16s} n={pg['population']:4d} m={cohort} "
+                  f"resident={fmt(res_rps)} r/s  paged={fmt(pag_rps)} r/s"
+                  + (f"  ({ratio:4.2f}x)" if ratio else ""))
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_paging.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def async_engine_bench(rounds_sync: int = 16, events_async: int = 48,
                        seed: int = 0):
     """Time-to-target-accuracy: sync vs buffered-async per strategy
@@ -613,6 +762,10 @@ def main(argv=None):
     p.add_argument("--round-engine", action="store_true",
                    help="benchmark the federated round engine per "
                         "placement × schedule instead of dry-run variants")
+    p.add_argument("--paging", action="store_true",
+                   help="paged-vs-resident rounds/sec at equal cohort "
+                        "across population sizes — the §3e paging "
+                        "benchmark (runs the parity anchor in-bench)")
     p.add_argument("--async-engine", action="store_true",
                    help="time-to-target-accuracy of the buffered-async "
                         "runtime vs the sync engine, per strategy")
@@ -625,6 +778,9 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
+        return
+    if args.paging:
+        paging_bench()
         return
     if args.async_engine:
         async_engine_bench()

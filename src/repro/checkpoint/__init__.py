@@ -1,4 +1,8 @@
-from repro.checkpoint.checkpoint import (restore, restore_train_state, save,
-                                         save_train_state)
+from repro.checkpoint.checkpoint import (latest_paged_checkpoint, restore,
+                                         restore_paged_state,
+                                         restore_train_state, save,
+                                         save_paged_state, save_train_state)
 
-__all__ = ["restore", "restore_train_state", "save", "save_train_state"]
+__all__ = ["latest_paged_checkpoint", "restore", "restore_paged_state",
+           "restore_train_state", "save", "save_paged_state",
+           "save_train_state"]

@@ -63,3 +63,48 @@ def save_train_state(path: str, step: int, params: Any, opt_state: Any,
 def restore_train_state(path: str):
     t = restore(path)
     return t["step"], t["params"], t["opt_state"], t.get("extra")
+
+
+# ---------------------------------------------------------------------------
+# paged-run superstep snapshots (DESIGN.md §3e): the paging engine writes
+# one file per checkpointed superstep boundary — client-state store rows,
+# engine carry (PRNG key + clock) and the History so far — so a preempted
+# paged run resumes mid-sweep bit-identically.
+
+_PAGED_FORMAT = "paged-v1"
+_PAGED_PREFIX = "superstep_"
+
+
+def save_paged_state(directory: str, chunk: int, state: dict) -> str:
+    """Atomic snapshot at superstep boundary ``chunk``; returns the path.
+    ``state`` is the paging engine's plain-dict payload (key, clock,
+    history lists, store rows, meta) — kept schema-free here so this
+    module never imports the engine."""
+    path = os.path.join(directory, f"{_PAGED_PREFIX}{chunk:06d}.msgpack")
+    save(path, dict(state, chunk=int(chunk), format=_PAGED_FORMAT))
+    return path
+
+
+def restore_paged_state(path: str) -> dict:
+    t = restore(path)
+    if t.get("format") != _PAGED_FORMAT:
+        raise ValueError(f"{path} is not a {_PAGED_FORMAT} checkpoint "
+                         f"(format={t.get('format')!r})")
+    return t
+
+
+def latest_paged_checkpoint(directory: str):
+    """Path of the highest-superstep snapshot in ``directory`` (resume
+    entry point), or None when there is nothing to resume from."""
+    if not os.path.isdir(directory):
+        return None
+    best, best_chunk = None, -1
+    for name in os.listdir(directory):
+        if name.startswith(_PAGED_PREFIX) and name.endswith(".msgpack"):
+            try:
+                chunk = int(name[len(_PAGED_PREFIX):-len(".msgpack")])
+            except ValueError:
+                continue
+            if chunk > best_chunk:
+                best, best_chunk = os.path.join(directory, name), chunk
+    return best

@@ -3,6 +3,10 @@ from repro.fl.channel import (Channel, ChannelCost, Codec, LinkProfile,
 from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
 from repro.fl.placement import HostVmap, MeshShardMap, Placement
+from repro.fl.population import (ClientStateStore, CohortSchedule,
+                                 FixedCohort, PagingConfig, RandomCohorts,
+                                 SequentialSweep, run_async_paged, run_paged,
+                                 sub_federated)
 from repro.fl.simulator import (FLConfig, History, evaluate, run_federated,
                                 superstep_support)
 from repro.fl.runtime import AsyncConfig, VirtualClock, run_async
@@ -17,6 +21,9 @@ from repro.fl.strategies import (ClientSampler, ClusterExtras, CommCost,
 __all__ = ["AsyncConfig", "VirtualClock", "run_async",
            "Channel", "ChannelCost", "Codec", "LinkProfile", "get_codec",
            "get_link_profile", "tree_bits",
+           "ClientStateStore", "CohortSchedule", "FixedCohort",
+           "PagingConfig", "RandomCohorts", "SequentialSweep",
+           "run_async_paged", "run_paged", "sub_federated",
            "DeltaStore", "ServeEngine", "StoreBits", "check_parity",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",

@@ -10,9 +10,10 @@ device mesh and mixes with real collectives.
 """
 from repro.fl.placement.base import (Placement, resolve_placement,
                                      stack_params, where_clients)
-from repro.fl.placement.host import HostVmap, evaluate, make_client_update
+from repro.fl.placement.host import (HostVmap, evaluate, make_client_update,
+                                     reduce_scores)
 from repro.fl.placement.mesh import MeshShardMap
 
 __all__ = ["HostVmap", "MeshShardMap", "Placement", "evaluate",
-           "make_client_update", "resolve_placement", "stack_params",
-           "where_clients"]
+           "make_client_update", "reduce_scores", "resolve_placement",
+           "stack_params", "where_clients"]

@@ -143,34 +143,66 @@ class Placement(abc.ABC):
         return self.mix_plan(stacked, StreamPlan(centroids, assignment,
                                                  jnp.float32(0.0)))
 
-    def build_round(self, round_fn: Callable, *, length: int,
-                    donate: bool = True) -> Callable:
-        """Compile ``length`` consecutive traced rounds as ONE `lax.scan`
-        superstep: returns ``fn(carry, data, consts) -> (carry', outs)``
-        where ``round_fn(carry, data, consts) -> (carry', out)`` is the
-        engine-built fused round (update → select → codec uplink →
-        aggregate).  The carry is donated by default — the input
-        stacked/opt/EF buffers are dead once the superstep returns, so
-        buffer donation survives fusion.  Backends whose arrays carry
-        shardings (MeshShardMap) rely on GSPMD propagating them through
-        the scan: the carry never leaves the mesh between rounds."""
+    def eval_traced(self, acc_fn: Callable, stacked: Any, x_val: Any,
+                    y_val: Any) -> Any:
+        """Per-client validation scores (m,), trace-safe — the superstep
+        fuses this onto the end of the scan (DESIGN.md §3c/§3e) so the
+        chunk's eval costs no extra program dispatch.  Same vmapped math
+        as the eventful `evaluate`; the (mean, worst) reduction stays
+        host-side (`reduce_scores`) on both paths so they cannot drift."""
+        return jax.vmap(lambda p, x, y: acc_fn(p, {"x": x, "y": y}))(
+            stacked, x_val, y_val)
 
-        def superstep(carry, data, consts):
-            return jax.lax.scan(lambda c, _: round_fn(c, data, consts),
-                                carry, None, length=length)
+    def stage(self, tree: Any, m: int) -> Any:
+        """Begin the host->device transfer of a gathered cohort pytree
+        (the paging engine's H2D leg, DESIGN.md §3e).  Returns
+        device-backed arrays immediately — the copy proceeds under jax's
+        async dispatch, which is what lets the engine stage cohort t+1
+        while cohort t's superstep is still running."""
+        return jax.device_put(tree)
+
+    def build_round(self, round_fn: Callable, *, length: int,
+                    donate: bool = True,
+                    eval_fn: Optional[Callable] = None) -> Callable:
+        """Compile ``length`` consecutive traced rounds as ONE `lax.scan`
+        superstep: returns ``fn(carry, data, consts, eval_data) ->
+        (carry', outs, accs)`` where ``round_fn(carry, data, consts) ->
+        (carry', out)`` is the engine-built fused round (update → select →
+        codec uplink → aggregate) and ``eval_fn(stacked, eval_data)`` (if
+        given) computes the chunk-end per-client scores INSIDE the same
+        program — the eval dispatch disappears from the per-chunk Python.
+        The carry is donated by default — the input stacked/opt/EF buffers
+        are dead once the superstep returns, so buffer donation survives
+        fusion.  Backends whose arrays carry shardings (MeshShardMap) rely
+        on GSPMD propagating them through the scan: the carry never leaves
+        the mesh between rounds."""
+
+        def superstep(carry, data, consts, eval_data):
+            carry, outs = jax.lax.scan(lambda c, _: round_fn(c, data,
+                                                             consts),
+                                       carry, None, length=length)
+            accs = None if eval_fn is None else eval_fn(carry[1], eval_data)
+            return carry, outs, accs
 
         return jax.jit(superstep, donate_argnums=(0,) if donate else ())
 
     def run_supersteps(self, round_fn: Callable, carry: Any, data: Any,
                        consts: Any, length: int, *, cache: dict,
-                       donate: bool = True) -> Tuple[Any, Any]:
-        """Run ``length`` fused rounds, compiling (and caching in
-        ``cache``, keyed by length) the superstep on first use."""
+                       donate: bool = True,
+                       eval_fn: Optional[Callable] = None,
+                       eval_data: Any = None) -> Tuple[Any, Any, Any]:
+        """Run ``length`` fused rounds (+ the fused chunk-end eval),
+        compiling (and caching in ``cache``, keyed by length) the
+        superstep on first use.  The jit re-specializes per input SHAPE,
+        so one cached superstep serves every cohort size — the paging
+        engine (DESIGN.md §3e) relies on this to reuse executables across
+        runs that differ only in population size."""
         fn = cache.get(length)
         if fn is None:
             fn = cache[length] = self.build_round(round_fn, length=length,
-                                                  donate=donate)
-        return fn(carry, data, consts)
+                                                  donate=donate,
+                                                  eval_fn=eval_fn)
+        return fn(carry, data, consts, eval_data)
 
     def cache_key(self) -> Tuple:
         """Hashable identity for the compiled-superstep cache: two

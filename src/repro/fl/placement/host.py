@@ -82,11 +82,18 @@ def _eval_fn(apply_acc: Callable):
     return jax.jit(jax.vmap(lambda p, x, y: apply_acc(p, {"x": x, "y": y})))
 
 
+def reduce_scores(accs) -> Tuple[float, float]:
+    """(mean, worst) reduction of the per-client score vector — shared by
+    the eventful `evaluate` and the fused-eval superstep replay
+    (DESIGN.md §3c/§3e) so the two paths reduce identically."""
+    return float(jnp.mean(accs)), float(jnp.min(accs))
+
+
 def evaluate(apply_acc: Callable, stacked_params, fed: FederatedData
              ) -> Tuple[float, float]:
     """(mean, worst) validation accuracy across clients, personalized models."""
-    accs = _eval_fn(apply_acc)(stacked_params, fed.x_val, fed.y_val)
-    return float(jnp.mean(accs)), float(jnp.min(accs))
+    return reduce_scores(
+        _eval_fn(apply_acc)(stacked_params, fed.x_val, fed.y_val))
 
 
 class HostVmap(Placement):

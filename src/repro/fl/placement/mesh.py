@@ -109,6 +109,13 @@ class MeshShardMap(Placement):
         self._ensure_mesh(m)
         return self._shard(tree)
 
+    def stage(self, tree: Any, m: int) -> Any:
+        # paging H2D leg (DESIGN.md §3e): device_put straight from the
+        # host rows to their client-axis sharding — one copy, no bounce
+        # through the default device
+        self._ensure_mesh(m)
+        return self._shard(tree)
+
     # mix/mix_plan run eagerly once per round: hold one jit wrapper per
     # instance so the shard_map collective traces and compiles once, not
     # per call (jax's dispatch cache does not cache fresh shard_map objects)

@@ -1,0 +1,15 @@
+"""Cohort paging engine (DESIGN.md §3e): host-backed client-state store,
+double-buffered device transfers, checkpointed supersteps.
+
+    from repro.fl import PagingConfig, run_federated
+    run_federated("ucfl_k2", fed, paging=PagingConfig(cohort=8))
+"""
+from repro.fl.population.paging import (PagingConfig, run_async_paged,
+                                        run_paged, sub_federated)
+from repro.fl.population.schedule import (CohortSchedule, FixedCohort,
+                                          RandomCohorts, SequentialSweep)
+from repro.fl.population.store import ClientStateStore
+
+__all__ = ["ClientStateStore", "CohortSchedule", "FixedCohort",
+           "PagingConfig", "RandomCohorts", "SequentialSweep",
+           "run_async_paged", "run_paged", "sub_federated"]

@@ -1,0 +1,625 @@
+"""Cohort paging engine (DESIGN.md §3e): population >> device memory.
+
+`run_paged` trains a population of n clients with only one cohort of m
+clients device-resident at a time:
+
+  superstep t:  gather cohort rows from the `ClientStateStore`
+                -> stage host->device (`Placement.stage`)
+                -> run the PR-5 fused superstep on the cohort carry
+                -> (meanwhile stage cohort t+1 — double buffering)
+                -> scatter updated rows back to the store
+
+The compiled superstep is THE resident engine's (`repro.fl.simulator`):
+same `_build_traced_round`, same `_SUPERSTEP_FNS` cache entry — the jit
+re-specializes on the cohort shape, never on the population size, so one
+executable serves any n and a paged run over a `FixedCohort` is
+bit-identical to a resident run on that sub-population (the parity
+anchor `tests/test_population.py` pins).
+
+Double-buffer protocol, both legs: right after the current superstep is
+DISPATCHED (jax's async dispatch returns before the program finishes),
+the loop drains the PREVIOUS chunk (accounting, eval reduce, scatter —
+blocking pulls that wait only on already-finished compute) and then
+issues the next cohort's host gather + H2D copy, so writeback and upload
+both overlap the running compute.  The prefetch is skipped whenever the
+next cohort intersects the current one (its rows would be stale until
+the scatter lands), and an overlapping next cohort forces the pending
+drain before its rows are gathered.
+
+Checkpointing: at superstep boundaries, the store rows + engine carry
+(PRNG key, clock accumulator) + History snapshot to one msgpack file.
+Schedules are pure functions of the superstep index, so a resumed run
+replays the exact cohort sequence — resume is bit-identical (pinned).
+
+`run_async_paged` is the buffered-async sibling: the per-event arrival
+buffer IS the page request; aggregation is cohort-local (exact in the
+lockstep K=m anchor, an approximation under partial buffers — resident
+async mixes over the full population stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (latest_paged_checkpoint, restore_paged_state,
+                              save_paged_state)
+from repro.data.federated import FederatedData
+from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
+                              round_downlink_time)
+from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.placement import (Placement, reduce_scores, resolve_placement,
+                                stack_params)
+from repro.fl.population.schedule import (CohortSchedule, FixedCohort,
+                                          RandomCohorts, SequentialSweep)
+from repro.fl.population.store import ClientStateStore
+from repro.fl.simulator import (FLConfig, History, _build_traced_round,
+                                _eval_rounds, _superstep_cache, channel_extra,
+                                channel_uplink, charge_round,
+                                default_model_init, finalize_history,
+                                init_channel, per_client_uplink_bits,
+                                resolve_strategy, superstep_support)
+from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
+                                 Strategy)
+from repro.models import lenet
+
+# distinct cohorts whose strategy state / placed data pages stay cached
+# (sweep schedules cycle through n/m cohorts — keep the working set small)
+_SETUP_CACHE_MAX = 8
+
+
+@dataclass(frozen=True)
+class PagingConfig:
+    """Knobs of the cohort paging engine (DESIGN.md §3e).
+
+    cohort:           device-resident clients per superstep (ignored when
+                      ``schedule`` is a `CohortSchedule` instance, which
+                      carries its own size).
+    schedule:         ``"sweep"`` (round-robin shards) | ``"random"``
+                      (seeded without-replacement draw per superstep) |
+                      a `CohortSchedule` instance.
+    schedule_seed:    seed of the ``"random"`` schedule.
+    store_dir:        disk-back the client-state store as ``.npy``
+                      memmaps (None = host RAM).
+    checkpoint_dir:   write superstep-boundary snapshots here (None = no
+                      checkpointing).
+    checkpoint_every: snapshot cadence in supersteps.
+    resume:           pick up from the latest snapshot in
+                      ``checkpoint_dir`` (no-op when there is none).
+    prefetch:         double-buffer the next cohort's H2D copy under the
+                      running superstep (skipped when cohorts overlap).
+    max_chunks:       run at most this many supersteps this invocation,
+                      then return the partial History (preemption hook /
+                      resume tests); None = run to completion.
+    """
+    cohort: int = 8
+    schedule: Union[str, CohortSchedule] = "sweep"
+    schedule_seed: int = 0
+    store_dir: Optional[str] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+    resume: bool = False
+    prefetch: bool = True
+    max_chunks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.cohort < 1:
+            raise ValueError(f"cohort must be >= 1, got {self.cohort}")
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1, got "
+                             f"{self.checkpoint_every}")
+
+    def resolve_schedule(self) -> CohortSchedule:
+        if isinstance(self.schedule, CohortSchedule):
+            return self.schedule
+        if self.schedule == "sweep":
+            return SequentialSweep(self.cohort)
+        if self.schedule == "random":
+            return RandomCohorts(self.cohort, seed=self.schedule_seed)
+        raise ValueError(f"unknown cohort schedule {self.schedule!r}; "
+                         "one of sweep | random | a CohortSchedule")
+
+
+def sub_federated(fed: FederatedData, idx: np.ndarray) -> FederatedData:
+    """The cohort's view of the population data (row-gathered)."""
+    return FederatedData(x=fed.x[idx], y=fed.y[idx], n=fed.n[idx],
+                         x_val=fed.x_val[idx], y_val=fed.y_val[idx],
+                         group=fed.group[idx])
+
+
+def _host_federated(fed: FederatedData) -> FederatedData:
+    """The population's data as host numpy rows: a cohort gather is then
+    one memcpy and only cohort-sized arrays ever cross H2D — the data
+    half of the paging contract (the store is the state half).  Values
+    are bitwise identical either way, so parity is untouched."""
+    return FederatedData(*[np.asarray(leaf) for leaf in fed])
+
+
+# ---------------------------------------------------------------------------
+# History <-> checkpoint payload (plain lists/arrays only)
+
+
+def _history_state(history: History) -> dict:
+    return {"rounds": list(history.rounds),
+            "mean_acc": list(history.mean_acc),
+            "worst_acc": list(history.worst_acc),
+            "time": list(history.time),
+            "comm": [[int(c.n_streams), int(c.n_unicasts)]
+                     for c in history.comm],
+            "comm_bits": [[int(c.dl_bits), int(c.ul_bits)]
+                          for c in history.comm_bits]}
+
+
+def _history_from_state(d: dict) -> History:
+    h = History()
+    h.rounds = [int(r) for r in d["rounds"]]
+    h.mean_acc = [float(a) for a in d["mean_acc"]]
+    h.worst_acc = [float(a) for a in d["worst_acc"]]
+    h.time = [float(t) for t in d["time"]]
+    h.comm = [CommCost(int(s), int(u)) for s, u in d["comm"]]
+    h.comm_bits = [ChannelCost(int(dl), int(ul))
+                   for dl, ul in d["comm_bits"]]
+    return h
+
+
+class _CohortSetups:
+    """Per-cohort strategy state + placed data pages, LRU by row indices.
+
+    A cohort is its own federated sub-problem: the strategy's `setup`
+    (similarity stats, mixing matrix, k-means plan) runs on the cohort's
+    sub-population exactly as a resident run on that sub-fed would — the
+    parity anchor's definition of correct."""
+
+    def __init__(self, build: Callable):
+        self._build = build
+        self._cache: OrderedDict = OrderedDict()
+
+    def get(self, idx: np.ndarray):
+        k = idx.tobytes()
+        if k in self._cache:
+            self._cache.move_to_end(k)
+            return self._cache[k]
+        while len(self._cache) >= _SETUP_CACHE_MAX:
+            self._cache.popitem(last=False)
+        out = self._cache[k] = self._build(idx)
+        return out
+
+
+def _disjoint(a: np.ndarray, b: np.ndarray) -> bool:
+    return np.intersect1d(a, b, assume_unique=True).size == 0
+
+
+# ---------------------------------------------------------------------------
+# the paged synchronous engine
+
+
+def run_paged(algorithm: Union[str, Strategy, None] = None,
+              fed: Optional[FederatedData] = None, *,
+              paging: PagingConfig,
+              strategy: Optional[Strategy] = None,
+              sampler: Optional[ClientSampler] = None,
+              fl: Optional[FLConfig] = None,
+              model_init: Optional[Callable] = None,
+              loss_fn: Callable = lenet.loss_fn,
+              acc_fn: Callable = lenet.accuracy,
+              system: Optional[SystemModel] = None,
+              placement: Optional[Placement] = None,
+              channel: Union[str, Channel, None] = None,
+              keep_state: bool = False,
+              seed: int = 0) -> History:
+    """Paged synchronous run: `run_federated` semantics per cohort, the
+    population paged through the host-backed store (module docstring).
+    Returns History; ``keep_state=True`` attaches the FULL population's
+    final params / opt state (host-backed, as device views)."""
+    strategy = resolve_strategy(algorithm, strategy)
+    if fed is None:
+        raise TypeError("`fed` is required")
+    fl = FLConfig() if fl is None else fl
+    placement = resolve_placement(placement)
+    channel = resolve_channel(channel)
+    ok, why = superstep_support(strategy, sampler)
+    if not ok:
+        raise ValueError(
+            f"paged execution needs the fused superstep (DESIGN.md §3e) "
+            f"but this run cannot fuse: {why}")
+
+    n = fed.m
+    sched = paging.resolve_schedule()
+    m_c = sched.cohort
+    if m_c > n:
+        raise ValueError(f"cohort {m_c} > population {n}")
+    fed = _host_federated(fed)
+
+    # identical prologue key chain to `init_run` (the parity anchor): the
+    # model init consumes the first split, the round chain the rest
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    if model_init is None:
+        model_init = default_model_init(fed)
+    params0 = model_init(kinit)
+    opt, update_fn = placement.build_update(loss_fn, fl, donate=False)
+
+    # channel bound at COHORT size: links/payloads describe the m_c
+    # device-resident slots (per-slot approximation for rate-adaptive
+    # links — exact for the uniform-codec paths the anchors pin)
+    ctx_pop = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                           params0=params0, seed=seed, placement=placement,
+                           strategy=strategy)
+    payload, link, model_bits, _, channel = init_channel(
+        channel, ctx_pop, stack_params(params0, m_c), system, m_c)
+    lossy = channel is not None and not channel.codec.is_identity
+    codec = channel.codec if lossy else None
+    ef_flag = channel.error_feedback if lossy else True
+    ul_bits_pc = per_client_uplink_bits(channel, ctx_pop, payload, m_c)
+
+    # the full population's state rows, host-resident: params + opt state
+    # (+ EF residuals under a lossy channel), one broadcast template each
+    row = {"params": jax.device_get(params0),
+           "opt": jax.device_get(opt.init(params0))}
+    if lossy:
+        row["ef"] = jax.tree_util.tree_map(np.zeros_like, row["params"])
+    store = ClientStateStore.create(row, n, directory=paging.store_dir)
+
+    # THE resident engine's compiled superstep — same trace builder, same
+    # cache entry (the S3 executable-reuse contract)
+    round_fn = _build_traced_round(strategy, sampler, codec, ef_flag,
+                                   placement, update_fn)
+    cache = _superstep_cache(placement, strategy, sampler, codec, ef_flag,
+                             update_fn, acc_fn)
+    eval_fn = lambda st, ed: placement.eval_traced(acc_fn, st, ed[0], ed[1])
+
+    def build_setup(idx: np.ndarray):
+        sub = sub_federated(fed, idx)
+        ctx = RoundContext(fed=sub, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                           params0=params0, seed=seed, placement=placement,
+                           strategy=strategy)
+        state = strategy.setup(ctx)
+        # device_put: the population lives in HOST memory, so place_data
+        # yields numpy leaves here — pin them on device once per cohort
+        # setup (cached), or every superstep dispatch would re-upload them
+        # AND miss the jit fast path on the changed input signature.
+        return (state, strategy.traced_state(state), strategy.comm(state),
+                strategy.membership(state),
+                jax.device_put(placement.place_data(sub)),
+                (jnp.asarray(sub.x_val), jnp.asarray(sub.y_val)))
+
+    setups = _CohortSetups(build_setup)
+    chunks = list(_eval_rounds(fl.rounds, fl.eval_every))
+    meta = {"population": n, "cohort": m_c, "schedule": sched.spec,
+            "strategy": strategy.spec, "seed": seed, "rounds": fl.rounds,
+            "eval_every": fl.eval_every, "lossy": lossy}
+
+    history = History()
+    t_accum = 0.0
+    start_chunk = 0
+    if paging.resume and paging.checkpoint_dir:
+        ck_path = latest_paged_checkpoint(paging.checkpoint_dir)
+        if ck_path is not None:
+            saved = restore_paged_state(ck_path)
+            if saved["meta"] != meta:
+                raise ValueError(
+                    f"checkpoint {ck_path} was written by a different run "
+                    f"configuration: {saved['meta']} != {meta}")
+            store = ClientStateStore.from_state_dict(
+                saved["store"], directory=paging.store_dir)
+            history = _history_from_state(saved["history"])
+            t_accum = float(saved["t_accum"])
+            key = jnp.asarray(np.asarray(saved["key"], np.uint32))
+            start_chunk = int(saved["chunk"]) + 1
+
+    state = None
+    staged, staged_for = None, None
+    pending = None      # the dispatched-not-yet-accounted previous chunk
+    done_chunks = 0
+
+    def finalize(p):
+        """Drain chunk p: accounting replay, eval reduce, scatter, maybe
+        checkpoint.  All of p's blocking pulls (masks, accs, rows) wait
+        only on p's compute — by the time this runs, the NEXT chunk is
+        already dispatched behind it, so the D2H leg of the double
+        buffer overlaps that compute.  Values and append order are
+        exactly the eager loop's (parity-neutral reordering)."""
+        nonlocal t_accum
+        p_t, p_nxt, p_idx, p_carry, p_masks, p_accs, p_cost, p_asn, \
+            p_len, p_key = p
+        masks_np = (np.asarray(p_masks)
+                    if p_masks is not None
+                    and (channel is not None or system is not None)
+                    else None)
+        for i in range(p_len):
+            t_accum = charge_round(
+                history, p_cost, None if masks_np is None else masks_np[i],
+                m_c, payload, link, system, channel, t_accum,
+                p_asn, ul_bits_pc)
+        mean_acc, worst_acc = reduce_scores(p_accs)
+        history.rounds.append(p_nxt)
+        history.mean_acc.append(mean_acc)
+        history.worst_acc.append(worst_acc)
+        history.time.append(t_accum)
+
+        out = {"params": p_carry[1], "opt": p_carry[2]}
+        if lossy:
+            out["ef"] = p_carry[3]
+        store.scatter(p_idx, out)   # the chunk's ONE blocking D2H pull
+
+        if paging.checkpoint_dir and (
+                (p_t + 1) % paging.checkpoint_every == 0
+                or p_t == len(chunks) - 1):
+            store.flush()
+            save_paged_state(paging.checkpoint_dir, p_t, {
+                "key": np.asarray(jax.device_get(p_key)),
+                "t_accum": float(t_accum),
+                "history": _history_state(history),
+                "store": store.state_dict(),
+                "meta": meta})
+
+    for t, (rnd, nxt) in enumerate(chunks):
+        if t < start_chunk:
+            continue
+        if paging.max_chunks is not None and done_chunks >= paging.max_chunks:
+            break
+        idx = sched.indices(t, n)
+        if pending is not None and not _disjoint(pending[2], idx):
+            finalize(pending)   # overlapping rows: scatter must land
+            pending = None      # before this cohort's gather
+        state, consts, cost, assignment, data, eval_data = setups.get(idx)
+        if staged is not None and staged_for == idx.tobytes():
+            rows = staged
+        else:
+            rows = placement.stage(store.gather(idx), m_c)
+        staged, staged_for = None, None
+        carry = (key, rows["params"], rows["opt"], rows.get("ef"))
+
+        length = nxt - rnd + 1
+        carry, masks, accs = placement.run_supersteps(
+            round_fn, carry, data, consts, length, cache=cache,
+            eval_fn=eval_fn, eval_data=eval_data)
+        # the key chain continues on device — no host sync between chunks
+        key = carry[0]
+
+        # double buffer, both legs: the superstep above is dispatched,
+        # not finished.  Drain the PREVIOUS chunk (its compute is done —
+        # device programs execute in dispatch order) while this one runs,
+        # then issue cohort t+1's host gather + H2D copy so the upload
+        # overlaps too.  Overlapping cohorts would page stale rows (their
+        # scatter hasn't landed): fall back to a post-scatter gather.
+        if pending is not None:
+            finalize(pending)
+        # checkpointing reads this chunk's key AFTER the next chunk's
+        # dispatch has donated it — snapshot a device-side copy now (the
+        # copy program runs before the donation, in dispatch order).
+        ck_key = (jnp.array(carry[0], copy=True) if paging.checkpoint_dir
+                  else None)
+        pending = (t, nxt, idx, carry, masks, accs, cost, assignment,
+                   length, ck_key)
+        done_chunks += 1
+        if (paging.prefetch and t + 1 < len(chunks)
+                and (paging.max_chunks is None
+                     or done_chunks < paging.max_chunks)):
+            nidx = sched.indices(t + 1, n)
+            setups.get(nidx)    # warm t+1's setup + data page
+            if _disjoint(nidx, idx):
+                staged = placement.stage(store.gather(nidx), m_c)
+                staged_for = nidx.tobytes()
+
+    if pending is not None:
+        finalize(pending)
+
+    if state is None:       # resumed past the end / max_chunks == 0
+        last = min(max(start_chunk, 0), len(chunks) - 1)
+        state = setups.get(sched.indices(last, n))[0]
+
+    final_params = jax.tree_util.tree_map(jnp.asarray, store.tree["params"])
+    final_opt = jax.tree_util.tree_map(jnp.asarray, store.tree["opt"])
+    history = finalize_history(history, strategy, state, keep_state,
+                               final_params, final_opt)
+    history.extra["paging"] = {
+        "population": n, "cohort": m_c, "schedule": sched.spec,
+        "store_bytes": int(store.nbytes),
+        "store_dir": paging.store_dir, "chunks": len(chunks),
+        "resumed_at": start_chunk if start_chunk else None}
+    if channel is not None:
+        channel_extra(history, channel, link, model_bits, payload)
+    return history
+
+
+# ---------------------------------------------------------------------------
+# the paged buffered-async engine (DESIGN.md §3a + §3e)
+
+
+def run_async_paged(algorithm: Union[str, Strategy, None] = None,
+                    fed: Optional[FederatedData] = None, *,
+                    paging: PagingConfig,
+                    strategy: Optional[Strategy] = None,
+                    async_cfg: Optional[Any] = None,
+                    fl: Optional[FLConfig] = None,
+                    model_init: Optional[Callable] = None,
+                    loss_fn: Callable = lenet.loss_fn,
+                    acc_fn: Callable = lenet.accuracy,
+                    system: Optional[SystemModel] = None,
+                    placement: Optional[Placement] = None,
+                    channel: Union[str, Channel, None] = None,
+                    keep_state: bool = False,
+                    seed: int = 0) -> History:
+    """Store-backed buffered-async run: each event's arrival buffer is
+    the page request — its rows are gathered, updated, aggregated
+    COHORT-LOCALLY and scattered back; device memory scales with
+    ``buffer_k``, not the population.  Exact lockstep anchor: with
+    ``buffer_k == population`` on the reliable system this is bit-
+    identical to the resident `run_async` (pinned); under partial
+    buffers the cohort-local mix is the paged approximation of the
+    resident full-stack mix."""
+    from repro.fl.runtime.clock import VirtualClock
+    from repro.fl.runtime.engine import AsyncConfig
+
+    strategy = resolve_strategy(algorithm, strategy)
+    if fed is None:
+        raise TypeError("`fed` is required")
+    cfg = AsyncConfig() if async_cfg is None else async_cfg
+    fl = FLConfig() if fl is None else fl
+    system = SYSTEMS["wired"] if system is None else system
+    placement = resolve_placement(placement)
+    channel = resolve_channel(channel)
+
+    n = fed.m
+    k_buf = min(cfg.buffer_k, n)
+    tau = np.inf if cfg.max_staleness is None else float(cfg.max_staleness)
+    fed = _host_federated(fed)
+
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    if model_init is None:
+        model_init = default_model_init(fed)
+    params0 = model_init(kinit)
+    opt, vmapped_update = placement.build_update(loss_fn, fl, donate=False)
+
+    # link/payload resolved over the POPULATION (the clock serves all n
+    # clients), exactly like the resident async engine
+    ctx_pop = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                           params0=params0, seed=seed, placement=placement,
+                           strategy=strategy)
+    payload, link, model_bits, _, channel = init_channel(
+        channel, ctx_pop, stack_params(params0, k_buf), system, n)
+    lossy = channel is not None and not channel.codec.is_identity
+    ul_bits_pc = per_client_uplink_bits(channel, ctx_pop, payload, n)
+
+    def _ul_bits(c: int):
+        return payload if ul_bits_pc is None else int(ul_bits_pc[c])
+
+    row = {"params": jax.device_get(params0),
+           "opt": jax.device_get(opt.init(params0))}
+    if lossy:
+        row["ef"] = jax.tree_util.tree_map(np.zeros_like, row["params"])
+    store = ClientStateStore.create(row, n, directory=paging.store_dir)
+
+    def build_setup(idx: np.ndarray):
+        sub = sub_federated(fed, idx)
+        ctx = RoundContext(fed=sub, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
+                           params0=params0, seed=seed, placement=placement,
+                           strategy=strategy)
+        ctx.staleness_discount = cfg.staleness_discount
+        ctx.staleness_schedule = cfg.staleness_schedule
+        ctx.staleness_alpha = cfg.staleness_alpha
+        # device_put for the same reason as run_paged: the population is
+        # host-resident, so pin each cohort's batch data on device once.
+        return [strategy.setup(ctx), ctx, sub,
+                jax.device_put(placement.place_data(sub))]
+
+    setups = _CohortSetups(build_setup)
+
+    clock = VirtualClock(system, seed=seed, link=link)
+    for i in range(n):
+        clock.schedule(i, 0.0, ul_bits=_ul_bits(i))
+    version = np.zeros(n, dtype=np.int64)
+
+    history = History()
+    t_done = 0.0
+    state = None
+
+    for event in range(fl.rounds):
+        buffered = [clock.pop()[1] for _ in range(k_buf)]
+        idx = np.sort(np.asarray(buffered, dtype=np.int64))
+        k = idx.size
+        entry = setups.get(idx)
+        state, ctx, sub, (x_c, y_c, n_c) = entry
+        age = (event - version[idx]).astype(np.int64)
+        fresh = age <= tau
+
+        rows = placement.stage(store.gather(idx), k)
+        stacked, opt_state = rows["params"], rows["opt"]
+        ef = rows.get("ef")
+
+        key, kround = jax.random.split(key)
+        ckeys = placement.place_keys(jax.random.split(kround, k))
+        prev, prev_opt = stacked, opt_state
+        upd, upd_opt = vmapped_update(stacked, opt_state, x_c, y_c, n_c,
+                                      ckeys)
+        if fresh.all():
+            mask = None
+            stacked, opt_state = upd, upd_opt
+        else:
+            # stale-dropped rows keep their server-known models (they
+            # still re-download the mix below, like the resident engine)
+            mask = jnp.asarray(fresh)
+            stacked = placement.select(mask, upd, prev)
+            opt_state = placement.select(mask, upd_opt, prev_opt)
+
+        if lossy:
+            stacked, ef = channel_uplink(placement, channel, stacked, prev,
+                                         ef, kround, mask)
+
+        ctx.rnd, ctx.key, ctx.participation = \
+            event, jax.random.fold_in(kround, 1), mask
+        ctx.staleness = jnp.asarray(age, jnp.float32) if age.any() else None
+        stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+        entry[0] = state
+
+        # every cohort row is a buffered client: all of them download the
+        # new mix and restart.  The cohort-local strategy already reports
+        # cohort-sized costs; cap streams at the cohort like the resident
+        # event charging (exact in lockstep, where cohort == population).
+        cost = strategy.comm(state)
+        cost = CommCost(min(cost.n_streams, k), cost.n_unicasts)
+        history.comm.append(cost)
+        if channel is not None:
+            history.comm_bits.append(ChannelCost(
+                dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
+                ul_bits=sum(_ul_bits(c) for c in buffered)))
+        if link is not None:
+            # cohort-local membership indexes cohort rows; the link clock
+            # indexes by population id — translate (exact in lockstep,
+            # where the cohort IS the population)
+            memb = strategy.membership(state)
+            if memb is not None:
+                full = np.zeros(n, dtype=np.int64)
+                full[idx] = np.asarray(memb, np.int64)
+                memb = full
+            duration = round_downlink_time(link, cost, payload, buffered,
+                                           memb)
+        else:
+            duration = cost.n_streams + cost.n_unicasts
+        done = clock.serve(duration, overlap=True)
+        t_done = max(t_done, done)
+        for c in buffered:
+            clock.schedule(c, done, ul_bits=_ul_bits(c))
+            version[c] = event + 1
+
+        out = {"params": stacked, "opt": opt_state}
+        if lossy:
+            out["ef"] = ef
+        store.scatter(idx, out)
+
+        if event % fl.eval_every == 0 or event == fl.rounds - 1:
+            # `stacked` is still device-resident — cohort-local eval, the
+            # resident engine's full-population eval in the lockstep anchor
+            mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, sub)
+            history.rounds.append(event)
+            history.mean_acc.append(mean_acc)
+            history.worst_acc.append(worst_acc)
+            history.time.append(t_done)
+
+    if state is None:
+        raise ValueError("fl.rounds must be >= 1 for the async runtime")
+    final_params = jax.tree_util.tree_map(jnp.asarray, store.tree["params"])
+    final_opt = jax.tree_util.tree_map(jnp.asarray, store.tree["opt"])
+    history = finalize_history(history, strategy, state, keep_state,
+                               final_params, final_opt)
+    history.extra["async"] = {"buffer_k": k_buf,
+                              "max_staleness": cfg.max_staleness,
+                              "staleness_schedule": cfg.staleness_schedule,
+                              "staleness_discount": cfg.staleness_discount,
+                              "staleness_alpha": cfg.staleness_alpha,
+                              "events": fl.rounds}
+    history.extra["paging"] = {
+        "population": n, "cohort": k_buf, "schedule": "arrival-buffer",
+        "store_bytes": int(store.nbytes),
+        "store_dir": paging.store_dir, "chunks": fl.rounds,
+        "resumed_at": None}
+    if channel is not None:
+        channel_extra(history, channel, link, model_bits, payload)
+    return history

@@ -1,0 +1,132 @@
+"""Host-backed client-state store (DESIGN.md §3e).
+
+The paging engine keeps the FULL per-client state population — model
+params, optimizer state and (lossy channels) error-feedback residuals —
+in host memory, optionally memory-mapped to disk, with every leaf laid
+out ``(n, ...)`` so a sampled cohort is one contiguous row gather.  Only
+the active cohort's rows ever live on device: device memory scales with
+the cohort size m, host/disk with the population n.
+
+The store is deliberately dumb: numpy rows in, numpy rows out.  All
+device placement (sharding, H2D staging) happens in the paging layer
+through `Placement.stage`, and a device->host->device round trip of the
+row dtypes is bitwise lossless — which is what makes the paged engine's
+bit-parity anchor against the resident engine possible.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class ClientStateStore:
+    """Population-sized per-client state, host-resident, row-gatherable.
+
+    ``tree`` is any pytree whose leaves are (n, ...) numpy arrays (plain
+    or ``np.memmap`` when ``directory`` is set); row i is client i's
+    state.  Build one with `create` (broadcast a single-client template)
+    or `from_state_dict` (checkpoint restore).
+    """
+
+    def __init__(self, tree: Any, n: int, directory: Optional[str] = None):
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if leaf.shape[0] != n:
+                raise ValueError(
+                    f"store leaf has leading dim {leaf.shape[0]}, "
+                    f"expected population size {n}")
+        self.tree = tree
+        self.n = n
+        self.directory = directory
+
+    # ---- construction -----------------------------------------------------
+
+    @classmethod
+    def create(cls, template: Any, n: int,
+               directory: Optional[str] = None) -> "ClientStateStore":
+        """Broadcast a single-client ``template`` pytree (leaf shapes are
+        the PER-CLIENT shapes, no leading dim) to all n rows.  With
+        ``directory``, each leaf becomes a disk-backed ``.npy`` memmap —
+        populations far beyond host RAM stay pageable."""
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        out = []
+        for i, leaf in enumerate(leaves):
+            row = np.asarray(leaf)
+            arr = cls._alloc(directory, i, (n,) + row.shape, row.dtype)
+            arr[...] = row[None]
+            out.append(arr)
+        return cls(jax.tree_util.tree_unflatten(treedef, out), n, directory)
+
+    @classmethod
+    def from_state_dict(cls, d: Any,
+                        directory: Optional[str] = None) -> "ClientStateStore":
+        """Rebuild from `state_dict` output (checkpoint restore decodes
+        leaves as read-only device arrays — copied into fresh writable
+        host rows, or into ``directory``'s memmaps)."""
+        n = int(d["n"])
+        leaves, treedef = jax.tree_util.tree_flatten(d["tree"])
+        out = []
+        for i, leaf in enumerate(leaves):
+            src = np.asarray(leaf)
+            arr = cls._alloc(directory, i, src.shape, src.dtype)
+            arr[...] = src
+            out.append(arr)
+        return cls(jax.tree_util.tree_unflatten(treedef, out), n, directory)
+
+    @staticmethod
+    def _alloc(directory: Optional[str], i: int, shape, dtype) -> np.ndarray:
+        if directory is None:
+            return np.empty(shape, dtype)
+        os.makedirs(directory, exist_ok=True)
+        return np.lib.format.open_memmap(
+            os.path.join(directory, f"leaf_{i:04d}.npy"),
+            mode="w+", dtype=dtype, shape=tuple(shape))
+
+    # ---- the paging surface -----------------------------------------------
+
+    def gather(self, idx: np.ndarray) -> Any:
+        """Copy the cohort rows ``idx`` (k,) out as contiguous (k, ...)
+        arrays — the H2D staging source (`Placement.stage` consumes the
+        result without another host-side copy)."""
+        idx = np.asarray(idx)
+        return jax.tree_util.tree_map(
+            lambda l: np.ascontiguousarray(l[idx]), self.tree)
+
+    def scatter(self, idx: np.ndarray, rows: Any) -> None:
+        """Write updated cohort rows back.  ``rows`` may be device arrays
+        — fetched with ONE blocking transfer here (the paged superstep's
+        D2H leg)."""
+        idx = np.asarray(idx)
+        host = jax.device_get(rows)
+
+        def put(leaf, r):
+            leaf[idx] = np.asarray(r, dtype=leaf.dtype)
+            return leaf
+
+        jax.tree_util.tree_map(put, self.tree, host)
+
+    # ---- bookkeeping ------------------------------------------------------
+
+    @property
+    def nbytes(self) -> int:
+        return sum(l.nbytes for l in jax.tree_util.tree_leaves(self.tree))
+
+    @property
+    def bytes_per_client(self) -> int:
+        return self.nbytes // max(self.n, 1)
+
+    def flush(self) -> None:
+        for leaf in jax.tree_util.tree_leaves(self.tree):
+            if isinstance(leaf, np.memmap):
+                leaf.flush()
+
+    def state_dict(self) -> Any:
+        """Checkpoint payload: the full population rows + size."""
+        return {"n": self.n, "tree": self.tree}
+
+    def __repr__(self) -> str:
+        backing = "memmap" if self.directory else "ram"
+        return (f"ClientStateStore(n={self.n}, {backing}, "
+                f"{self.nbytes / 2**20:.1f} MiB)")

@@ -33,7 +33,7 @@ Both placements work: `HostVmap` masks cohorts via `placement.select`;
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Union
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,7 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
               placement: Optional[Placement] = None,
               channel: Union[str, Channel, None] = None,
               keep_state: bool = False,
+              paging: Optional[Any] = None,
               seed: int = 0) -> History:
     """Run `fl.rounds` buffered-async aggregation events; returns History.
 
@@ -112,8 +113,19 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     cohort.  ``system`` drives the virtual clock (default: the reliable
     ``wired`` model, i.e. deterministic lockstep arrivals); ``channel``
     (DESIGN.md §3b) adds uplink compression, bit accounting and per-client
-    link timing on top of it.
+    link timing on top of it.  ``paging`` (a `PagingConfig`) switches to
+    the store-backed event loop (DESIGN.md §3e): only each event's
+    arrival buffer is device-resident.
     """
+    if paging is not None:
+        from repro.fl.population import run_async_paged
+        return run_async_paged(algorithm, fed, paging=paging,
+                               strategy=strategy, async_cfg=async_cfg,
+                               fl=fl, model_init=model_init,
+                               loss_fn=loss_fn, acc_fn=acc_fn,
+                               system=system, placement=placement,
+                               channel=channel, keep_state=keep_state,
+                               seed=seed)
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")

@@ -40,8 +40,8 @@ from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
 from repro.fl.comm import SYSTEMS, SystemModel
 from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export)
                                 Placement, evaluate, make_client_update,
-                                resolve_placement, stack_params,
-                                where_clients)
+                                reduce_scores, resolve_placement,
+                                stack_params, where_clients)
 from repro.fl.stats import full_client_gradients, sigma2_estimates  # noqa: F401 (re-exported for back-compat)
 from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
                                  Strategy, StrategyExtras, TracedMix,
@@ -246,10 +246,15 @@ def superstep_support(strategy: Strategy,
 # {scan length -> jitted superstep}.  The key captures everything the
 # trace closes over (the cached update step object carries the
 # loss_fn/FLConfig identity; strategy and sampler contribute their
-# spec-level identities; the placement its mesh/schedule).  Bounded like
-# the neighboring executable caches (`cached_update`, `_uplink_fn`):
-# oldest config evicted past the cap, so sweep processes iterating many
-# (scenario × algorithm × codec) configs don't pin executables forever.
+# spec-level identities; the placement its mesh/schedule; `acc_fn` the
+# fused chunk-end eval) — but NOT the client count: the traced round
+# derives m from the data shapes, so the jit wrapper re-specializes per
+# COHORT SHAPE on its own and one cache entry serves every population
+# size (the paging engine's executable-reuse contract, DESIGN.md §3e).
+# Bounded like the neighboring executable caches (`cached_update`,
+# `_uplink_fn`): oldest config evicted past the cap, so sweep processes
+# iterating many (scenario × algorithm × codec) configs don't pin
+# executables forever.
 _SUPERSTEP_FNS: Dict[tuple, Dict[int, Callable]] = {}
 _SUPERSTEP_CACHE_MAX = 32
 
@@ -257,10 +262,10 @@ _SUPERSTEP_CACHE_MAX = 32
 def _superstep_cache(placement: Placement, strategy: Strategy,
                      sampler: Optional[ClientSampler],
                      codec, error_feedback: bool, update_fn: Callable,
-                     m: int) -> Dict[int, Callable]:
+                     acc_fn: Callable) -> Dict[int, Callable]:
     key = (placement.cache_key(), type(strategy), strategy.spec,
            None if sampler is None else sampler.cache_key,
-           codec, bool(error_feedback), update_fn, m)
+           codec, bool(error_feedback), update_fn, acc_fn)
     cache = _SUPERSTEP_FNS.pop(key, None)   # re-insert: LRU, not FIFO
     if cache is None:
         while len(_SUPERSTEP_FNS) >= _SUPERSTEP_CACHE_MAX:
@@ -272,7 +277,7 @@ def _superstep_cache(placement: Placement, strategy: Strategy,
 
 def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
                         codec, error_feedback: bool, placement: Placement,
-                        update_fn: Callable, m: int) -> Callable:
+                        update_fn: Callable) -> Callable:
     """The fused round: (local update → sampler select → codec uplink with
     error feedback → strategy aggregate) as one pure function
 
@@ -283,7 +288,11 @@ def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
     first (stochastic samplers only), then ``kround``; per-client batch
     keys are ``split(kround, m)``, the codec key ``fold_in(kround, 2)``
     (index 1 stays reserved for the strategies' derivation) — so the
-    fused run is bit-identical to the per-round loop."""
+    fused run is bit-identical to the per-round loop.  The client count
+    m comes from the traced data shapes, NOT from the builder: one
+    round_fn (and so one cached superstep) serves every cohort size,
+    which is what lets the paging engine (DESIGN.md §3e) reuse
+    executables across populations."""
     tmix = TracedMix(placement)
     lossy = codec is not None and not codec.is_identity
     backend = placement.codec_backend
@@ -291,6 +300,7 @@ def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
     def round_fn(carry, data, consts):
         key, stacked, opt_state, ef = carry
         x, y, n = data
+        m = x.shape[0]      # static under trace: the cohort shape
         ksample = None
         if sampler is not None and sampler.needs_key:
             key, ksample = jax.random.split(key)
@@ -404,8 +414,10 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
                    keep_state: bool, seed: int) -> "History":
     """Scan-compiled sync run (DESIGN.md §3c): Python re-enters only at
     eval boundaries; per-round participation masks come back as ONE
-    stacked device->host transfer per superstep and the clock/CommCost/
-    ChannelCost accounting is replayed from them in the eventful engine's
+    stacked device->host transfer per superstep, the chunk-end eval runs
+    INSIDE the compiled superstep (fused onto the end of the scan — no
+    separate eval dispatch on the hot path), and the clock/CommCost/
+    ChannelCost accounting is replayed host-side in the eventful engine's
     exact per-round order (bit-identical histories)."""
     m = fed.m
     key, update_fn, stacked, opt_state, data, ctx, state = init_run(
@@ -420,9 +432,10 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
     ef_flag = channel.error_feedback if lossy else True
     consts = strategy.traced_state(state)
     round_fn = _build_traced_round(strategy, sampler, codec, ef_flag,
-                                   placement, update_fn, m)
+                                   placement, update_fn)
     cache = _superstep_cache(placement, strategy, sampler, codec, ef_flag,
-                             update_fn, m)
+                             update_fn, acc_fn)
+    eval_fn = lambda st, ed: placement.eval_traced(acc_fn, st, ed[0], ed[1])
     cost = strategy.comm(state)     # round-constant by the traceability
     history = History()             # contract (state never changes)
     assignment = strategy.membership(state)      # round-constant too
@@ -432,8 +445,9 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
 
     for rnd, nxt in _eval_rounds(fl.rounds, fl.eval_every):
         length = nxt - rnd + 1
-        carry, masks = placement.run_supersteps(round_fn, carry, data,
-                                                consts, length, cache=cache)
+        carry, masks, accs = placement.run_supersteps(
+            round_fn, carry, data, consts, length, cache=cache,
+            eval_fn=eval_fn, eval_data=(fed.x_val, fed.y_val))
         # the chunk's ONE blocking device->host transfer — and only when a
         # clock or the bits axis actually consumes the masks
         masks_np = (np.asarray(masks)
@@ -445,7 +459,7 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
                 history, cost, None if masks_np is None else masks_np[i],
                 m, payload, link, system, channel, t_accum,
                 assignment, ul_bits_pc)
-        mean_acc, worst_acc = placement.evaluate(acc_fn, carry[1], fed)
+        mean_acc, worst_acc = reduce_scores(accs)
         history.rounds.append(nxt)
         history.mean_acc.append(mean_acc)
         history.worst_acc.append(worst_acc)
@@ -473,6 +487,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   keep_state: bool = False,
                   async_cfg: Optional[Any] = None,
                   superstep: Optional[bool] = None,
+                  paging: Optional[Any] = None,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
@@ -491,7 +506,10 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     device-resident `lax.scan`: None (default) fuses exactly when
     strategy and sampler satisfy the traceability contract (bit-identical
     histories either way), False forces the eventful per-round loop, True
-    raises if the configuration cannot fuse.
+    raises if the configuration cannot fuse.  ``paging`` (a
+    `PagingConfig`, DESIGN.md §3e) switches to the cohort paging engine:
+    the full client population lives in a host-backed store and only one
+    cohort is device-resident per superstep.
     """
     if async_cfg is not None:
         if sampler is not None:
@@ -503,6 +521,16 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         from repro.fl.runtime import run_async
         return run_async(algorithm, fed, strategy=strategy,
                          async_cfg=async_cfg, fl=fl, model_init=model_init,
+                         loss_fn=loss_fn, acc_fn=acc_fn, system=system,
+                         placement=placement, channel=channel,
+                         keep_state=keep_state, paging=paging, seed=seed)
+    if paging is not None:
+        if superstep is False:
+            raise TypeError("the paging engine runs fused supersteps only "
+                            "(DESIGN.md §3e); superstep=False cannot page")
+        from repro.fl.population import run_paged
+        return run_paged(algorithm, fed, paging=paging, strategy=strategy,
+                         sampler=sampler, fl=fl, model_init=model_init,
                          loss_fn=loss_fn, acc_fn=acc_fn, system=system,
                          placement=placement, channel=channel,
                          keep_state=keep_state, seed=seed)

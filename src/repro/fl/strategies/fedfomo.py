@@ -12,18 +12,25 @@ sharded through the outer vmap rather than being pulled to host one model
 at a time.  Orientation convention (pinned by a regression test):
 ``losses[i, j]`` is candidate j's loss on client i's OWN validation set,
 and ``prev_losses[i]`` is client i's pre-round model on its own set.
+
+The whole weighting — loss matrix, distance normalization, top-M
+thresholding, row renormalization — is pure jnp (`fomo_weights`), so
+FedFOMO satisfies the superstep traceability contract (DESIGN.md §3c):
+the eventful path and the fused scan run the SAME math, the eventful
+path merely calling it through a cached jit wrapper.  The top-M cut is
+traced with the candidate count as a DYNAMIC scalar (`dynamic_slice`
+into the row-sorted weights), so runs differing only in
+``fomo_candidates`` share one compiled superstep.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import user_centric_aggregate
 from repro.core.similarity import flatten_pytree
-from repro.data.federated import FederatedData
 from repro.fl.strategies.base import CommCost, RoundContext, Strategy
 from repro.fl.strategies.registry import register
 
@@ -32,36 +39,60 @@ class FomoState(NamedTuple):
     cand_loss_fn: Callable      # jitted (stacked, x_val, y_val) -> (m, m):
                                 # row j = candidate j on every client's val set
     self_loss_fn: Callable      # jitted diagonal: model i on client i -> (m,)
+    weights_fn: Callable        # jitted `fomo_weights` bound to loss_fn
+    x_val: jnp.ndarray          # the per-client validation sets the
+    y_val: jnp.ndarray          # weighting evaluates candidates on
+    n_cand: jnp.ndarray         # top-M cut, as a TRACED scalar (int32)
     m: int
     candidates: int
 
 
-def _fedfomo_round(stacked, prev, fed: FederatedData, cand_loss_fn,
-                   self_loss_fn, n_candidates: int, mix=None):
-    # deterministic: candidates are the top-M by weight (the paper samples)
-    m = fed.m
+def fomo_weights(loss_fn: Callable, stacked, prev, x_val, y_val, n_cand):
+    """The FedFOMO weighting as one pure-jnp function: returns the
+    row-normalized (m, m) mixing matrix plus the (m,) residual mass each
+    client keeps on its own pre-round model.
+
+    ``n_cand`` is a traced int32 scalar — ``n_cand >= m`` disables the
+    top-M cut (every positive-weight candidate is kept), matching the
+    paper's "evaluate all received models" limit."""
+    per_client = jax.vmap(
+        lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0],
+        in_axes=(None, 0, 0))
+    # loss of every candidate model on every client's validation set, as a
+    # single batched eval; computed (candidate j, client i) and transposed
+    # to the (i, j) convention
+    losses = jax.vmap(per_client, in_axes=(0, None, None))(
+        stacked, x_val, y_val).T
+    # client i's own pre-round model on its own validation set
+    prev_losses = jax.vmap(
+        lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0])(prev, x_val, y_val)
     flat = jax.vmap(flatten_pytree)(stacked)
     flat_prev = jax.vmap(flatten_pytree)(prev)
-    # loss of every candidate model on every client's validation set, as a
-    # single batched eval; the jitted result comes back (candidate j,
-    # client i) and is transposed to the (i, j) convention
-    losses = np.asarray(cand_loss_fn(stacked, fed.x_val, fed.y_val)).T
-    # client i's own pre-round model on its own validation set
-    prev_losses = np.asarray(self_loss_fn(prev, fed.x_val, fed.y_val))
-    dist = np.asarray(jnp.linalg.norm(
-        flat[None, :, :] - flat_prev[:, None, :], axis=-1)) + 1e-9
-    wmat = np.maximum((prev_losses[:, None] - losses) / dist, 0.0)
-    # keep top candidates per client (paper samples M models)
-    if n_candidates < m:
-        thresh = np.sort(wmat, axis=1)[:, -n_candidates][:, None]
-        wmat = np.where(wmat >= thresh, wmat, 0.0)
+    dist = jnp.linalg.norm(flat[None, :, :] - flat_prev[:, None, :],
+                           axis=-1) + 1e-9
+    wmat = jnp.maximum((prev_losses[:, None] - losses) / dist, 0.0)
+    # keep top candidates per client (paper samples M models): threshold
+    # at the n_cand-th largest weight per row, sliced dynamically so the
+    # candidate count never specializes the trace
+    m = wmat.shape[0]
+    srt = jnp.sort(wmat, axis=1)
+    pos = jnp.clip(m - n_cand, 0, m - 1).astype(jnp.int32)
+    thresh = jax.lax.dynamic_slice(srt, (jnp.int32(0), pos), (m, 1))
+    wmat = jnp.where((n_cand >= m) | (wmat >= thresh), wmat, 0.0)
     rows = wmat.sum(1, keepdims=True)
-    wmat = np.where(rows > 0, wmat / np.maximum(rows, 1e-9), 0.0)
-    wj = jnp.asarray(wmat)
-    # θ_i ← θ_i^prev + Σ_j w_ij (θ_j − θ_i^prev)
-    mixed = user_centric_aggregate(stacked, wj) if mix is None \
-        else mix(stacked, wj)
-    keep = jnp.asarray(1.0 - wmat.sum(1))
+    wmat = jnp.where(rows > 0, wmat / jnp.maximum(rows, 1e-9), 0.0)
+    return wmat, 1.0 - wmat.sum(1)
+
+
+@functools.lru_cache(maxsize=8)
+def _weights_fn(loss_fn: Callable) -> Callable:
+    """jit wrapper for the eventful path, cached on the loss identity so
+    repeated runs reuse the executable (like `cached_update`)."""
+    return jax.jit(functools.partial(fomo_weights, loss_fn))
+
+
+def _add_residual(mixed, prev, keep):
+    # θ_i ← Σ_j w_ij θ_j + (1 − Σ_j w_ij) θ_i^prev
     return jax.tree_util.tree_map(
         lambda mx, pv: mx + keep.reshape((-1,) + (1,) * (pv.ndim - 1)) * pv,
         mixed, prev)
@@ -71,11 +102,12 @@ def _fedfomo_round(stacked, prev, fed: FederatedData, cand_loss_fn,
 class FedFOMO(Strategy):
     name = "fedfomo"
     reads_prev = True       # candidate weighting compares against prev
-    traceable = False       # numpy thresholding/weighting per round: the
-                            # engine falls back to the eventful loop
+    traceable = True        # pure-jnp weighting: qualifies for the fused
+                            # superstep (deterministic top-M variant)
 
     def __init__(self, candidates: Optional[int] = None):
         self.candidates = candidates   # None -> FLConfig.fomo_candidates
+        self._loss_fn = None           # bound at setup, for the traced path
 
     def setup(self, ctx: RoundContext) -> FomoState:
         loss_fn = ctx.loss_fn
@@ -90,14 +122,34 @@ class FedFOMO(Strategy):
             lambda p, x, y: loss_fn(p, {"x": x, "y": y})[0]))
         n_cand = (self.candidates if self.candidates is not None
                   else ctx.fl.fomo_candidates)
+        # the traced aggregation closes over the loss function; the
+        # superstep cache key carries the same identity via the cached
+        # update step, so stashing it on the instance cannot alias two
+        # different compiled programs
+        self._loss_fn = loss_fn
         return FomoState(cand_loss_fn=cand_loss, self_loss_fn=self_loss,
+                         weights_fn=_weights_fn(loss_fn),
+                         x_val=ctx.fed.x_val, y_val=ctx.fed.y_val,
+                         n_cand=jnp.asarray(n_cand, jnp.int32),
                          m=ctx.fed.m, candidates=n_cand)
 
     def aggregate(self, state: FomoState, stacked, prev, ctx):
-        out = _fedfomo_round(stacked, prev, ctx.fed, state.cand_loss_fn,
-                             state.self_loss_fn, state.candidates,
-                             mix=ctx.mix)
-        return out, state
+        wmat, keep = state.weights_fn(stacked, prev, state.x_val,
+                                      state.y_val, state.n_cand)
+        # ctx.mix routes through `reweight` (async staleness discounting is
+        # mass-preserving per row, so `keep` stays the rows' complement)
+        return _add_residual(ctx.mix(stacked, wmat), prev, keep), state
+
+    def traced_state(self, state: FomoState):
+        # structure is spec-constant: the validation sets the weighting
+        # evaluates on, plus the dynamic top-M scalar
+        return (state.x_val, state.y_val, state.n_cand)
+
+    def aggregate_traced(self, arrays, stacked, prev, tmix):
+        x_val, y_val, n_cand = arrays
+        wmat, keep = fomo_weights(self._loss_fn, stacked, prev, x_val,
+                                  y_val, n_cand)
+        return _add_residual(tmix.mix(stacked, wmat), prev, keep)
 
     def comm(self, state: FomoState) -> CommCost:
         return CommCost(0, state.m * state.candidates)

@@ -37,7 +37,8 @@ from repro.configs import get_config, reduced
 from repro.data.federated import FederatedData
 from repro.data.synthetic import synthetic_lm_tokens
 from repro.fl import (AsyncConfig, Channel, FLConfig, HostVmap, MeshShardMap,
-                      SYSTEMS, UniformFraction, get_strategy, run_federated)
+                      PagingConfig, SYSTEMS, UniformFraction, get_strategy,
+                      run_federated)
 from repro.launch.steps import _loss_fn, init_model_params
 
 
@@ -142,6 +143,24 @@ def main(argv=None):
                         "also the virtual clock's arrival law")
     p.add_argument("--eval-every", type=int, default=5)
     p.add_argument("--checkpoint", default="")
+    p.add_argument("--cohort", type=int, default=None,
+                   help="cohort paging (DESIGN.md §3e): keep only this many "
+                        "of --clients device-resident per superstep, the "
+                        "rest in the host-backed store")
+    p.add_argument("--cohort-schedule", default="sweep",
+                   choices=("sweep", "random"),
+                   help="paging: which cohort each superstep trains")
+    p.add_argument("--store-dir", default=None,
+                   help="paging: disk-back the client-state store (.npy "
+                        "memmaps) instead of host RAM")
+    p.add_argument("--checkpoint-dir", default=None,
+                   help="paging: write superstep-boundary snapshots here "
+                        "(store rows + engine carry + history)")
+    p.add_argument("--checkpoint-every", type=int, default=1,
+                   help="paging: snapshot cadence in supersteps")
+    p.add_argument("--resume", action="store_true",
+                   help="paging: resume from the latest snapshot in "
+                        "--checkpoint-dir")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     if args.steps < 1:
@@ -178,6 +197,17 @@ def main(argv=None):
                                 staleness_alpha=args.staleness_alpha)
     sampler = (UniformFraction(args.participation)
                if args.participation < 1.0 else None)
+    paging = None
+    if args.cohort is not None:
+        if args.cohort > m:
+            p.error(f"--cohort {args.cohort} > --clients {m}")
+        paging = PagingConfig(cohort=args.cohort,
+                              schedule=args.cohort_schedule,
+                              schedule_seed=args.seed,
+                              store_dir=args.store_dir,
+                              checkpoint_dir=args.checkpoint_dir,
+                              checkpoint_every=args.checkpoint_every,
+                              resume=args.resume)
     channel = None
     if args.codec is not None or args.link_profile is not None:
         channel = Channel(codec=args.codec or "identity",
@@ -187,6 +217,7 @@ def main(argv=None):
     print(f"arch={cfg.name} preset={args.preset} clients={m} "
           f"alg={strategy.spec} placement={placement!r}"
           + (f" async={async_cfg}" if async_cfg else "")
+          + (f" paging={paging}" if paging else "")
           + (f" channel={channel}" if channel else ""))
     t0 = time.time()
     history = run_federated(
@@ -195,7 +226,14 @@ def main(argv=None):
         loss_fn=loss_fn, acc_fn=acc_fn, system=SYSTEMS[args.system],
         placement=placement, channel=channel,
         keep_state=bool(args.checkpoint),
-        async_cfg=async_cfg, seed=args.seed)
+        async_cfg=async_cfg, paging=paging, seed=args.seed)
+    if paging is not None:
+        pg = history.extra["paging"]
+        print(f"paging: population={pg['population']} cohort={pg['cohort']} "
+              f"schedule={pg['schedule']} "
+              f"store={pg['store_bytes']/2**20:.1f} MiB"
+              + (f" (resumed at superstep {pg['resumed_at']})"
+                 if pg["resumed_at"] else ""))
 
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(
         jax.eval_shape(lambda k: init_model_params(k, cfg),

@@ -1,0 +1,335 @@
+"""Cohort paging engine (DESIGN.md §3e): store, schedules, paged runs.
+
+The load-bearing anchors:
+
+  * paged-vs-resident bit parity — a paged run over a `FixedCohort` must
+    reproduce a resident run on that sub-population EXACTLY (same seed,
+    same compiled superstep executable), on both placements, with lossy
+    codecs and samplers on or off;
+  * checkpoint-resume parity — a run interrupted mid-sweep and resumed
+    from its superstep snapshot must finish bit-identical to an
+    uninterrupted run;
+  * executable reuse across population sizes — the superstep cache is
+    keyed on the COHORT shape, so runs differing only in population size
+    share one compiled program (the S3 regression).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_paged_checkpoint
+from repro.data.federated import FederatedData, scenario_label_shift
+from repro.fl import (AsyncConfig, Channel, FLConfig, FixedCohort, HostVmap,
+                      MeshShardMap, PagingConfig, RandomCohorts, SYSTEMS,
+                      SequentialSweep, UniformFraction, run_async,
+                      run_federated, sub_federated)
+from repro.fl.population import ClientStateStore
+from repro.fl.simulator import default_model_init
+
+KEY = jax.random.PRNGKey(0)
+FL = FLConfig(rounds=5, local_steps=2, batch_size=16, eval_every=2)
+IDX = np.array([1, 3, 5, 7])
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=8)
+
+
+@pytest.fixture(scope="module")
+def model_init(fed):
+    # the population-sized head for BOTH runs of every parity pair: a
+    # cohort may miss high labels, so the resident reference must not
+    # re-derive n_classes from the sub-population
+    return default_model_init(fed)
+
+
+def _mesh_exact():
+    return MeshShardMap(schedule="shard_map_streams")
+
+
+def assert_history_equal(h_a, h_b):
+    assert h_a.rounds == h_b.rounds
+    assert h_a.mean_acc == h_b.mean_acc
+    assert h_a.worst_acc == h_b.worst_acc
+    assert h_a.comm == h_b.comm
+    assert h_a.time == h_b.time
+    assert h_a.comm_bits == h_b.comm_bits
+
+
+def assert_params_equal(a, b):
+    # the paged run re-executes the RESIDENT run's cached superstep on
+    # bitwise-equal staged inputs, so parity is exact even under forced
+    # multi-device emulation (unlike fused-vs-eventful program pairs)
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert jnp.array_equal(la, lb)
+
+
+def take_rows(tree, idx):
+    return jax.tree_util.tree_map(lambda l: l[idx], tree)
+
+
+# ---------------------------------------------------------------------------
+# the store
+
+
+def test_store_roundtrip(tmp_path):
+    template = {"params": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                           "b": np.ones((4,), np.float32)},
+                "opt": {"step": np.zeros((), np.int32)}}
+    for directory in (None, str(tmp_path / "rows")):
+        store = ClientStateStore.create(template, 16, directory=directory)
+        assert store.n == 16
+        rows = store.gather(np.array([0, 5, 9]))
+        np.testing.assert_array_equal(rows["params"]["w"][1],
+                                      template["params"]["w"])
+        new = jax.tree_util.tree_map(lambda l: l + 1.0
+                                     if l.dtype == np.float32 else l + 1,
+                                     rows)
+        store.scatter(np.array([0, 5, 9]), new)
+        back = store.gather(np.array([5]))
+        np.testing.assert_array_equal(back["params"]["w"][0],
+                                      template["params"]["w"] + 1.0)
+        # untouched rows keep the template
+        np.testing.assert_array_equal(store.gather(np.array([1]))
+                                      ["params"]["w"][0],
+                                      template["params"]["w"])
+        store.flush()
+        # checkpoint round trip is bitwise
+        clone = ClientStateStore.from_state_dict(store.state_dict())
+        for a, b in zip(jax.tree_util.tree_leaves(store.tree),
+                        jax.tree_util.tree_leaves(clone.tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # memmap leaves persist on disk
+    assert any(f.endswith(".npy") for f in os.listdir(tmp_path / "rows"))
+
+
+def test_store_rejects_bad_leading_dim():
+    with pytest.raises(ValueError, match="leading dim"):
+        ClientStateStore({"x": np.zeros((4, 2))}, 8)
+
+
+# ---------------------------------------------------------------------------
+# schedules: pure functions of the superstep index (resume contract)
+
+
+def test_sequential_sweep_covers_population():
+    s = SequentialSweep(4)
+    seen = np.concatenate([s.indices(t, 16) for t in range(4)])
+    np.testing.assert_array_equal(np.sort(seen), np.arange(16))
+    # periodic, pure in the step
+    np.testing.assert_array_equal(s.indices(5, 16), s.indices(1, 16))
+    with pytest.raises(ValueError, match="divisible"):
+        s.indices(0, 10)
+
+
+def test_random_cohorts_pure_in_step():
+    s = RandomCohorts(4, seed=7)
+    a = s.indices(3, 32)
+    np.testing.assert_array_equal(a, s.indices(3, 32))  # pure in the step
+    assert np.unique(a).size == 4
+    draws = {s.indices(t, 32).tobytes() for t in range(8)}
+    assert len(draws) > 1                               # steps vary
+    assert s.spec != RandomCohorts(4, seed=8).spec      # seed in identity
+    with pytest.raises(ValueError, match="> population"):
+        s.indices(0, 3)
+
+
+def test_fixed_cohort_validation():
+    with pytest.raises(ValueError, match="unique"):
+        FixedCohort([1, 1, 2])
+    with pytest.raises(ValueError, match="out of range"):
+        FixedCohort([9]).indices(0, 8)
+    np.testing.assert_array_equal(FixedCohort([5, 1, 3]).indices(0, 8),
+                                  [1, 3, 5])
+
+
+# ---------------------------------------------------------------------------
+# paged-vs-resident bit parity (the tentpole anchor)
+
+
+@pytest.mark.parametrize("placement_fn", [HostVmap, _mesh_exact],
+                         ids=["host", "mesh"])
+@pytest.mark.parametrize("codec", [None, "qsgd:4"], ids=["raw", "qsgd4"])
+def test_paged_matches_resident(placement_fn, codec, fed, model_init):
+    kw = dict(fl=FL, system=SYSTEMS["wired"], model_init=model_init,
+              channel=None if codec is None else Channel(codec=codec),
+              keep_state=True)
+    h_res = run_federated("ucfl_k2", sub_federated(fed, IDX),
+                          placement=placement_fn(), superstep=True, **kw)
+    h_pag = run_federated("ucfl_k2", fed, placement=placement_fn(),
+                          paging=PagingConfig(schedule=FixedCohort(IDX)),
+                          **kw)
+    assert_history_equal(h_pag, h_res)
+    assert_params_equal(take_rows(h_pag.final_params, IDX),
+                        h_res.final_params)
+    assert_params_equal(take_rows(h_pag.final_opt_state, IDX),
+                        h_res.final_opt_state)
+    assert h_pag.extra["paging"]["population"] == fed.m
+
+
+@pytest.mark.parametrize("spec", ["fedavg", "local", "fedfomo"])
+def test_paged_matches_resident_strategies(spec, fed, model_init):
+    kw = dict(fl=FL, system=SYSTEMS["wired"], model_init=model_init,
+              keep_state=True)
+    h_res = run_federated(spec, sub_federated(fed, IDX), superstep=True,
+                          **kw)
+    h_pag = run_federated(spec, fed,
+                          paging=PagingConfig(schedule=FixedCohort(IDX)),
+                          **kw)
+    assert_history_equal(h_pag, h_res)
+    assert_params_equal(take_rows(h_pag.final_params, IDX),
+                        h_res.final_params)
+
+
+def test_paged_sampler_parity(fed, model_init):
+    """Participation masks replay bit-identically through the paged
+    superstep (sampler + lossy codec corner)."""
+    kw = dict(fl=FL, system=SYSTEMS["wireless_slow"], model_init=model_init,
+              channel=Channel(codec="qsgd:4"),
+              sampler=UniformFraction(0.5), keep_state=True)
+    h_res = run_federated("ucfl_k2", sub_federated(fed, IDX),
+                          superstep=True, **kw)
+    h_pag = run_federated("ucfl_k2", fed,
+                          paging=PagingConfig(schedule=FixedCohort(IDX)),
+                          **kw)
+    assert_history_equal(h_pag, h_res)
+    assert_params_equal(take_rows(h_pag.final_params, IDX),
+                        h_res.final_params)
+
+
+def test_paged_rejects_eventful(fed):
+    with pytest.raises(ValueError, match="cannot fuse"):
+        run_federated("cfl", fed, fl=FL, paging=PagingConfig(cohort=4))
+    with pytest.raises(TypeError, match="superstep=False"):
+        run_federated("fedavg", fed, fl=FL, superstep=False,
+                      paging=PagingConfig(cohort=4))
+
+
+# ---------------------------------------------------------------------------
+# S3 regression: executables are keyed on cohort shape, not population
+
+
+def test_superstep_cache_reused_across_population_sizes(fed, model_init):
+    import repro.fl.simulator as sim
+
+    run_federated("ucfl_k2", fed, fl=FL, model_init=model_init)
+    keys = set(sim._SUPERSTEP_FNS)
+    sizes = {k: {ln: (fn._cache_size() if hasattr(fn, "_cache_size")
+                      else None)
+                 for ln, fn in v.items()}
+             for k, v in sim._SUPERSTEP_FNS.items()}
+
+    # double the population by concatenation: identical row shapes, so
+    # the cohort-shaped superstep must NOT recompile or re-key
+    fed2 = FederatedData(
+        x=jnp.concatenate([fed.x, fed.x]),
+        y=jnp.concatenate([fed.y, fed.y]),
+        n=jnp.concatenate([fed.n, fed.n]),
+        x_val=jnp.concatenate([fed.x_val, fed.x_val]),
+        y_val=jnp.concatenate([fed.y_val, fed.y_val]),
+        group=jnp.concatenate([fed.group, fed.group]))
+    run_federated("ucfl_k2", fed2, fl=FL, model_init=model_init,
+                  paging=PagingConfig(schedule=FixedCohort(np.arange(8))))
+
+    assert set(sim._SUPERSTEP_FNS) == keys, \
+        "population size leaked into the superstep cache key"
+    for k, v in sim._SUPERSTEP_FNS.items():
+        for ln, fn in v.items():
+            want = sizes[k][ln]
+            got = fn._cache_size() if hasattr(fn, "_cache_size") else None
+            assert got == want, \
+                f"superstep len={ln} re-specialized: {want} -> {got}"
+
+
+# ---------------------------------------------------------------------------
+# checkpointed supersteps: mid-sweep preemption + bit-identical resume
+
+
+def test_paged_checkpoint_resume_mid_sweep(fed, model_init, tmp_path):
+    ck, st = str(tmp_path / "ck"), str(tmp_path / "store")
+    base = dict(cohort=4, schedule="sweep", checkpoint_dir=ck, store_dir=st)
+    kw = dict(fl=FL, model_init=model_init, system=SYSTEMS["wired"],
+              keep_state=True)
+
+    h_full = run_federated("fedavg", fed,
+                           paging=PagingConfig(cohort=4, schedule="sweep"),
+                           **kw)
+    # preempt after 2 of 3 supersteps ...
+    h_part = run_federated("fedavg", fed,
+                           paging=PagingConfig(max_chunks=2, **base), **kw)
+    assert len(h_part.rounds) == 2
+    assert h_part.rounds == h_full.rounds[:2]
+    assert h_part.mean_acc == h_full.mean_acc[:2]
+    path = latest_paged_checkpoint(ck)
+    assert path is not None and path.endswith("superstep_000001.msgpack")
+    # ... and resume: the finished run is bit-identical to uninterrupted
+    h_res = run_federated("fedavg", fed,
+                          paging=PagingConfig(resume=True, **base), **kw)
+    assert_history_equal(h_res, h_full)
+    assert_params_equal(h_res.final_params, h_full.final_params)
+    assert_params_equal(h_res.final_opt_state, h_full.final_opt_state)
+    assert h_res.extra["paging"]["resumed_at"] == 2
+
+
+def test_paged_resume_rejects_mismatched_config(fed, model_init, tmp_path):
+    ck = str(tmp_path / "ck")
+    cfg = PagingConfig(cohort=4, schedule="sweep", checkpoint_dir=ck,
+                       max_chunks=1)
+    run_federated("fedavg", fed, fl=FL, model_init=model_init, paging=cfg)
+    with pytest.raises(ValueError, match="different run configuration"):
+        run_federated("fedavg", fed, fl=FL, model_init=model_init, seed=1,
+                      paging=PagingConfig(cohort=4, schedule="sweep",
+                                          checkpoint_dir=ck, resume=True))
+
+
+# ---------------------------------------------------------------------------
+# scale-out: population >> cohort trains end-to-end
+
+
+def test_paged_population_64x_cohort():
+    fed = scenario_label_shift(KEY, n=1600, m=128)
+    fl = FLConfig(rounds=2, local_steps=1, batch_size=8, eval_every=1)
+    h = run_federated("fedavg", fed, fl=fl, keep_state=True,
+                      paging=PagingConfig(cohort=2, schedule="sweep"))
+    pg = h.extra["paging"]
+    assert pg["population"] == 128 and pg["cohort"] == 2
+    assert pg["population"] >= 64 * pg["cohort"]
+    assert len(h.mean_acc) == 2
+    for leaf in jax.tree_util.tree_leaves(h.final_params):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+# ---------------------------------------------------------------------------
+# the paged buffered-async engine: lockstep anchor
+
+
+def test_async_paged_lockstep_parity(fed, model_init):
+    """buffer_k == population on the reliable system: every event is a
+    lockstep round and the store-backed loop must be bit-identical to the
+    resident async runtime."""
+    cfg = AsyncConfig(buffer_k=fed.m)
+    kw = dict(async_cfg=cfg, fl=FL, model_init=model_init, keep_state=True)
+    h_res = run_async("fedavg", fed, **kw)
+    h_pag = run_async("fedavg", fed, paging=PagingConfig(cohort=fed.m), **kw)
+    assert_history_equal(h_pag, h_res)
+    assert_params_equal(h_pag.final_params, h_res.final_params)
+    assert h_pag.extra["async"]["buffer_k"] == fed.m
+    assert h_pag.extra["paging"]["schedule"] == "arrival-buffer"
+
+
+def test_async_paged_partial_buffer_runs(fed, model_init):
+    """Partial arrival buffers (the real async regime): cohort-local
+    aggregation trains and reports finite scores."""
+    h = run_async("ucfl_k2", fed, async_cfg=AsyncConfig(buffer_k=4),
+                  fl=FL, model_init=model_init,
+                  system=SYSTEMS["wireless_fast"],
+                  paging=PagingConfig(cohort=4), keep_state=True)
+    assert len(h.mean_acc) >= 1
+    assert all(np.isfinite(a) for a in h.mean_acc)
+    for leaf in jax.tree_util.tree_leaves(h.final_params):
+        assert np.isfinite(np.asarray(leaf)).all()

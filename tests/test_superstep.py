@@ -27,8 +27,8 @@ from repro.fl.strategies import FullParticipation, get_strategy
 
 KEY = jax.random.PRNGKey(0)
 FL = FLConfig(rounds=5, local_steps=2, batch_size=16, eval_every=2)
-TRACEABLE = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2"]
-EVENTFUL = ["cfl", "fedfomo"]
+TRACEABLE = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2", "fedfomo"]
+EVENTFUL = ["cfl"]
 
 
 @pytest.fixture(scope="module")
@@ -208,8 +208,8 @@ def test_superstep_default_fuses_traceable(fed, monkeypatch):
 
 
 def test_superstep_fallback_eventful_strategies(fed):
-    """cfl/fedfomo transparently run the eventful loop under the default
-    (and match an explicit superstep=False run exactly)."""
+    """cfl transparently runs the eventful loop under the default
+    (and matches an explicit superstep=False run exactly)."""
     fl = FLConfig(rounds=3, local_steps=1, batch_size=16, eval_every=1,
                   cfl_min_rounds=1)
     for spec in EVENTFUL:
