@@ -755,6 +755,108 @@ def serve_bench(requests: int = 128, reps: int = 3, max_batch: int = 16,
     return rows
 
 
+def hierarchy_bench(rounds: int = 12, seed: int = 0):
+    """Flat vs two-level time-to-target under tiered device links
+    (DESIGN.md §3f) -> BENCH_hierarchy.json.
+
+    The §3f FLAT-PARITY ANCHOR RUNS IN-BENCH FIRST, on both placements,
+    for both benchmarked strategies: a ``devices_per_user=1`` hierarchy
+    (identity edge codec, mean aggregation, zero latency) must reproduce
+    the flat engine bit-for-bit — accuracy history, clock, comm_bits AND
+    final params — and the bench RAISES on any divergence, so a headline
+    number can never ship from an edge tier that changed the math.
+
+    Then per strategy: the flat run's final mean accuracy is the TARGET;
+    the two-level run (ragged 2–4-device fleets, qsgd:4 edge codec under
+    a tiered:4 device link, 0.5 T_dl edge latency) charges BOTH hops on
+    the analytic clock and records the virtual time of its first eval
+    reaching the target — the cost of user-side fleets under the paper's
+    user→server round left unchanged.  The two-level run gets a 1.5×
+    round budget (the channel-bench convention): the edge qsgd hop
+    trades rounds for device-side bits, so the question is the CLOCK
+    price of the target, not same-round accuracy.
+    """
+    import jax
+    import numpy as np
+    from repro.data.federated import scenario_covariate_shift
+    from repro.fl import (FLConfig, HierarchyConfig, HostVmap, MeshShardMap,
+                          SYSTEMS, run_federated)
+
+    fed = scenario_covariate_shift(jax.random.PRNGKey(seed), n=1500, m=8)
+    fl = FLConfig(rounds=rounds, local_steps=2, batch_size=32, eval_every=2)
+    specs = ["fedavg", "ucfl_k2"]
+    flat_cfg = HierarchyConfig(devices_per_user=1)
+    placements = [("host_vmap", HostVmap),
+                  ("mesh_shard_map",
+                   lambda: MeshShardMap(schedule="shard_map_streams"))]
+
+    for pname, pfn in placements:
+        for spec in specs:
+            kw = dict(fl=fl, seed=seed, system=SYSTEMS["wired"],
+                      placement=pfn(), keep_state=True)
+            h0 = run_federated(spec, fed, **kw)
+            h1 = run_federated(spec, fed, hierarchy=flat_cfg, **kw)
+            if (h0.mean_acc != h1.mean_acc or h0.worst_acc != h1.worst_acc
+                    or h0.time != h1.time or h0.comm_bits != h1.comm_bits):
+                raise RuntimeError(
+                    f"§3f flat-parity anchor FAILED ({spec} on {pname}): "
+                    "devices_per_user=1 diverged from the flat engine")
+            for la, lb in zip(jax.tree_util.tree_leaves(h0.final_params),
+                              jax.tree_util.tree_leaves(h1.final_params)):
+                if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                    raise RuntimeError(
+                        f"§3f flat-parity anchor FAILED ({spec} on "
+                        f"{pname}): final params diverged")
+            print(f"flat-parity anchor ok: {spec} on {pname}")
+
+    two_cfg = HierarchyConfig(devices_per_user="ragged:2-4",
+                              edge_codec="qsgd:4", edge_link="tiered:4",
+                              edge_latency=0.5, seed=seed)
+    rows = []
+    for spec in specs:
+        h_flat = run_federated(spec, fed, fl=fl, seed=seed,
+                               system=SYSTEMS["wired"])
+        target = h_flat.mean_acc[-1]
+        fl_two = FLConfig(rounds=int(rounds * 1.5), local_steps=2,
+                          batch_size=32, eval_every=2)
+        h_two = run_federated(spec, fed, fl=fl_two, seed=seed,
+                              system=SYSTEMS["wired"], hierarchy=two_cfg)
+        hit = next((t for t, a in zip(h_two.time, h_two.mean_acc)
+                    if a >= target), None)
+        ex = h_two.extra["hierarchy"]
+        rows.append({
+            "strategy": spec, "m": fed.m, "rounds": rounds,
+            "rounds_two_level": fl_two.rounds,
+            "devices_per_user": ex["devices_per_user"],
+            "edge_codec": ex["edge_codec"],
+            "edge_link": ex["edge_link"],
+            "edge_latency": ex["edge_latency"],
+            "target_acc": target,
+            "flat_time": h_flat.time[-1],
+            "two_level_final_acc": h_two.mean_acc[-1],
+            "two_level_time": h_two.time[-1],
+            "time_to_target": hit,
+            "slowdown_at_end": h_two.time[-1] / h_flat.time[-1],
+            "edge_dl_bits_total": ex["edge_dl_bits_total"],
+            "edge_ul_bits_total": ex["edge_ul_bits_total"],
+            "server_dl_bits_total": sum(c.dl_bits for c in h_two.comm_bits),
+            "server_ul_bits_total": sum(c.ul_bits for c in h_two.comm_bits),
+            "parity": "ok",
+        })
+        print(f"{spec:8s} target={target:.3f} "
+              f"flat_t={h_flat.time[-1]:7.1f} "
+              f"two_t={h_two.time[-1]:7.1f} "
+              + (f"to_target={hit:7.1f}" if hit is not None
+                 else "target not reached")
+              + f" edge_ul={ex['edge_ul_bits_total']/1e6:7.1f} Mbit")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_hierarchy.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
@@ -775,6 +877,11 @@ def main(argv=None):
     p.add_argument("--serve", action="store_true",
                    help="personalized serving QPS/latency/store-bytes per "
                         "(placement × codec) — the §3d serve benchmark")
+    p.add_argument("--hierarchy", action="store_true",
+                   help="flat vs two-level time-to-target under tiered "
+                        "device links — the §3f hierarchy benchmark (runs "
+                        "the flat-parity anchor in-bench, raises on "
+                        "divergence)")
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
@@ -790,6 +897,9 @@ def main(argv=None):
         return
     if args.serve:
         serve_bench()
+        return
+    if args.hierarchy:
+        hierarchy_bench()
         return
     # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
     from repro.launch.dryrun import run_case

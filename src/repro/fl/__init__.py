@@ -2,6 +2,9 @@ from repro.fl.channel import (Channel, ChannelCost, Codec, LinkProfile,
                               get_codec, get_link_profile, tree_bits)
 from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
+from repro.fl.hierarchy import (EdgeAggregator, EdgeMeter, EdgeState,
+                                HierarchyConfig, get_edge_aggregator,
+                                register_edge_aggregator, resolve_hierarchy)
 from repro.fl.placement import HostVmap, MeshShardMap, Placement
 from repro.fl.population import (ClientStateStore, CohortSchedule,
                                  FixedCohort, PagingConfig, RandomCohorts,
@@ -25,6 +28,9 @@ __all__ = ["AsyncConfig", "VirtualClock", "run_async",
            "PagingConfig", "RandomCohorts", "SequentialSweep",
            "run_async_paged", "run_paged", "sub_federated",
            "DeltaStore", "ServeEngine", "StoreBits", "check_parity",
+           "EdgeAggregator", "EdgeMeter", "EdgeState", "HierarchyConfig",
+           "get_edge_aggregator", "register_edge_aggregator",
+           "resolve_hierarchy",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",

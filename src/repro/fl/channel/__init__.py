@@ -19,8 +19,9 @@ from dataclasses import dataclass
 from typing import Optional, Union
 
 from repro.fl.channel.codecs import (BACKENDS, CODECS, Adaptive,
-                                     BoundAdaptive, Codec, Identity, QSGD,
-                                     TopK, apply_uplink, get_codec,
+                                     AdaptiveTopK, BoundAdaptive,
+                                     BoundAdaptiveTopK, Codec, Identity,
+                                     QSGD, TopK, apply_uplink, get_codec,
                                      register_codec, uplink_roundtrip,
                                      zeros_like_stack)
 from repro.fl.channel.link import (LINK_FAMILIES, LinkProfile,
@@ -73,7 +74,8 @@ def resolve_channel(channel: Union[str, "Channel", None]
 
 
 __all__ = [
-    "Adaptive", "BACKENDS", "BoundAdaptive", "CODECS", "Channel",
+    "Adaptive", "AdaptiveTopK", "BACKENDS", "BoundAdaptive",
+    "BoundAdaptiveTopK", "CODECS", "Channel",
     "ChannelCost", "Codec", "Identity",
     "LINK_FAMILIES", "LinkProfile", "QSGD", "TopK", "apply_uplink",
     "dtype_bits", "get_codec",

@@ -289,8 +289,11 @@ class Adaptive(Codec):
 
     @property
     def spec(self) -> str:
-        return (self.name if self.min_bits == 2 and self.max_bits == 8
-                else f"{self.name}:{self.min_bits}")
+        if self.max_bits != 8:
+            return f"{self.name}:{self.min_bits}:{self.max_bits}"
+        if self.min_bits != 2:
+            return f"{self.name}:{self.min_bits}"
+        return self.name
 
     def payload_bits(self, tree: Any) -> int:
         raise RuntimeError(
@@ -376,9 +379,128 @@ class BoundAdaptive(Codec):
                 f"bits=[{self.bits.min()}..{self.bits.max()}])")
 
 
+@register_codec
+class AdaptiveTopK(Codec):
+    """Rate-adaptive top-k sparsification (DESIGN.md §3b): each client's
+    kept-coordinate count is picked from its `LinkProfile` so that every
+    upload fits the time budget of the slowest client sending the minimum
+    fraction — the sparsity sibling of `Adaptive`'s bit-width headroom
+    rule.  Biased like `topk`; run it with error feedback.
+
+    Spec grammar: ``adaptive_topk`` (frac ∈ [0.05, 1]),
+    ``adaptive_topk:<min_frac>`` to raise the floor, or
+    ``adaptive_topk:<min_frac>:<max_frac>`` to also cap the ceiling.
+    The instance the engines run is produced by `bind_link`; using an
+    UNBOUND adaptive codec's value path is an error.  On a uniform
+    profile every client lands exactly on the floor k, so the charge
+    (and, on the threshold backend, the values) equal
+    ``topk:<min_frac>``.
+    """
+
+    name = "adaptive_topk"
+
+    def __init__(self, min_frac: float = 0.05, max_frac: float = 1.0):
+        if not 0.0 < float(min_frac) <= float(max_frac) <= 1.0:
+            raise ValueError("adaptive_topk fracs must satisfy 0 < min <= "
+                             f"max <= 1, got [{min_frac}, {max_frac}]")
+        self.min_frac = float(min_frac)
+        self.max_frac = float(max_frac)
+
+    @property
+    def spec(self) -> str:
+        if self.max_frac != 1.0:
+            return f"{self.name}:{self.min_frac:g}:{self.max_frac:g}"
+        if self.min_frac != 0.05:
+            return f"{self.name}:{self.min_frac:g}"
+        return self.name
+
+    def payload_bits(self, tree: Any) -> int:
+        raise RuntimeError(
+            "adaptive_topk codec is link-dependent: the engines bind it "
+            "via Channel(link_profile=...) -> init_channel; call "
+            "bind_link(link, tree) first")
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        raise RuntimeError("adaptive_topk codec is link-dependent; "
+                           "bind_link(link, tree) first")
+
+    def bind_link(self, link: Any, tree: Any) -> "Codec":
+        d = tree_size(tree)
+        k_of = lambda frac: max(1, min(d, int(math.ceil(frac * d))))
+        k_min, k_max = k_of(self.min_frac), k_of(self.max_frac)
+        # uplink bits per T_dl of client i; the budget is the slowest
+        # client transmitting the minimum fraction — nobody is ever
+        # charged more than the fixed topk:<min_frac> round would charge
+        rate = np.asarray(link.dl_rate, np.float64) / np.asarray(
+            link.ul_ratio, np.float64)
+        budget = (k_min * 64) / rate.min()
+        ks = np.floor(budget * rate / 64.0)
+        ks = np.clip(ks, k_min, k_max).astype(np.int64)
+        return BoundAdaptiveTopK(self.spec, ks)
+
+
+class BoundAdaptiveTopK(Codec):
+    """`AdaptiveTopK` specialized to one resolved link: a per-client
+    kept-coordinate vector.  NOT registered — only
+    `AdaptiveTopK.bind_link` constructs it.  Equality/hash fold in the k
+    vector: runs over different link profiles never share a compiled
+    superstep or uplink jit."""
+
+    name = "adaptive_topk"
+
+    def __init__(self, spec: str, ks: np.ndarray):
+        self._spec = str(spec)
+        self.ks = np.asarray(ks, np.int64)
+
+    @property
+    def spec(self) -> str:
+        return self._spec
+
+    def bind_link(self, link: Any, tree: Any) -> "Codec":
+        return self                       # already bound — idempotent
+
+    def payload_bits(self, tree: Any) -> int:
+        """Scalar (downlink/broadcast) payload: charge the LARGEST
+        assigned k — the per-client uplink truth is `per_client_bits`."""
+        return int(self.ks.max()) * (32 + 32)
+
+    def per_client_bits(self, tree: Any, m: int) -> np.ndarray:
+        if m != self.ks.shape[0]:
+            raise ValueError(f"bound for m={self.ks.shape[0]} clients, "
+                             f"asked for {m}")
+        return self.ks * (32 + 32)
+
+    def roundtrip(self, flat, key, *, backend="pallas"):
+        """Per-row k-th-magnitude threshold — `TopK`'s pallas-path
+        semantics (ties at the threshold all kept) with the scalar k
+        replaced by a per-row column.  Pure jnp on BOTH backends: the
+        threshold kernel bakes a scalar k into its grid, and a sort is
+        what a per-row k needs anyway.  Rows whose k equals ``topk``'s
+        are value-identical to the threshold backend."""
+        a = jnp.abs(flat)
+        srt = jnp.sort(a, axis=1)[:, ::-1]            # descending
+        rows = jnp.arange(flat.shape[0])
+        thr = srt[rows, jnp.asarray(self.ks - 1)][:, None]
+        return jnp.where(a >= thr, flat, 0.0)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, BoundAdaptiveTopK)
+                and self._spec == other._spec
+                and self.ks.shape == other.ks.shape
+                and bool(np.all(self.ks == other.ks)))
+
+    def __hash__(self) -> int:
+        return hash((self._spec, self.ks.tobytes()))
+
+    def __repr__(self) -> str:
+        return (f"BoundAdaptiveTopK({self._spec!r}, "
+                f"ks=[{self.ks.min()}..{self.ks.max()}])")
+
+
 def get_codec(spec) -> Codec:
-    """``"identity" | "qsgd:<bits>" | "topk:<frac>" | "adaptive[:<min>]"``
-    -> Codec instance (instances pass through)."""
+    """``"identity" | "qsgd:<bits>" | "topk:<frac>" | "adaptive[:<min>
+    [:<max>]]" | "adaptive_topk[:<min>[:<max>]]"`` -> Codec instance
+    (instances pass through).  Multi-parameter specs split on ``:``."""
     if isinstance(spec, Codec):
         return spec
     family, _, param = str(spec).partition(":")
@@ -388,11 +510,15 @@ def get_codec(spec) -> Codec:
                          f"{sorted(CODECS)}")
     if not param:
         return cls()
+    conv = int if family in ("qsgd", "adaptive") else float
     try:
-        arg = int(param) if family in ("qsgd", "adaptive") else float(param)
+        args = [conv(p) for p in param.split(":")]
     except ValueError:
         raise ValueError(f"bad codec parameter in {spec!r}") from None
-    return cls(arg)
+    try:
+        return cls(*args)
+    except TypeError:
+        raise ValueError(f"too many parameters in {spec!r}") from None
 
 
 # ---------------------------------------------------------------------------

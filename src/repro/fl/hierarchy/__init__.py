@@ -1,0 +1,34 @@
+"""Hierarchical edge-aggregation tier (DESIGN.md §3f).
+
+Each user owns a heterogeneous device fleet: every engine round first
+runs an edge sub-round (per-device local updates, device→user uplinks
+through the edge codec with error feedback, `EdgeAggregator` weighting)
+and the resulting user pseudo-update feeds the existing user→server
+round unchanged — all registered strategies run two-level unmodified.
+
+    run_federated("ucfl_k2", fed,
+                  hierarchy=HierarchyConfig(devices_per_user="ragged:2-4",
+                                            edge_link="tiered:4",
+                                            edge_codec="qsgd:4"))
+
+``hierarchy=HierarchyConfig(devices_per_user=1)`` (identity edge codec,
+mean aggregator, zero latency) is bit-identical to the flat engine on
+both placements — the §3f parity anchor.
+"""
+from repro.fl.hierarchy.config import (HierarchyConfig, partition_fleet_data,
+                                       resolve_fleet_spec, resolve_hierarchy)
+from repro.fl.hierarchy.edge import (EDGE_AGGREGATORS, DropStragglers,
+                                     EdgeAggregator, EdgeState, MeanEdge,
+                                     build_fleet_update, cached_fleet_update,
+                                     get_edge_aggregator,
+                                     register_edge_aggregator)
+from repro.fl.hierarchy.meter import (EdgeMeter, FleetPlan, fleet_plan,
+                                      init_fleet_run)
+
+__all__ = [
+    "EDGE_AGGREGATORS", "DropStragglers", "EdgeAggregator", "EdgeMeter",
+    "EdgeState", "FleetPlan", "HierarchyConfig", "MeanEdge",
+    "build_fleet_update", "cached_fleet_update", "fleet_plan",
+    "get_edge_aggregator", "init_fleet_run", "partition_fleet_data",
+    "register_edge_aggregator", "resolve_fleet_spec", "resolve_hierarchy",
+]

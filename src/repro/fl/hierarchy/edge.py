@@ -1,0 +1,330 @@
+"""Edge sub-round: per-device local updates + edge aggregation (§3f).
+
+`build_fleet_update` compiles the whole edge sub-round of one user fleet
+into a drop-in replacement for the engine's per-user update step — same
+``update_fn(stacked, opt_state, x, y, n, ckeys) -> (stacked', opt_state')``
+signature, with the device axis nested INSIDE: params/opt broadcast to
+(m, d_max, ...), a ``vmap(vmap(client_update))`` over (user, device), the
+device→user uplink through the edge codec with per-device error feedback,
+and the `EdgeAggregator`'s weighted combine back to the (m, ...) user
+stack.  The engine (sync, superstep, async) never learns about devices:
+`EdgeState` rides in the opt-state slot, which the engine treats as
+opaque, so sampler rollback, scan carries, donation and async cohort
+gathers all work unchanged.
+
+Flat-parity discipline (the PR 3–7 anchor rule): with one device per
+user, the identity edge codec, the mean aggregator and no dropout, the
+edge tier is MATHEMATICALLY the identity — and it is implemented AS the
+identity (a degenerate shortcut running the flat per-user step on
+squeezed views), because ``prev + 1.0·(new − prev)`` is not ``new`` in
+IEEE-754.  Same precedent as `apply_uplink` returning its inputs
+untouched for identity codecs.
+
+Key derivation: per-device minibatch keys are ``vmap(split(·, d_max))``
+of the engine's per-user keys; the edge codec key is
+``fold_in(ckeys[0], 0x65646765)`` ("edge") and the device-dropout key its
+``fold_in(·, 1)`` — disjoint from the engine's reserved indices 1
+(strategy) and 2 (server codec), and never drawn on the flat path.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+import math
+from typing import Any, ClassVar, Dict, NamedTuple, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.channel import stacked_ravel, stacked_unravel
+
+_EDGE_SALT = 0x65646765     # "edge" — the edge codec's fold_in index
+
+
+class EdgeState(NamedTuple):
+    """The hierarchy run's opt-state slot: per-device optimizer states
+    (m, d_max, ...) plus the per-device edge-EF residual stack (None for
+    identity edge codecs).  Every leaf keeps the user axis leading, so
+    the engine's row-wise select/gather/scatter machinery applies
+    unchanged."""
+    dev_opt: Any
+    edge_ef: Any
+
+
+class EdgeAggregator(abc.ABC):
+    """How a user combines its devices' decoded updates (DESIGN.md §3f).
+
+    ``weights(n, mask)`` is the traced rule: per-device sample counts
+    (m, d_max) + participation mask -> normalized weight matrix (rows sum
+    to 1 over surviving devices, all-zero rows when a user's whole fleet
+    dropped — that user keeps its previous model).  Aggregators with
+    host-side weighting set ``traceable=False`` and implement
+    ``weights_host`` instead; the engine then routes the run through the
+    eventful loop (same fallback contract as non-traceable strategies).
+    ``static_keep`` may bake a host-side device-drop mask from the
+    resolved fleet/rates (straggler dropping) — returning one marks the
+    update non-row-local, so partial async events take the full-width
+    update path."""
+
+    name: ClassVar[str]
+    traceable: ClassVar[bool] = True
+
+    @property
+    def spec(self) -> str:
+        return self.name
+
+    def static_keep(self, counts: np.ndarray, valid: np.ndarray,
+                    rates_dl: Optional[np.ndarray]) -> Optional[np.ndarray]:
+        """(m, d_max) bool device-keep mask resolved at plan time, or None
+        (keep every valid device; the row-local default)."""
+        return None
+
+    def weights(self, n: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+        """Traced (m, d_max) normalized weights; pure jnp."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets traceable=True but does not "
+            "implement weights")
+
+    def weights_host(self, n: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Host-side sibling for ``traceable=False`` aggregators."""
+        raise NotImplementedError(
+            f"{type(self).__name__} sets traceable=False but does not "
+            "implement weights_host")
+
+    # value objects: spec identity drives the fleet-update jit cache
+    def __eq__(self, other) -> bool:
+        return isinstance(other, EdgeAggregator) and self.spec == other.spec
+
+    def __hash__(self) -> int:
+        return hash((type(self).__name__, self.spec))
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+EDGE_AGGREGATORS: Dict[str, Type[EdgeAggregator]] = {}
+
+
+def register_edge_aggregator(cls: Type[EdgeAggregator]
+                             ) -> Type[EdgeAggregator]:
+    EDGE_AGGREGATORS[cls.name] = cls
+    return cls
+
+
+@register_edge_aggregator
+class MeanEdge(EdgeAggregator):
+    """Sample-weighted mean over surviving devices (the FedAvg-at-the-edge
+    default): w_id ∝ n_id · mask_id, rows normalized; a row with no
+    survivors aggregates nothing (all-zero weights)."""
+
+    name = "mean"
+
+    def weights(self, n, mask):
+        wn = n.astype(jnp.float32) * mask.astype(jnp.float32)
+        s = jnp.sum(wn, axis=1, keepdims=True)
+        return jnp.where(s > 0.0, wn / jnp.maximum(s, 1e-12), 0.0)
+
+
+@register_edge_aggregator
+class DropStragglers(MeanEdge):
+    """Mean weighting after statically dropping each user's slowest
+    ``frac`` of devices (never its last one): ranked by edge downlink
+    rate when an edge link is resolved, by device index (tail first)
+    otherwise.  The keep mask is baked per-user at plan time, so partial
+    async events fall back to the full-width update path
+    (``row_local=False`` in the plan)."""
+
+    name = "drop_stragglers"
+
+    def __init__(self, frac: float = 0.5):
+        if not 0.0 <= float(frac) < 1.0:
+            raise ValueError("drop_stragglers frac must be in [0, 1), "
+                             f"got {frac}")
+        self.frac = float(frac)
+
+    @property
+    def spec(self) -> str:
+        return f"{self.name}:{self.frac:g}"
+
+    def static_keep(self, counts, valid, rates_dl):
+        keep = np.asarray(valid, bool).copy()
+        for i in range(keep.shape[0]):
+            c = int(counts[i])
+            n_drop = min(c - 1, int(math.floor(self.frac * c)))
+            if n_drop <= 0:
+                continue
+            devs = np.arange(c)
+            if rates_dl is not None:
+                order = devs[np.argsort(rates_dl[i, :c], kind="stable")]
+            else:
+                order = devs[::-1]
+            keep[i, order[:n_drop]] = False
+        return keep
+
+
+def get_edge_aggregator(spec) -> EdgeAggregator:
+    """``"mean" | "drop_stragglers:<frac>"`` -> EdgeAggregator (instances
+    pass through)."""
+    if isinstance(spec, EdgeAggregator):
+        return spec
+    family, _, param = str(spec).partition(":")
+    cls = EDGE_AGGREGATORS.get(family)
+    if cls is None:
+        raise ValueError(f"unknown edge aggregator {spec!r}; one of "
+                         f"{sorted(EDGE_AGGREGATORS)}")
+    if not param:
+        return cls()
+    try:
+        return cls(float(param))
+    except TypeError:
+        raise ValueError(f"edge aggregator {family!r} takes no "
+                         "parameter") from None
+    except ValueError as e:
+        if "could not convert" in str(e):
+            raise ValueError(
+                f"bad edge-aggregator parameter in {spec!r}") from None
+        raise
+
+
+# ---------------------------------------------------------------------------
+# the fleet update step
+
+
+def _squeeze_device_axis(tree):
+    return jax.tree_util.tree_map(
+        lambda l: l.reshape((l.shape[0],) + l.shape[2:]), tree)
+
+
+def _unsqueeze_device_axis(tree):
+    return jax.tree_util.tree_map(
+        lambda l: l.reshape((l.shape[0], 1) + l.shape[1:]), tree)
+
+
+def build_fleet_update(plan, client_update, *, backend: str,
+                       edge_hook=None, donate: bool = False):
+    """The edge sub-round as ONE engine-shaped update step; see module
+    docstring.  ``plan`` is the resolved `FleetPlan`; ``client_update`` the
+    per-client local-SGD step (`make_client_update`); ``edge_hook`` an
+    optional traced weight refiner (`Strategy.edge_weights`, only passed
+    when a strategy overrides it)."""
+    cfg = plan.cfg
+    codec, agg = plan.codec, cfg.edge_aggregator
+    D = plan.d_max
+    tm = jax.tree_util.tree_map
+
+    if plan.flat_exact and edge_hook is None:
+        # D == 1, identity edge codec, mean weights, no dropout: the edge
+        # tier is the identity and runs AS the flat per-user step on
+        # squeezed (m, ...) views — prev + 1.0·(new − prev) would NOT be
+        # bit-equal to new, so the shortcut is what makes the flat-parity
+        # anchor exact (edge latency/link stay meter-only and don't break
+        # eligibility)
+        def fleet_update(stacked, est, x, y, n, ckeys):
+            new_p, new_o = jax.vmap(client_update)(
+                stacked, _squeeze_device_axis(est.dev_opt),
+                _squeeze_device_axis(x), _squeeze_device_axis(y),
+                _squeeze_device_axis(n), ckeys)
+            return new_p, EdgeState(_unsqueeze_device_axis(new_o),
+                                    est.edge_ef)
+
+        return jax.jit(fleet_update,
+                       donate_argnums=(0, 1) if donate else ())
+
+    keep_const = None if plan.keep is None else jnp.asarray(plan.keep)
+
+    def device_phase(stacked, est, x, y, n, ckeys):
+        """Per-device local updates + the edge channel crossing: returns
+        (new_dev_opt, decoded per-device deltas, new edge EF, mask)."""
+        dkeys = jax.vmap(lambda k: jax.random.split(k, D))(ckeys)
+        dev_prev = tm(lambda l: jnp.broadcast_to(
+            l[:, None], (l.shape[0], D) + l.shape[1:]), stacked)
+        new_dev, new_opt = jax.vmap(jax.vmap(client_update))(
+            dev_prev, est.dev_opt, x, y, n, dkeys)
+        delta = tm(jnp.subtract, new_dev, dev_prev)
+        ekey = jax.random.fold_in(ckeys[0], _EDGE_SALT)
+        if codec.is_identity:
+            dec, new_ef = delta, est.edge_ef
+        else:
+            # same EF algebra as the user→server hop (§3b), on the
+            # (m·d_max, F) device-flat view — each DEVICE is one codec row
+            v = tm(jnp.add, delta, est.edge_ef)
+            merged = tm(lambda l: l.reshape((-1,) + l.shape[2:]), v)
+            flat = stacked_ravel(merged)
+            dec_flat = codec.roundtrip(flat, ekey, backend=backend)
+            dec = tm(lambda a, b: a.reshape(b.shape),
+                     stacked_unravel(dec_flat, merged), v)
+            new_ef = (tm(jnp.subtract, v, dec)
+                      if cfg.edge_error_feedback else est.edge_ef)
+        # validity is derived IN-TRACE from n > 0 (row-local: survives the
+        # async cohort gather); the static straggler mask, if any, marks
+        # the plan non-row-local and async partial events go full-width
+        mask = n > 0
+        if keep_const is not None:
+            mask = mask & keep_const
+        if cfg.device_dropout > 0.0:
+            up = jax.random.bernoulli(jax.random.fold_in(ekey, 1),
+                                      1.0 - cfg.device_dropout, mask.shape)
+            mask = mask & up
+        return new_opt, dec, new_ef, mask
+
+    def combine(stacked, dec, w):
+        wf = w.astype(jnp.float32)
+
+        def leaf(p, dl):
+            wexp = wf.reshape(wf.shape + (1,) * (dl.ndim - 2))
+            return (p + jnp.sum(wexp * dl, axis=1)).astype(p.dtype)
+
+        return tm(leaf, stacked, dec)
+
+    if agg.traceable:
+        def fleet_update(stacked, est, x, y, n, ckeys):
+            new_opt, dec, new_ef, mask = device_phase(stacked, est,
+                                                      x, y, n, ckeys)
+            w = agg.weights(n, mask)
+            if edge_hook is not None:
+                w = edge_hook(w, n)
+            return combine(stacked, dec, w), EdgeState(new_opt, new_ef)
+
+        return jax.jit(fleet_update,
+                       donate_argnums=(0, 1) if donate else ())
+
+    # eventful fallback (host-side edge weighting): jitted device phase,
+    # host weights, jitted combine — no donation (the host crossing keeps
+    # both sides alive) and no superstep (`superstep_support` routes the
+    # run to the per-round loop)
+    if edge_hook is not None:
+        raise ValueError(
+            f"strategy edge_weights hooks are traced; edge aggregator "
+            f"{agg.spec!r} weights host-side (traceable=False)")
+    phase_jit = jax.jit(device_phase)
+    combine_jit = jax.jit(combine)
+
+    def fleet_update(stacked, est, x, y, n, ckeys):
+        new_opt, dec, new_ef, mask = phase_jit(stacked, est, x, y, n, ckeys)
+        w = agg.weights_host(np.asarray(n), np.asarray(mask))
+        new_stacked = combine_jit(stacked, dec,
+                                  jnp.asarray(w, dtype=jnp.float32))
+        return new_stacked, EdgeState(new_opt, new_ef)
+
+    return fleet_update
+
+
+@functools.lru_cache(maxsize=16)
+def cached_fleet_update(backend: str, loss_fn, local_steps: int,
+                        batch_size: int, lr: float, momentum: float,
+                        state_dtype, donate: bool, plan, edge_hook=None):
+    """(opt, fleet update step) memoized like `cached_update` — the plan's
+    hash folds in fleet shape, static keep mask and the BOUND edge codec,
+    so two runs over different fleets/links never share an executable
+    while sweeps re-entering with one config reuse theirs.  The returned
+    step's OBJECT identity also keys the superstep cache
+    (`_superstep_cache`), giving each hierarchy config its own fused
+    program for free."""
+    from repro.fl.placement.host import _UpdateConfig, make_client_update
+    from repro.optim import sgd
+    opt = sgd(lr, momentum=momentum, state_dtype=state_dtype)
+    client_update = make_client_update(
+        loss_fn, opt, _UpdateConfig(local_steps, batch_size))
+    return opt, build_fleet_update(plan, client_update, backend=backend,
+                                   edge_hook=edge_hook, donate=donate)

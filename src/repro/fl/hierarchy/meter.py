@@ -1,0 +1,217 @@
+"""Fleet resolution + edge-hop accounting (DESIGN.md §3f).
+
+`fleet_plan` resolves a `HierarchyConfig` against one run — per-user
+device counts, the static validity/straggler masks, the edge link at
+m·d_max reshaped (m, d_max), the BOUND edge codec (rate-adaptive edge
+codecs pick their per-device parameters here, same precedent as
+`init_channel`) and the per-user edge sub-round time.  The plan is the
+single resolution point: the fleet update step closes over it, and the
+`EdgeMeter` charges from it, so the two cannot drift.
+
+`EdgeMeter` owns the device→user hop's books: per-round `ChannelCost`
+(every participating device uploads one edge payload and downloads the
+user model once per sub-round) and the edge time charged to BOTH clocks —
+the sync engine adds ``max over participating users`` of the per-user
+edge time to each round (`charge_round(edge=...)`), the async engine adds
+each user's own edge time to its arrival draw (`VirtualClock.schedule
+(extra=...)``).  With no edge link and zero latency every charge is
+exactly 0.0 — `t + 0.0` is bit-exact, preserving the flat-parity anchor.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedData
+from repro.fl.channel import (ChannelCost, LinkProfile, get_link_profile,
+                              tree_bits)
+from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.hierarchy.config import (HierarchyConfig, partition_fleet_data,
+                                       resolve_fleet_spec)
+from repro.fl.hierarchy.edge import EdgeState, cached_fleet_update
+
+
+class FleetPlan:
+    """One run's resolved hierarchy (see module docstring).  Hashable by
+    (config, counts, keep mask, bound codec) — the fleet-update cache key."""
+
+    def __init__(self, cfg: HierarchyConfig, m: int, params0: Any,
+                 system: Optional[SystemModel]):
+        self.cfg = cfg
+        self.counts = resolve_fleet_spec(cfg.devices_per_user, m,
+                                         seed=cfg.seed)
+        self.m = m
+        self.d_max = int(self.counts.max())
+        self.valid = (np.arange(self.d_max)[None, :]
+                      < self.counts[:, None])
+        self.model_bits = tree_bits(params0)
+        sysm = SYSTEMS["wired"] if system is None else system
+        n_dev = m * self.d_max
+        self.link = (get_link_profile(cfg.edge_link, sysm,
+                                      self.model_bits, n_dev)
+                     if cfg.edge_link is not None else None)
+        # rate-adaptive edge codecs bind per-DEVICE (row = one device);
+        # with no edge link they bind against the uniform from_system
+        # profile and collapse to their minimum spec (the §3b precedent)
+        bind_target = (self.link if self.link is not None
+                       else LinkProfile.from_system(sysm, self.model_bits,
+                                                    n_dev))
+        self.codec = cfg.edge_codec.bind_link(bind_target, params0)
+        self.payload_bits = int(self.codec.payload_bits(params0))
+        self.pc_bits = np.asarray(
+            self.codec.per_client_bits(params0, n_dev),
+            np.int64).reshape(m, self.d_max)
+        self.rates_dl = (self.link.dl_rate.reshape(m, self.d_max)
+                         if self.link is not None else None)
+        self.keep = cfg.edge_aggregator.static_keep(
+            self.counts, self.valid, self.rates_dl)
+        self.participating = (self.valid if self.keep is None
+                              else (self.valid & self.keep))
+        if self.link is not None:
+            ratio = self.link.ul_ratio.reshape(m, self.d_max)
+            hop = (self.payload_bits / self.rates_dl
+                   + self.pc_bits * ratio / self.rates_dl)
+            self.user_time = (float(cfg.edge_latency)
+                              + np.where(self.participating, hop,
+                                         0.0).max(axis=1))
+        else:
+            self.user_time = np.full(m, float(cfg.edge_latency))
+
+    @property
+    def row_local(self) -> bool:
+        """Whether the fleet update is a pure row function of its inputs
+        (no baked per-user constants): False under static straggler
+        dropping — partial async events then take the full-width path."""
+        return self.keep is None
+
+    @property
+    def flat_exact(self) -> bool:
+        """Whether the fleet update may take the bit-exact flat shortcut
+        (`repro.fl.hierarchy.edge`): latency/link stay out of the
+        condition — they are meter-only and never touch the values."""
+        return (self.d_max == 1 and self.codec.is_identity
+                and self.cfg.edge_aggregator.spec == "mean"
+                and self.cfg.device_dropout == 0.0)
+
+    def _key(self):
+        return (self.cfg, self.m, self.counts.tobytes(),
+                None if self.keep is None else self.keep.tobytes(),
+                self.codec)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, FleetPlan) and self._key() == other._key()
+
+    def __hash__(self) -> int:
+        return hash(self._key())
+
+    def __repr__(self) -> str:
+        return (f"FleetPlan(m={self.m}, d_max={self.d_max}, "
+                f"codec={self.codec.spec!r}, "
+                f"agg={self.cfg.edge_aggregator.spec!r})")
+
+
+def fleet_plan(cfg: HierarchyConfig, m: int, params0: Any,
+               system: Optional[SystemModel]) -> FleetPlan:
+    return FleetPlan(cfg, m, params0, system)
+
+
+class EdgeMeter:
+    """Per-round books of the device→user hop; built once per run from
+    the plan (`run_federated`/`run_async` attach `extra()` as
+    ``History.extra["hierarchy"]``)."""
+
+    def __init__(self, plan: FleetPlan):
+        self.plan = plan
+        part = plan.participating
+        self._n_dev = part.sum(axis=1).astype(np.int64)
+        self._dl = self._n_dev * plan.payload_bits
+        self._ul = np.where(part, plan.pc_bits, 0).sum(axis=1)
+        self.user_time = plan.user_time
+        self.costs: List[ChannelCost] = []
+
+    def charge(self, mask_np: Optional[np.ndarray]) -> float:
+        """One sync round's edge hop: records the participating users'
+        device bits, returns the round's edge time (slowest participating
+        user's sub-round — the analytic-clock sibling of the per-arrival
+        charging in async)."""
+        if mask_np is None:
+            idx = slice(None)
+            empty = self._dl.size == 0
+        else:
+            idx = np.where(mask_np)[0]
+            empty = idx.size == 0
+        if empty:
+            self.costs.append(ChannelCost(0, 0))
+            return 0.0
+        self.costs.append(ChannelCost(int(self._dl[idx].sum()),
+                                      int(self._ul[idx].sum())))
+        return float(self.user_time[idx].max())
+
+    def charge_event(self, buffered) -> None:
+        """One async event's edge hop (bits only — each arrival's edge
+        TIME is already inside its clock draw via ``schedule(extra=)``):
+        every buffered user ran one edge sub-round before uploading."""
+        idx = np.asarray(buffered, np.int64)
+        self.costs.append(ChannelCost(int(self._dl[idx].sum()),
+                                      int(self._ul[idx].sum())))
+
+    def time_of(self, client: int) -> float:
+        """User's edge sub-round time — the async arrival's ``extra``."""
+        return float(self.user_time[client])
+
+    def extra(self) -> dict:
+        plan = self.plan
+        return {
+            "devices_per_user": plan.counts.tolist(),
+            "d_max": plan.d_max,
+            "edge_codec": plan.codec.spec,
+            "edge_aggregator": plan.cfg.edge_aggregator.spec,
+            "edge_error_feedback": bool(plan.cfg.edge_error_feedback),
+            "edge_link": (plan.link.name if plan.link is not None
+                          else None),
+            "edge_latency": float(plan.cfg.edge_latency),
+            "device_dropout": float(plan.cfg.device_dropout),
+            "edge_payload_bits": plan.payload_bits,
+            "user_edge_time": plan.user_time.tolist(),
+            # the device→user hop's per-round bits — `History.comm_bits`
+            # stays the user→server hop, so the two hops stay separable
+            "comm_bits": list(self.costs),
+            "edge_dl_bits_total": int(sum(c.dl_bits for c in self.costs)),
+            "edge_ul_bits_total": int(sum(c.ul_bits for c in self.costs)),
+        }
+
+
+def init_fleet_run(cfg: HierarchyConfig, placement, loss_fn, fl,
+                   fed: FederatedData, params0: Any, *,
+                   system: Optional[SystemModel], donate: bool,
+                   strategy=None):
+    """Hierarchy sibling of the `init_run` placement block: resolves the
+    plan, builds/caches the fleet update, places the device-partitioned
+    data and the (m, d_max, ...) `EdgeState`.  Returns
+    ``(update_fn, stacked, opt_state, data, plan)``."""
+    from repro.fl.strategies import Strategy
+    m = fed.m
+    plan = fleet_plan(cfg, m, params0, system)
+    edge_hook = None
+    if (strategy is not None
+            and type(strategy).edge_weights is not Strategy.edge_weights):
+        edge_hook = strategy.edge_weights
+    opt, update_fn = cached_fleet_update(
+        placement.codec_backend, loss_fn, fl.local_steps, fl.batch_size,
+        fl.lr, fl.momentum, getattr(fl, "opt_state_dtype", None),
+        donate, plan, edge_hook)
+    stacked = placement.stack(params0, m)
+    dev0 = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[:, None],
+                                   (l.shape[0], plan.d_max) + l.shape[1:]),
+        stacked)
+    dev_opt = jax.vmap(jax.vmap(opt.init))(dev0)
+    edge_ef = (None if plan.codec.is_identity else
+               jax.tree_util.tree_map(
+                   lambda l: jnp.zeros(l.shape, jnp.float32), dev0))
+    data = placement.place_fleet(
+        partition_fleet_data(fed, plan.counts, plan.d_max), m)
+    return update_fn, stacked, EdgeState(dev_opt, edge_ef), data, plan

@@ -88,6 +88,15 @@ class Placement(abc.ABC):
         Host default: identity."""
         return tree
 
+    def place_fleet(self, tree: Any, m: int) -> Any:
+        """Place device-partitioned (m, d_max, ...) fleet arrays (the
+        hierarchy tier's nested device axis, DESIGN.md §3f).  Dim 0 is the
+        USER axis on every backend — HostVmap device_puts the stack and
+        vmaps (user, device); MeshShardMap shards users across the mesh
+        and the device axis rides inside each shard — so the default
+        `stage` placement is exactly right on both."""
+        return self.stage(tree, m)
+
     def select(self, mask: jnp.ndarray, new: Any, old: Any) -> Any:
         """Participation rollback: keep `old` where ``mask`` is False."""
         return where_clients(mask, new, old)

@@ -57,17 +57,22 @@ class VirtualClock:
         self._busy_until = 0.0      # downlink occupied through this time
 
     def schedule(self, client: int, start: float,
-                 ul_bits: Optional[float] = None) -> float:
+                 ul_bits: Optional[float] = None,
+                 extra: float = 0.0) -> float:
         """Client downloads at ``start``; returns its sampled arrival time.
 
         ``ul_bits`` (with a ``link`` profile) charges the client's own
-        uplink ``bits·ρ_i/rate_i`` instead of the homogeneous ρ."""
+        uplink ``bits·ρ_i/rate_i`` instead of the homogeneous ρ.
+        ``extra`` adds a deterministic per-client term BEFORE the compute
+        draw — the hierarchy tier's edge sub-round time (DESIGN.md §3f);
+        the default 0.0 is bit-exact (``start + 0.0 == start``), so the
+        flat clock is unchanged and the draw sequence never shifts."""
         compute = self.system.sample_compute_time(self._rng)
         if self.link is not None and ul_bits is not None:
             uplink = self.link.uplink_time(client, ul_bits)
         else:
             uplink = self.system.rho
-        t = start + compute + uplink
+        t = start + extra + compute + uplink
         heapq.heappush(self._heap, (t, int(client)))
         return t
 

@@ -105,6 +105,7 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
               channel: Union[str, Channel, None] = None,
               keep_state: bool = False,
               paging: Optional[Any] = None,
+              hierarchy: Optional[Any] = None,
               seed: int = 0) -> History:
     """Run `fl.rounds` buffered-async aggregation events; returns History.
 
@@ -115,9 +116,17 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     (DESIGN.md §3b) adds uplink compression, bit accounting and per-client
     link timing on top of it.  ``paging`` (a `PagingConfig`) switches to
     the store-backed event loop (DESIGN.md §3e): only each event's
-    arrival buffer is device-resident.
+    arrival buffer is device-resident.  ``hierarchy`` (DESIGN.md §3f)
+    nests an edge sub-round inside every client upload: device uploads
+    buffer at the user's edge, the user's pseudo-update is what arrives
+    at the server, and each arrival's clock draw carries the user's edge
+    sub-round time as a deterministic ``extra`` term.
     """
     if paging is not None:
+        if hierarchy is not None:
+            raise TypeError("the hierarchy tier does not compose with the "
+                            "cohort paging engine yet (the store pages "
+                            "flat client rows, not device fleets)")
         from repro.fl.population import run_async_paged
         return run_async_paged(algorithm, fed, paging=paging,
                                strategy=strategy, async_cfg=async_cfg,
@@ -141,11 +150,19 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     k_buf = min(cfg.buffer_k, m)
     tau = np.inf if cfg.max_staleness is None else float(cfg.max_staleness)
 
+    if hierarchy is not None:
+        from repro.fl.hierarchy import resolve_hierarchy
+        hierarchy = resolve_hierarchy(hierarchy)
+
     # identical init path to the sync engine (bit-equivalence anchor); no
     # donation — every event rolls in-flight clients back against `prev`
     key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
-                 placement, seed)
+                 placement, seed, hierarchy=hierarchy, system=system)
+    meter = None
+    if hierarchy is not None:
+        from repro.fl.hierarchy import EdgeMeter
+        meter = EdgeMeter(ctx.hierarchy_plan)
     ctx.staleness_discount = cfg.staleness_discount
     ctx.staleness_schedule = cfg.staleness_schedule
     ctx.staleness_alpha = cfg.staleness_alpha
@@ -161,8 +178,15 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     # below stays exactly the sync engine's; the link profile (if any)
     # swaps the homogeneous ρ uplink for each client's own payload/rate
     clock = VirtualClock(system, seed=seed, link=link)
+
+    def _edge_time(c: int) -> float:
+        # the device fleet's sub-round runs before the user's own compute
+        # begins — a deterministic add to the arrival draw (§3f); 0.0
+        # without a hierarchy, which is bit-exact in the clock
+        return meter.time_of(c) if meter is not None else 0.0
+
     for i in range(m):
-        clock.schedule(i, 0.0, ul_bits=_ul_bits(i))
+        clock.schedule(i, 0.0, ul_bits=_ul_bits(i), extra=_edge_time(i))
     # server version at each client's last model download; a model/update's
     # age at event e is  e - version[i]
     version = np.zeros(m, dtype=np.int64)
@@ -189,10 +213,19 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
             # only the fresh cohort's local work lands; in-flight clients
             # and stale-dropped updates stay at their server-known models
             mask = jnp.asarray(fresh_np)
-            stacked, opt_state = placement.update_cohort(
-                vmapped_update, jnp.asarray(buffered),
-                jnp.asarray(fresh_np[buffered]), stacked, opt_state,
-                x, y, n, ckeys)
+            if meter is not None and not meter.plan.row_local:
+                # the fleet step bakes a static per-USER straggler mask
+                # (§3f): row gathers would misalign it, so partial events
+                # take the base full-width path (run-every-row + select)
+                stacked, opt_state = Placement.update_cohort(
+                    placement, vmapped_update, jnp.asarray(buffered),
+                    jnp.asarray(fresh_np[buffered]), stacked, opt_state,
+                    x, y, n, ckeys)
+            else:
+                stacked, opt_state = placement.update_cohort(
+                    vmapped_update, jnp.asarray(buffered),
+                    jnp.asarray(fresh_np[buffered]), stacked, opt_state,
+                    x, y, n, ckeys)
 
         if lossy:
             # uplink channel crossing (DESIGN.md §3b): the fresh cohort's
@@ -231,6 +264,10 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
             history.comm_bits.append(ChannelCost(
                 dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
                 ul_bits=sum(_ul_bits(c) for c in buffered)))
+        if meter is not None:
+            # the device→user hop's bits for this event's arrivals (their
+            # edge TIME is already inside each arrival's clock draw)
+            meter.charge_event(buffered)
         if link is not None:
             # same charging rule as the sync clock (slowest buffered
             # subscriber per broadcast, receiver-mean per unicast;
@@ -248,7 +285,8 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
         # broadcast completes before an earlier long one
         t_done = max(t_done, done)
         for c in buffered:
-            clock.schedule(c, done, ul_bits=_ul_bits(c))
+            clock.schedule(c, done, ul_bits=_ul_bits(c),
+                           extra=_edge_time(c))
             version[c] = event + 1
 
         if event % fl.eval_every == 0 or event == fl.rounds - 1:
@@ -266,6 +304,8 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                               "staleness_discount": cfg.staleness_discount,
                               "staleness_alpha": cfg.staleness_alpha,
                               "events": fl.rounds}
+    if meter is not None:
+        history.extra["hierarchy"] = meter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history

@@ -98,26 +98,42 @@ def resolve_strategy(algorithm: Union[str, Strategy, None],
 def init_run(strategy: Strategy, fed: FederatedData, fl: "FLConfig",
              model_init: Optional[Callable], loss_fn: Callable,
              acc_fn: Callable, placement: Placement, seed: int,
-             donate: bool = False):
+             donate: bool = False, hierarchy: Optional[Any] = None,
+             system: Optional[SystemModel] = None):
     """Shared run prologue for the sync and async engines: PRNG split,
     model init, cached update step, client stack/opt/data placement,
     RoundContext and `strategy.setup`.  Returns
-    ``(key, vmapped_update, stacked, opt_state, data, ctx, state)``."""
+    ``(key, vmapped_update, stacked, opt_state, data, ctx, state)``.
+
+    With ``hierarchy`` (a resolved `HierarchyConfig`, DESIGN.md §3f) the
+    update step becomes the fleet sub-round, the data grows the nested
+    device axis and the opt-state slot carries the `EdgeState`; the
+    resolved `FleetPlan` rides on ``ctx.hierarchy_plan`` for the engines'
+    `EdgeMeter`.  ``system`` is consumed only there (the edge link
+    resolves against it, like `init_channel`'s link)."""
     m = fed.m
     key = jax.random.PRNGKey(seed)
     key, kinit = jax.random.split(key)
     if model_init is None:
         model_init = default_model_init(fed)
     params0 = model_init(kinit)
-    opt, vmapped_update = placement.build_update(loss_fn, fl, donate=donate)
-
-    stacked = placement.stack(params0, m)
-    opt_state = placement.init_opt(opt, stacked)
-    data = placement.place_data(fed)
+    if hierarchy is None:
+        opt, vmapped_update = placement.build_update(loss_fn, fl,
+                                                     donate=donate)
+        stacked = placement.stack(params0, m)
+        opt_state = placement.init_opt(opt, stacked)
+        data = placement.place_data(fed)
+        plan = None
+    else:
+        from repro.fl.hierarchy import init_fleet_run
+        vmapped_update, stacked, opt_state, data, plan = init_fleet_run(
+            hierarchy, placement, loss_fn, fl, fed, params0,
+            system=system, donate=donate, strategy=strategy)
 
     ctx = RoundContext(fed=fed, fl=fl, loss_fn=loss_fn, acc_fn=acc_fn,
                        params0=params0, seed=seed, placement=placement,
                        strategy=strategy)
+    ctx.hierarchy_plan = plan
     state = strategy.setup(ctx)
     return key, vmapped_update, stacked, opt_state, data, ctx, state
 
@@ -213,7 +229,8 @@ def _mro_definer(cls: type, name: str) -> Optional[type]:
 
 
 def superstep_support(strategy: Strategy,
-                      sampler: Optional[ClientSampler]) -> tuple:
+                      sampler: Optional[ClientSampler],
+                      hierarchy: Optional[Any] = None) -> tuple:
     """(ok, reason) — whether this run qualifies for the fused superstep.
 
     Strategy and sampler must declare the traceability contract; every
@@ -239,6 +256,11 @@ def superstep_support(strategy: Strategy,
     if sampler is not None and not sampler.traceable:
         return False, (f"sampler {type(sampler).__name__} does not "
                        "implement sample_traced")
+    if hierarchy is not None:
+        agg = hierarchy.edge_aggregator
+        if not agg.traceable:
+            return False, (f"edge aggregator {agg.spec!r} is not traceable "
+                           "(host-side edge weighting, DESIGN.md §3f)")
     return True, ""
 
 
@@ -345,7 +367,8 @@ def charge_round(history: "History", cost: CommCost, mask_np, m: int,
                  payload: int, link, system: Optional[SystemModel],
                  channel: Optional[Channel], t_accum: float,
                  assignment: Optional[np.ndarray] = None,
-                 ul_bits_pc: Optional[np.ndarray] = None) -> float:
+                 ul_bits_pc: Optional[np.ndarray] = None,
+                 edge: Optional[Any] = None) -> float:
     """One round's comm/bits/clock accounting, SHARED by the eventful loop
     and the superstep replay so the two engines can't drift (like
     `init_run`/`init_channel` for the prologue).  ``mask_np`` is the
@@ -354,10 +377,14 @@ def charge_round(history: "History", cost: CommCost, mask_np, m: int,
     ``assignment`` is the strategy's client→stream map (membership-aware
     broadcast charging, None = legacy cohort-slowest upper bound);
     ``ul_bits_pc`` the (m,) per-client uplink payload vector (rate-
-    adaptive codecs; None = uniform ``payload`` per client)."""
+    adaptive codecs; None = uniform ``payload`` per client); ``edge`` the
+    hierarchy tier's `EdgeMeter` (DESIGN.md §3f) — the device→user hop's
+    bits land in its own books every round and its time (slowest
+    participating user's edge sub-round) is added to the clock whenever a
+    ``system`` runs one."""
     history.comm.append(cost)
     n_part, participants = m, None
-    if channel is not None or system is not None:
+    if channel is not None or system is not None or edge is not None:
         # the round only waits for the clients that computed: H_|S| under
         # partial participation, not H_m
         if mask_np is not None and not mask_np.all():
@@ -383,6 +410,10 @@ def charge_round(history: "History", cost: CommCost, mask_np, m: int,
         else:
             t_accum += system.round_time(n_part, n_streams=cost.n_streams,
                                          n_unicasts=cost.n_unicasts)
+    if edge is not None:
+        t_edge = edge.charge(mask_np)
+        if system is not None:
+            t_accum += t_edge
     return t_accum
 
 
@@ -411,7 +442,8 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
                    model_init: Optional[Callable], loss_fn: Callable,
                    acc_fn: Callable, system: Optional[SystemModel],
                    placement: Placement, channel: Optional[Channel],
-                   keep_state: bool, seed: int) -> "History":
+                   keep_state: bool, seed: int,
+                   hierarchy: Optional[Any] = None) -> "History":
     """Scan-compiled sync run (DESIGN.md §3c): Python re-enters only at
     eval boundaries; per-round participation masks come back as ONE
     stacked device->host transfer per superstep, the chunk-end eval runs
@@ -422,7 +454,12 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
     m = fed.m
     key, update_fn, stacked, opt_state, data, ctx, state = init_run(
         strategy, fed, fl, model_init, loss_fn, acc_fn, placement, seed,
-        donate=False)   # donation happens at the superstep boundary instead
+        donate=False,   # donation happens at the superstep boundary instead
+        hierarchy=hierarchy, system=system)
+    meter = None
+    if hierarchy is not None:
+        from repro.fl.hierarchy import EdgeMeter
+        meter = EdgeMeter(ctx.hierarchy_plan)
     payload, link, model_bits, ef, channel = init_channel(
         channel, ctx, stacked, system, m)
     lossy = channel is not None and not channel.codec.is_identity
@@ -452,13 +489,14 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
         # clock or the bits axis actually consumes the masks
         masks_np = (np.asarray(masks)
                     if masks is not None
-                    and (channel is not None or system is not None)
+                    and (channel is not None or system is not None
+                         or meter is not None)
                     else None)
         for i in range(length):
             t_accum = charge_round(
                 history, cost, None if masks_np is None else masks_np[i],
                 m, payload, link, system, channel, t_accum,
-                assignment, ul_bits_pc)
+                assignment, ul_bits_pc, meter)
         mean_acc, worst_acc = reduce_scores(accs)
         history.rounds.append(nxt)
         history.mean_acc.append(mean_acc)
@@ -468,6 +506,8 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
     _, stacked, opt_state, _ = carry
     history = finalize_history(history, strategy, state, keep_state,
                                stacked, opt_state)
+    if meter is not None:
+        history.extra["hierarchy"] = meter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history
@@ -488,6 +528,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   async_cfg: Optional[Any] = None,
                   superstep: Optional[bool] = None,
                   paging: Optional[Any] = None,
+                  hierarchy: Optional[Any] = None,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
@@ -509,8 +550,16 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     raises if the configuration cannot fuse.  ``paging`` (a
     `PagingConfig`, DESIGN.md §3e) switches to the cohort paging engine:
     the full client population lives in a host-backed store and only one
-    cohort is device-resident per superstep.
+    cohort is device-resident per superstep.  ``hierarchy`` (a
+    `HierarchyConfig`, an int devices-per-user, or a fleet spec string —
+    DESIGN.md §3f) nests an edge sub-round inside every round: each user
+    aggregates its device fleet before the server sees it, both hops are
+    charged, and the device→user hop's bits land in
+    ``History.extra["hierarchy"]``.
     """
+    if hierarchy is not None:
+        from repro.fl.hierarchy import resolve_hierarchy
+        hierarchy = resolve_hierarchy(hierarchy)
     if async_cfg is not None:
         if sampler is not None:
             raise TypeError("the async runtime takes no ClientSampler — "
@@ -523,8 +572,13 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                          async_cfg=async_cfg, fl=fl, model_init=model_init,
                          loss_fn=loss_fn, acc_fn=acc_fn, system=system,
                          placement=placement, channel=channel,
-                         keep_state=keep_state, paging=paging, seed=seed)
+                         keep_state=keep_state, paging=paging,
+                         hierarchy=hierarchy, seed=seed)
     if paging is not None:
+        if hierarchy is not None:
+            raise TypeError("the hierarchy tier does not compose with the "
+                            "cohort paging engine yet (the store pages "
+                            "flat client rows, not device fleets)")
         if superstep is False:
             raise TypeError("the paging engine runs fused supersteps only "
                             "(DESIGN.md §3e); superstep=False cannot page")
@@ -544,7 +598,7 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     lossy = codec is not None and not codec.is_identity
 
     if superstep is None or superstep:
-        ok, why = superstep_support(strategy, sampler)
+        ok, why = superstep_support(strategy, sampler, hierarchy=hierarchy)
         if not ok and superstep:
             raise ValueError(f"superstep=True but this run cannot fuse: "
                              f"{why}")
@@ -553,7 +607,8 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                                   model_init=model_init, loss_fn=loss_fn,
                                   acc_fn=acc_fn, system=system,
                                   placement=placement, channel=channel,
-                                  keep_state=keep_state, seed=seed)
+                                  keep_state=keep_state,
+                                  hierarchy=hierarchy, seed=seed)
 
     m = fed.m
     # When no sampler can roll clients back and the strategy declares it
@@ -563,7 +618,12 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     donate = sampler is None and not strategy.reads_prev and not lossy
     key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
-                 placement, seed, donate=donate)
+                 placement, seed, donate=donate, hierarchy=hierarchy,
+                 system=system)
+    meter = None
+    if hierarchy is not None:
+        from repro.fl.hierarchy import EdgeMeter
+        meter = EdgeMeter(ctx.hierarchy_plan)
 
     payload, link, model_bits, ef, channel = init_channel(
         channel, ctx, stacked, system, m)
@@ -608,11 +668,13 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
         # `charge_round` (shared with the superstep replay)
         mask_np = (np.asarray(mask)
                    if mask is not None
-                   and (channel is not None or system is not None)
+                   and (channel is not None or system is not None
+                        or meter is not None)
                    else None)
         t_accum = charge_round(history, strategy.comm(state), mask_np, m,
                                payload, link, system, channel, t_accum,
-                               strategy.membership(state), ul_bits_pc)
+                               strategy.membership(state), ul_bits_pc,
+                               meter)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
@@ -623,6 +685,8 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
 
     history = finalize_history(history, strategy, state, keep_state,
                                stacked, opt_state)
+    if meter is not None:
+        history.extra["hierarchy"] = meter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history

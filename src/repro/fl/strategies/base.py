@@ -262,6 +262,17 @@ class Strategy(abc.ABC):
             f"{type(self).__name__} sets traceable=True but does not "
             "implement aggregate_traced")
 
+    def edge_weights(self, w: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+        """Edge-aggregation hook (hierarchy tier, DESIGN.md §3f): refine
+        the `EdgeAggregator`'s normalized per-device weight matrix ``w``
+        (m, d_max) given the per-device sample counts ``n`` (m, d_max).
+        TRACED inside the fleet update — overrides must be pure jnp.
+        Default: identity (no registered strategy reweights its users'
+        fleets; the engine only threads a strategy's hook into the fleet
+        update when the method is actually overridden, so the default
+        costs nothing and preserves the flat-parity anchor)."""
+        return w
+
     def reweight(self, w: jnp.ndarray, ctx: RoundContext) -> jnp.ndarray:
         """Staleness hook (DESIGN.md §3a): `ctx.mix` routes every weight
         matrix through here (`ctx.mix_plan` its centroids, when the run

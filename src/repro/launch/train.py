@@ -36,9 +36,9 @@ from repro.checkpoint import save_train_state
 from repro.configs import get_config, reduced
 from repro.data.federated import FederatedData
 from repro.data.synthetic import synthetic_lm_tokens
-from repro.fl import (AsyncConfig, Channel, FLConfig, HostVmap, MeshShardMap,
-                      PagingConfig, SYSTEMS, UniformFraction, get_strategy,
-                      run_federated)
+from repro.fl import (AsyncConfig, Channel, FLConfig, HierarchyConfig,
+                      HostVmap, MeshShardMap, PagingConfig, SYSTEMS,
+                      UniformFraction, get_strategy, run_federated)
 from repro.launch.steps import _loss_fn, init_model_params
 
 
@@ -85,6 +85,51 @@ def lm_federated_data(key, m: int, *, pool: int, n_val: int, seq: int,
         n=jnp.full((m,), float(pool)),
         x_val=jnp.stack(xv), y_val=jnp.zeros((m, n_val), jnp.int32),
         group=jnp.asarray(groups, jnp.int32))
+
+
+def _fleet_arg(spec: str):
+    """``"3"`` -> 3; anything else passes through as a fleet spec string
+    (``uniform:<D>`` | ``ragged:<min>-<max>``)."""
+    try:
+        return int(spec)
+    except ValueError:
+        return spec
+
+
+def _validate_specs(p, args):
+    """Registry-backed spec validation at parse time (DESIGN.md §3b/§3e/
+    §3f): a typo dies as a one-line argparse error naming the registry's
+    options instead of a traceback from the middle of engine init."""
+    from repro.fl.channel import get_codec, get_link_profile
+    from repro.fl.hierarchy import get_edge_aggregator, resolve_fleet_spec
+    for flag, spec in (("--codec", args.codec),
+                       ("--edge-codec", args.edge_codec)):
+        if spec is not None:
+            try:
+                get_codec(spec)
+            except ValueError as e:
+                p.error(f"{flag}: {e}")
+    for flag, spec in (("--link-profile", args.link_profile),
+                       ("--edge-link", args.edge_link)):
+        if spec is not None:
+            try:
+                get_link_profile(spec, SYSTEMS["wired"], 32, 2)
+            except ValueError as e:
+                p.error(f"{flag}: {e}")
+    if args.cohort_schedule not in ("sweep", "random"):
+        p.error(f"--cohort-schedule: unknown cohort schedule "
+                f"{args.cohort_schedule!r}; options: ['sweep', 'random']")
+    if args.edge_aggregator is not None:
+        try:
+            get_edge_aggregator(args.edge_aggregator)
+        except ValueError as e:
+            p.error(f"--edge-aggregator: {e}")
+    if args.devices_per_user is not None:
+        try:
+            resolve_fleet_spec(_fleet_arg(args.devices_per_user), 2,
+                               seed=args.seed)
+        except (TypeError, ValueError) as e:
+            p.error(f"--devices-per-user: {e}")
 
 
 def main(argv=None):
@@ -148,8 +193,8 @@ def main(argv=None):
                         "of --clients device-resident per superstep, the "
                         "rest in the host-backed store")
     p.add_argument("--cohort-schedule", default="sweep",
-                   choices=("sweep", "random"),
-                   help="paging: which cohort each superstep trains")
+                   help="paging: which cohort each superstep trains "
+                        "(sweep | random; registry-validated at parse)")
     p.add_argument("--store-dir", default=None,
                    help="paging: disk-back the client-state store (.npy "
                         "memmaps) instead of host RAM")
@@ -161,10 +206,30 @@ def main(argv=None):
     p.add_argument("--resume", action="store_true",
                    help="paging: resume from the latest snapshot in "
                         "--checkpoint-dir")
+    p.add_argument("--devices-per-user", default=None,
+                   help="hierarchy tier (DESIGN.md §3f): per-user device "
+                        "fleet spec — an int, uniform:<D>, or "
+                        "ragged:<min>-<max>; enables the edge sub-round")
+    p.add_argument("--edge-codec", default="identity",
+                   help="hierarchy: device->user uplink codec (same "
+                        "registry as --codec)")
+    p.add_argument("--edge-link", default=None,
+                   help="hierarchy: per-device link profile (same "
+                        "families as --link-profile)")
+    p.add_argument("--edge-aggregator", default="mean",
+                   help="hierarchy: edge aggregation rule — mean | "
+                        "drop_stragglers:<frac>")
+    p.add_argument("--edge-latency", type=float, default=0.0,
+                   help="hierarchy: fixed per-sub-round edge latency "
+                        "charged to every user's clock")
+    p.add_argument("--device-dropout", type=float, default=0.0,
+                   help="hierarchy: per-round probability each device "
+                        "misses its edge sub-round")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     if args.steps < 1:
         p.error("--steps must be >= 1")
+    _validate_specs(p, args)
 
     # registry-validated spec: bad specs raise ValueError before any work
     strategy = get_strategy(args.algorithm)
@@ -213,12 +278,23 @@ def main(argv=None):
         channel = Channel(codec=args.codec or "identity",
                           link=args.link_profile,
                           error_feedback=args.error_feedback)
+    hierarchy = None
+    if args.devices_per_user is not None:
+        hierarchy = HierarchyConfig(
+            devices_per_user=_fleet_arg(args.devices_per_user),
+            edge_codec=args.edge_codec,
+            edge_aggregator=args.edge_aggregator,
+            edge_link=args.edge_link,
+            edge_latency=args.edge_latency,
+            device_dropout=args.device_dropout,
+            seed=args.seed)
 
     print(f"arch={cfg.name} preset={args.preset} clients={m} "
           f"alg={strategy.spec} placement={placement!r}"
           + (f" async={async_cfg}" if async_cfg else "")
           + (f" paging={paging}" if paging else "")
-          + (f" channel={channel}" if channel else ""))
+          + (f" channel={channel}" if channel else "")
+          + (f" hierarchy={hierarchy}" if hierarchy else ""))
     t0 = time.time()
     history = run_federated(
         strategy=strategy, fed=fed, fl=fl, sampler=sampler,
@@ -226,7 +302,8 @@ def main(argv=None):
         loss_fn=loss_fn, acc_fn=acc_fn, system=SYSTEMS[args.system],
         placement=placement, channel=channel,
         keep_state=bool(args.checkpoint),
-        async_cfg=async_cfg, paging=paging, seed=args.seed)
+        async_cfg=async_cfg, paging=paging, hierarchy=hierarchy,
+        seed=args.seed)
     if paging is not None:
         pg = history.extra["paging"]
         print(f"paging: population={pg['population']} cohort={pg['cohort']} "
@@ -259,6 +336,13 @@ def main(argv=None):
               f"(model {ch['model_bits']/1e6:.2f} Mbit) | "
               f"downlink {ch['dl_bits_total']/1e6:.1f} Mbit, "
               f"uplink {ch['ul_bits_total']/1e6:.1f} Mbit")
+    if hierarchy is not None:
+        hx = history.extra["hierarchy"]
+        print(f"hierarchy: fleets={hx['devices_per_user']} "
+              f"edge_codec={hx['edge_codec']} "
+              f"agg={hx['edge_aggregator']} link={hx['edge_link']} | "
+              f"edge downlink {hx['edge_dl_bits_total']/1e6:.1f} Mbit, "
+              f"edge uplink {hx['edge_ul_bits_total']/1e6:.1f} Mbit")
 
     if args.checkpoint:
         save_train_state(args.checkpoint, args.steps,

@@ -1,0 +1,413 @@
+"""Hierarchical edge-aggregation tier (DESIGN.md §3f).
+
+The §3f flat-parity anchor: ``HierarchyConfig(devices_per_user=1)`` with
+the identity edge codec, mean edge aggregation and zero edge latency must
+be BIT-IDENTICAL to the flat engine — accuracy history, clock, comm_bits
+and final params — for every traceable strategy on both placements, on
+the fused, eventful and async paths.  Two-level runs then layer on:
+ragged fleets, edge codecs with error feedback, per-device links charged
+on BOTH hops, straggler dropping and the strategy edge hook.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.federated import scenario_label_shift
+from repro.fl import (AsyncConfig, Channel, FLConfig, HierarchyConfig,
+                      HostVmap, MeshShardMap, SYSTEMS, UniformFraction,
+                      run_async, run_federated, superstep_support)
+from repro.fl.hierarchy import (EdgeAggregator, fleet_plan,
+                                get_edge_aggregator, partition_fleet_data,
+                                register_edge_aggregator,
+                                resolve_fleet_spec, resolve_hierarchy)
+from repro.fl.strategies import get_strategy
+
+KEY = jax.random.PRNGKey(0)
+FL = FLConfig(rounds=4, local_steps=2, batch_size=16, eval_every=2)
+TRACEABLE = ["fedavg", "local", "oracle", "ucfl", "ucfl_k2", "fedfomo"]
+FLAT = HierarchyConfig(devices_per_user=1)
+TWO_LEVEL = HierarchyConfig(devices_per_user="ragged:2-4",
+                            edge_codec="qsgd:4", edge_link="tiered:4",
+                            edge_latency=0.5)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=500, m=4)
+
+
+def _mesh_exact():
+    return MeshShardMap(schedule="shard_map_streams")
+
+
+def assert_history_equal(h_a, h_b, *, exact=True):
+    assert h_a.rounds == h_b.rounds
+    if exact:
+        assert h_a.mean_acc == h_b.mean_acc
+        assert h_a.worst_acc == h_b.worst_acc
+    else:
+        np.testing.assert_allclose(h_a.mean_acc, h_b.mean_acc, atol=1e-5)
+        np.testing.assert_allclose(h_a.worst_acc, h_b.worst_acc, atol=1e-5)
+    assert h_a.comm == h_b.comm
+    assert h_a.time == h_b.time
+    assert h_a.comm_bits == h_b.comm_bits
+
+
+def assert_params_equal(a, b, *, lossy=False):
+    # same tolerance policy as test_superstep: exact on the tier-1
+    # single-device env, allclose under forced multi-device emulation
+    exact = len(jax.devices()) == 1
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        if exact:
+            assert jnp.array_equal(la, lb)
+        else:
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-2 if lossy else 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the flat-parity anchor: degenerate hierarchy == flat engine, bit for bit
+
+
+@pytest.mark.parametrize("spec", TRACEABLE)
+@pytest.mark.parametrize("placement_fn", [HostVmap, _mesh_exact],
+                         ids=["host", "mesh"])
+def test_flat_parity_traceable(spec, placement_fn, fed):
+    h0 = run_federated(spec, fed, fl=FL, system=SYSTEMS["wired"],
+                       placement=placement_fn(), keep_state=True)
+    h1 = run_federated(spec, fed, fl=FL, system=SYSTEMS["wired"],
+                       placement=placement_fn(), keep_state=True,
+                       hierarchy=FLAT)
+    assert_history_equal(h1, h0)
+    assert_params_equal(h1.final_params, h0.final_params)
+    assert h1.extra["hierarchy"]["d_max"] == 1
+
+
+def test_flat_parity_eventful_cfl(fed):
+    fl = dataclasses.replace(FL, cfl_min_rounds=1)
+    h0 = run_federated("cfl", fed, fl=fl, keep_state=True)
+    h1 = run_federated("cfl", fed, fl=fl, keep_state=True, hierarchy=FLAT)
+    assert_history_equal(h1, h0)
+    assert_params_equal(h1.final_params, h0.final_params)
+
+
+def test_flat_parity_sampler_and_channel(fed):
+    """Participation rollback (EdgeState rides `placement.select`) and the
+    server-hop codec both preserve the anchor."""
+    kw = dict(fl=FL, sampler=UniformFraction(0.5),
+              channel=Channel(codec="qsgd:4"),
+              system=SYSTEMS["wireless_slow"], keep_state=True)
+    h0 = run_federated("ucfl_k2", fed, **kw)
+    h1 = run_federated("ucfl_k2", fed, hierarchy=FLAT, **kw)
+    assert_history_equal(h1, h0)
+    assert_params_equal(h1.final_params, h0.final_params, lossy=True)
+
+
+@pytest.mark.parametrize("buffer_k", [4, 2], ids=["lockstep", "partial"])
+def test_flat_parity_async(buffer_k, fed):
+    """Async flat parity — including partial events, where EdgeState rows
+    ride HostVmap's cohort gather/scatter."""
+    kw = dict(fl=FL, async_cfg=AsyncConfig(buffer_k=buffer_k),
+              keep_state=True)
+    h0 = run_async("fedavg", fed, **kw)
+    h1 = run_async("fedavg", fed, hierarchy=FLAT, **kw)
+    assert_history_equal(h1, h0)
+    assert_params_equal(h1.final_params, h0.final_params)
+
+
+def test_flat_latency_shifts_clock_only(fed):
+    """D=1 with edge latency: values stay bit-identical to flat (latency
+    is meter-only) and every eval point's clock gains exactly
+    rounds_elapsed · latency."""
+    lat = 0.5
+    h0 = run_federated("fedavg", fed, fl=FL, system=SYSTEMS["wired"],
+                       keep_state=True)
+    h1 = run_federated("fedavg", fed, fl=FL, system=SYSTEMS["wired"],
+                       keep_state=True,
+                       hierarchy=HierarchyConfig(devices_per_user=1,
+                                                 edge_latency=lat))
+    assert h1.mean_acc == h0.mean_acc
+    assert_params_equal(h1.final_params, h0.final_params)
+    for rnd, t0, t1 in zip(h0.rounds, h0.time, h1.time):
+        np.testing.assert_allclose(t1 - t0, (rnd + 1) * lat, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# two-level rounds: values, engines, and the per-hop books
+
+
+def test_two_level_fused_matches_eventful(fed):
+    h_ev = run_federated("ucfl_k2", fed, fl=FL, superstep=False,
+                         keep_state=True, hierarchy=TWO_LEVEL)
+    h_ss = run_federated("ucfl_k2", fed, fl=FL, superstep=True,
+                         keep_state=True, hierarchy=TWO_LEVEL)
+    assert_history_equal(h_ss, h_ev)
+    assert_params_equal(h_ss.final_params, h_ev.final_params, lossy=True)
+
+
+def test_two_level_host_mesh_agree(fed):
+    """qsgd's jnp path is bit-identical to the kernel path, so the edge
+    sub-round agrees across placements (the same §3b guarantee)."""
+    h_h = run_federated("ucfl_k2", fed, fl=FL, hierarchy=TWO_LEVEL)
+    h_m = run_federated("ucfl_k2", fed, fl=FL, hierarchy=TWO_LEVEL,
+                        placement=_mesh_exact())
+    np.testing.assert_allclose(h_h.mean_acc, h_m.mean_acc, atol=1e-5)
+
+
+def test_two_level_extra_books(fed):
+    h = run_federated("fedavg", fed, fl=FL, system=SYSTEMS["wired"],
+                      hierarchy=TWO_LEVEL)
+    ex = h.extra["hierarchy"]
+    counts = ex["devices_per_user"]
+    assert len(counts) == fed.m and all(2 <= c <= 4 for c in counts)
+    assert ex["d_max"] == max(counts)
+    assert ex["edge_codec"] == "qsgd:4"
+    assert ex["edge_aggregator"] == "mean"
+    assert len(ex["comm_bits"]) == FL.rounds      # one entry per round
+    assert ex["edge_dl_bits_total"] > 0 and ex["edge_ul_bits_total"] > 0
+    assert all(t >= 0.5 for t in ex["user_edge_time"])
+
+
+def test_two_level_clock_charges_edge_hop(fed):
+    """Identity edge codec + uniform edge link: every device's hop is
+    exactly (1 + ρ)·T_dl, so each round's clock gains latency + 1 + ρ on
+    top of the flat run — the two-hop charging pin."""
+    lat, rho = 0.25, SYSTEMS["wired"].rho
+    hc = HierarchyConfig(devices_per_user=2, edge_link="uniform",
+                         edge_latency=lat)
+    h0 = run_federated("fedavg", fed, fl=FL, system=SYSTEMS["wired"])
+    h1 = run_federated("fedavg", fed, fl=FL, system=SYSTEMS["wired"],
+                       hierarchy=hc)
+    for rnd, t0, t1 in zip(h0.rounds, h0.time, h1.time):
+        np.testing.assert_allclose(t1 - t0, (rnd + 1) * (lat + 1.0 + rho),
+                                   rtol=1e-9)
+
+
+def test_edge_error_feedback_changes_values(fed):
+    base = dict(devices_per_user=3, edge_codec="qsgd:2")
+    h_ef = run_federated("fedavg", fed, fl=FL,
+                         hierarchy=HierarchyConfig(**base))
+    h_no = run_federated("fedavg", fed, fl=FL,
+                         hierarchy=HierarchyConfig(
+                             edge_error_feedback=False, **base))
+    assert h_ef.mean_acc != h_no.mean_acc
+    assert all(np.isfinite(h_ef.mean_acc)) and all(np.isfinite(h_no.mean_acc))
+
+
+def test_device_dropout_runs_and_differs(fed):
+    base = dict(devices_per_user=3)
+    h0 = run_federated("fedavg", fed, fl=FL,
+                       hierarchy=HierarchyConfig(**base))
+    h1 = run_federated("fedavg", fed, fl=FL,
+                       hierarchy=HierarchyConfig(device_dropout=0.5, **base))
+    assert h0.mean_acc != h1.mean_acc
+    assert all(np.isfinite(h1.mean_acc))
+
+
+# ---------------------------------------------------------------------------
+# edge aggregators
+
+
+def test_drop_stragglers_static_keep(fed):
+    hc = HierarchyConfig(devices_per_user=3,
+                         edge_aggregator="drop_stragglers:0.4",
+                         edge_link="tiered:4")
+    plan = fleet_plan(hc, fed.m, {"w": np.zeros(8, np.float32)},
+                      SYSTEMS["wired"])
+    assert not plan.row_local
+    # 3 devices · frac 0.4 -> exactly one dropped per user, the slowest
+    assert (plan.participating.sum(axis=1) == 2).all()
+    h_drop = run_federated("fedavg", fed, fl=FL, hierarchy=hc)
+    h_mean = run_federated("fedavg", fed, fl=FL, hierarchy=HierarchyConfig(
+        devices_per_user=3, edge_link="tiered:4"))
+    # one less uplink per user per round
+    assert (h_drop.extra["hierarchy"]["edge_ul_bits_total"]
+            < h_mean.extra["hierarchy"]["edge_ul_bits_total"])
+    assert all(np.isfinite(h_drop.mean_acc))
+
+
+def test_drop_stragglers_async_partial_full_width(fed):
+    """row_local=False routes async partial events through the base
+    full-width cohort path — the run must stay finite and charge books."""
+    hc = HierarchyConfig(devices_per_user=3,
+                         edge_aggregator="drop_stragglers:0.4")
+    h = run_async("fedavg", fed, fl=FL, async_cfg=AsyncConfig(buffer_k=2),
+                  hierarchy=hc)
+    assert all(np.isfinite(h.mean_acc))
+    assert len(h.extra["hierarchy"]["comm_bits"]) == FL.rounds
+
+
+def test_non_traceable_aggregator_falls_back_eventful(fed):
+    """A host-side aggregator blocks fusion (superstep_support names it),
+    runs eventful transparently, and — when its host weights equal the
+    traced mean's — reproduces the mean run exactly."""
+
+    @register_edge_aggregator
+    class HostMean(EdgeAggregator):
+        name = "host_mean_test"
+        traceable = False
+
+        def weights_host(self, n, mask):
+            wn = np.asarray(n, np.float64) * mask
+            s = wn.sum(axis=1, keepdims=True)
+            return np.where(s > 0, wn / np.maximum(s, 1e-12),
+                            0.0).astype(np.float32)
+
+    hc = HierarchyConfig(devices_per_user=2,
+                         edge_aggregator="host_mean_test")
+    ok, why = superstep_support(get_strategy("fedavg"), None, hierarchy=hc)
+    assert not ok and "host_mean_test" in why
+    with pytest.raises(ValueError, match="cannot fuse"):
+        run_federated("fedavg", fed, fl=FL, superstep=True, hierarchy=hc)
+    h_host = run_federated("fedavg", fed, fl=FL, hierarchy=hc,
+                           keep_state=True)
+    h_mean = run_federated("fedavg", fed, fl=FL, superstep=False,
+                           keep_state=True,
+                           hierarchy=HierarchyConfig(devices_per_user=2))
+    assert h_host.mean_acc == h_mean.mean_acc
+    assert_params_equal(h_host.final_params, h_mean.final_params)
+
+
+def test_strategy_edge_weights_hook(fed):
+    """An overridden `Strategy.edge_weights` is threaded into the edge
+    combine; the identity override reproduces the default weighting."""
+    from repro.fl.strategies.fedavg import FedAvg
+
+    class EdgeAware(FedAvg):
+        name = "edge_aware_test"
+
+        def edge_weights(self, w, n):
+            return w
+
+    h_hook = run_federated(strategy=EdgeAware(), fed=fed, fl=FL,
+                           hierarchy=HierarchyConfig(devices_per_user=2))
+    h_base = run_federated("fedavg", fed, fl=FL,
+                           hierarchy=HierarchyConfig(devices_per_user=2))
+    assert h_hook.mean_acc == h_base.mean_acc
+
+    class UniformEdge(FedAvg):
+        name = "uniform_edge_test"
+
+        def edge_weights(self, w, n):
+            mask = (w > 0).astype(jnp.float32)
+            s = mask.sum(axis=1, keepdims=True)
+            return mask / jnp.maximum(s, 1.0)
+
+    # uneven strided shards (e.g. 42/42/41) make sample- vs uniform-
+    # weighting numerically distinct; accuracy is too coarse to always
+    # register that, so the discriminator is the final params bitwise
+    h_uni = run_federated(strategy=UniformEdge(), fed=fed, fl=FL,
+                          hierarchy=HierarchyConfig(devices_per_user=3),
+                          keep_state=True)
+    h_def = run_federated("fedavg", fed, fl=FL,
+                          hierarchy=HierarchyConfig(devices_per_user=3),
+                          keep_state=True)
+    assert all(np.isfinite(h_uni.mean_acc))
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(h_uni.final_params),
+                        jax.tree_util.tree_leaves(h_def.final_params)))
+
+
+def test_edge_aggregator_registry():
+    assert get_edge_aggregator("mean").spec == "mean"
+    agg = get_edge_aggregator("drop_stragglers:0.25")
+    assert agg.spec == "drop_stragglers:0.25" and agg.traceable
+    with pytest.raises(ValueError, match="mean"):
+        get_edge_aggregator("meann")
+    with pytest.raises(ValueError):
+        get_edge_aggregator("drop_stragglers:1.5")
+
+
+# ---------------------------------------------------------------------------
+# fleet resolution + data partitioning
+
+
+def test_resolve_fleet_spec():
+    np.testing.assert_array_equal(resolve_fleet_spec(3, 4), [3, 3, 3, 3])
+    np.testing.assert_array_equal(resolve_fleet_spec("uniform:2", 3),
+                                  [2, 2, 2])
+    counts = resolve_fleet_spec("ragged:2-5", 16, seed=1)
+    assert counts.shape == (16,) and counts.min() >= 2 and counts.max() <= 5
+    assert counts.max() > counts.min()          # actually ragged
+    np.testing.assert_array_equal(resolve_fleet_spec((1, 2, 3), 3),
+                                  [1, 2, 3])
+    with pytest.raises(ValueError):
+        resolve_fleet_spec((1, 2), 3)           # wrong length
+    with pytest.raises(ValueError):
+        resolve_fleet_spec(0, 2)
+    with pytest.raises(ValueError):
+        resolve_fleet_spec("ragged:5", 2)
+
+
+def test_hierarchy_config_validation():
+    with pytest.raises(ValueError):
+        HierarchyConfig(device_dropout=1.0)
+    with pytest.raises(ValueError):
+        HierarchyConfig(edge_latency=-1.0)
+    with pytest.raises(ValueError, match="mean"):
+        HierarchyConfig(edge_aggregator="nope")
+    assert resolve_hierarchy(None) is None
+    assert resolve_hierarchy(2).devices_per_user == 2
+    assert resolve_hierarchy("uniform:3").devices_per_user == "uniform:3"
+    cfg = HierarchyConfig(devices_per_user=1)
+    assert resolve_hierarchy(cfg) is cfg
+    with pytest.raises(TypeError):
+        resolve_hierarchy(2.5)
+
+
+def test_partition_fleet_data(fed):
+    counts = np.array([1, 2, 3, 2])
+    x, y, n = partition_fleet_data(fed, counts, 3)
+    m, n_max = fed.x.shape[0], fed.x.shape[1]
+    assert x.shape[:2] == (m, 3) and y.shape[:2] == (m, 3)
+    # true sizes shard without loss: sum over devices == flat size
+    np.testing.assert_array_equal(np.asarray(n).sum(axis=1),
+                                  np.asarray(fed.n))
+    # invalid device slots carry zero true samples
+    assert np.asarray(n)[0, 1:].sum() == 0
+    # every device's real rows are a strided shard of the user's data
+    n0 = int(fed.n[1])
+    dev0 = np.asarray(x[1, 0])[: int(n[1, 0])]
+    np.testing.assert_array_equal(dev0, np.asarray(fed.x[1])[:n0][0::2])
+    # d_max == 1 degenerates to exact views of the flat arrays
+    x1, y1, n1 = partition_fleet_data(fed, np.ones(m, np.int64), 1)
+    np.testing.assert_array_equal(np.asarray(x1[:, 0]), np.asarray(fed.x))
+    np.testing.assert_array_equal(np.asarray(n1[:, 0]), np.asarray(fed.n))
+
+
+# ---------------------------------------------------------------------------
+# async two-level + composition guards
+
+
+def test_async_two_level(fed):
+    kw = dict(fl=FL, async_cfg=AsyncConfig(buffer_k=2),
+              system=SYSTEMS["wired"])
+    h2 = run_async("fedavg", fed, hierarchy=TWO_LEVEL, **kw)
+    h0 = run_async("fedavg", fed, **kw)
+    # both hops charged: every arrival carries its edge sub-round time
+    assert h2.time[-1] > h0.time[-1]
+    ex = h2.extra["hierarchy"]
+    assert len(ex["comm_bits"]) == FL.rounds
+    assert ex["edge_ul_bits_total"] > 0
+
+
+def test_hierarchy_rejects_paging(fed):
+    from repro.fl import PagingConfig
+    with pytest.raises(TypeError, match="paging"):
+        run_federated("fedavg", fed, fl=FL, hierarchy=FLAT,
+                      paging=PagingConfig(cohort=2))
+    with pytest.raises(TypeError, match="paging"):
+        run_async("fedavg", fed, fl=FL, hierarchy=FLAT,
+                  paging=PagingConfig(cohort=2))
+
+
+def test_run_federated_accepts_bare_fleet_specs(fed):
+    h = run_federated("fedavg", fed, fl=FL, hierarchy=2)
+    assert h.extra["hierarchy"]["d_max"] == 2
+    h = run_federated("fedavg", fed, fl=FL, hierarchy="uniform:2")
+    assert h.extra["hierarchy"]["d_max"] == 2

@@ -333,3 +333,47 @@ def test_async_paged_partial_buffer_runs(fed, model_init):
     assert all(np.isfinite(a) for a in h.mean_acc)
     for leaf in jax.tree_util.tree_leaves(h.final_params):
         assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_async_paged_partial_buffer_arrival_order(fed, model_init):
+    """Arrival-ordered anchor for ``buffer_k`` NOT dividing the
+    population (k=3, n=8): on the deterministic wired clock every arrival
+    is ``start + t_min + ρ`` and heap ties break on client index, so the
+    event cohorts and `History.time` are exactly reproducible by a
+    reference heap — and the paged loop, driving the same seeded clock,
+    must report the same times and per-event comm as the resident async
+    engine (the wrap events mix first- and second-generation arrivals,
+    which is precisely what a cohort-indexing bug would scramble)."""
+    import heapq
+    k, n = 3, fed.m
+    fl = FLConfig(rounds=6, local_steps=1, batch_size=16, eval_every=1)
+    kw = dict(async_cfg=AsyncConfig(buffer_k=k), fl=fl,
+              model_init=model_init, system=SYSTEMS["wired"])
+    h_pag = run_async("fedavg", fed, paging=PagingConfig(cohort=k), **kw)
+    h_res = run_async("fedavg", fed, **kw)
+    assert h_pag.time == h_res.time
+    assert h_pag.comm == h_res.comm
+    assert h_pag.rounds == h_res.rounds
+
+    sysm = SYSTEMS["wired"]
+    assert sysm.inv_mu == 0.0            # the law the pins below assume
+    step = sysm.t_min + sysm.rho
+    heap = [(step, c) for c in range(n)]
+    heapq.heapify(heap)
+    expect_time, cohorts, now, t_done = [], [], 0.0, 0.0
+    for _ in range(fl.rounds):
+        cohort = []
+        for _ in range(k):
+            t, c = heapq.heappop(heap)
+            now = max(now, t)
+            cohort.append(c)
+        done = now + 1                   # fedavg: one broadcast stream
+        t_done = max(t_done, done)
+        for c in cohort:
+            heapq.heappush(heap, (done + step, c))
+        cohorts.append(cohort)
+        expect_time.append(t_done)
+    assert h_pag.time == expect_time
+    # the first wrap event buffers stragglers 6, 7 of the first pass with
+    # the already-rescheduled client 0 — event order pinned exactly
+    assert cohorts[2] == [6, 7, 0]

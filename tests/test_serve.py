@@ -27,7 +27,8 @@ from repro.fl import (Channel, DeltaStore, FLConfig, HostVmap, MeshShardMap,
                       ServeEngine, SYSTEMS, check_parity, get_codec,
                       run_federated)
 from repro.fl.channel import get_link_profile, stacked_ravel, tree_bits
-from repro.fl.channel.codecs import Adaptive, BoundAdaptive
+from repro.fl.channel.codecs import (Adaptive, AdaptiveTopK, BoundAdaptive,
+                                     BoundAdaptiveTopK)
 from repro.fl.channel.link import round_downlink_time
 from repro.fl.strategies import CommCost
 from repro.models import lenet
@@ -364,6 +365,89 @@ def test_adaptive_charge_recorded_per_client(fed):
     # TIME, which test_adaptive_tiered_spends_headroom_within_budget pins
     assert h.comm_bits[-1].ul_bits > hq.comm_bits[-1].ul_bits
     assert h.comm_bits[-1].dl_bits >= hq.comm_bits[-1].dl_bits
+
+
+# ---------------------------------------------------------------------------
+# satellite: rate-adaptive SPARSITY ("adaptive_topk[:<min>[:<max>]]") —
+# the top-k sibling of the adaptive bit-width tests above
+
+
+def test_adaptive_topk_unbound_raises():
+    c = get_codec("adaptive_topk:0.1")
+    assert isinstance(c, AdaptiveTopK)
+    with pytest.raises(RuntimeError, match="bind_link"):
+        c.payload_bits(_tree())
+    with pytest.raises(RuntimeError, match="bind_link"):
+        c.roundtrip(jnp.zeros((2, 4)), KEY)
+    with pytest.raises(ValueError):
+        get_codec("adaptive_topk:0")           # frac floor is exclusive
+    with pytest.raises(ValueError):
+        get_codec("adaptive_topk:1.5")
+    with pytest.raises(ValueError):
+        get_codec("adaptive_topk:0.5:0.2")     # min > max
+    with pytest.raises(ValueError):
+        get_codec("adaptive_topk:0.1:0.5:0.9")  # too many params
+
+
+def test_adaptive_topk_uniform_link_collapses_to_min_frac():
+    link = get_link_profile("uniform", SYSTEMS["wired"], 64 * 32 + 32, 4)
+    bound = get_codec("adaptive_topk:0.25").bind_link(link, _tree())
+    assert isinstance(bound, BoundAdaptiveTopK)
+    np.testing.assert_array_equal(bound.ks, np.full(4, 16))
+    tk = get_codec("topk:0.25")
+    assert bound.payload_bits(_tree()) == tk.payload_bits(_tree())
+    np.testing.assert_array_equal(bound.per_client_bits(_tree(), 4),
+                                  tk.per_client_bits(_tree(), 4))
+
+
+def test_adaptive_topk_uniform_run_matches_topk_bitwise(fed):
+    ha = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="adaptive_topk:0.25"),
+                       system=SYSTEMS["wired"])
+    ht = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="topk:0.25"),
+                       system=SYSTEMS["wired"])
+    assert ha.mean_acc == ht.mean_acc
+    assert ha.comm_bits == ht.comm_bits
+    assert ha.time == ht.time
+
+
+def test_adaptive_topk_tiered_spends_headroom_within_budget():
+    m, d = 8, 64
+    link = get_link_profile("tiered:4", SYSTEMS["wired"], d * 32 + 32, m)
+    bound = get_codec("adaptive_topk:0.25").bind_link(link, _tree(d))
+    pc = bound.per_client_bits(_tree(d), m)
+    fixed = get_codec("topk:0.25").payload_bits(_tree(d))
+    # faster clients keep MORE coordinates than the fixed-frac charge...
+    assert int(pc.sum()) > m * fixed
+    assert bound.ks.min() == 16 and bound.ks.max() > 16
+    # ...capped at max_frac (here the default 1.0 -> k <= d)
+    assert bound.ks.max() <= d
+    # ...and the round's uplink TIME never exceeds the topk:<min> budget
+    assert (link.max_uplink_time(pc)
+            <= link.max_uplink_time(fixed) * (1 + 1e-12))
+    t_budget = max(link.uplink_time(i, fixed) for i in range(m))
+    for i in range(m):
+        assert link.uplink_time(i, int(pc[i])) <= t_budget * (1 + 1e-12)
+    # an explicit max_frac binds before the budget does
+    capped = get_codec("adaptive_topk:0.25:0.5").bind_link(link, _tree(d))
+    assert capped.ks.max() <= 32
+    assert capped.spec == "adaptive_topk:0.25:0.5"
+
+
+def test_adaptive_topk_charge_recorded_per_client(fed):
+    h = run_federated("ucfl_k2", fed, fl=FL,
+                      channel=Channel(codec="adaptive_topk:0.25",
+                                      link="tiered:4"),
+                      system=SYSTEMS["wired"])
+    ht = run_federated("ucfl_k2", fed, fl=FL,
+                       channel=Channel(codec="topk:0.25", link="tiered:4"),
+                       system=SYSTEMS["wired"])
+    # headroom spent on extra kept coordinates; the broadcast charges the
+    # LARGEST assigned k, so downlink bits can only grow — the budget
+    # rule binds the uplink TIME (pinned above)
+    assert h.comm_bits[-1].ul_bits > ht.comm_bits[-1].ul_bits
+    assert h.comm_bits[-1].dl_bits >= ht.comm_bits[-1].dl_bits
 
 
 # ---------------------------------------------------------------------------
