@@ -857,6 +857,129 @@ def hierarchy_bench(rounds: int = 12, seed: int = 0):
     return rows
 
 
+def faults_bench(rounds: int = 12, seed: int = 0):
+    """Accuracy-under-attack: Byzantine sweep × robust aggregators
+    (DESIGN.md §3g) -> BENCH_faults.json.
+
+    The §3g FAULTS-OFF PARITY ANCHOR RUNS IN-BENCH FIRST, on both
+    placements and on the fused, eventful and async engines, for both
+    benchmarked strategies: a zero-rate fault spec with robust_agg="none"
+    must reproduce the clean engine bit-for-bit — accuracy history,
+    clock AND final params — and the bench RAISES on any divergence, so
+    a headline number can never ship from a fault layer that changed the
+    math of the clean path.
+
+    Then per strategy × defense: 25% of clients turn sign-flip Byzantine
+    (−10·Δ, the gradient-ascent attack) and the table records HONEST-
+    client mean accuracy (the Byzantine-FL convention: adversaries'
+    personal eval is excluded — their data legitimately never
+    contributes) against the clean run.  ``none`` must demonstrably
+    degrade and at least one robust rule must recover ≥90% of the clean
+    accuracy, or the bench fails loudly instead of shipping the table.
+    """
+    import jax
+    import numpy as np
+    from repro.data.federated import scenario_covariate_shift
+    from repro.fl import (AsyncConfig, FLConfig, HostVmap, MeshShardMap,
+                          SYSTEMS, run_federated)
+    from repro.models import lenet
+
+    fed = scenario_covariate_shift(jax.random.PRNGKey(seed), n=1500, m=8)
+    fl = FLConfig(rounds=rounds, local_steps=2, batch_size=32, eval_every=2)
+    specs = ["fedavg", "ucfl_k2"]
+    placements = [("host_vmap", HostVmap),
+                  ("mesh_shard_map",
+                   lambda: MeshShardMap(schedule="shard_map_streams"))]
+    off = dict(faults="crash:0,byz:0,nan:0,bitrot:0", robust_agg="none")
+
+    def check(tag, h0, h1):
+        if (h0.mean_acc != h1.mean_acc or h0.worst_acc != h1.worst_acc
+                or h0.time != h1.time):
+            raise RuntimeError(f"§3g faults-off parity anchor FAILED "
+                               f"({tag}): history diverged")
+        for la, lb in zip(jax.tree_util.tree_leaves(h0.final_params),
+                          jax.tree_util.tree_leaves(h1.final_params)):
+            if not np.array_equal(np.asarray(la), np.asarray(lb)):
+                raise RuntimeError(f"§3g faults-off parity anchor FAILED "
+                                   f"({tag}): final params diverged")
+        print(f"faults-off parity anchor ok: {tag}")
+
+    for pname, pfn in placements:
+        for spec in specs:
+            kw = dict(fl=fl, seed=seed, system=SYSTEMS["wired"],
+                      placement=pfn(), keep_state=True)
+            check(f"{spec} fused on {pname}",
+                  run_federated(spec, fed, **kw),
+                  run_federated(spec, fed, **off, **kw))
+            check(f"{spec} eventful on {pname}",
+                  run_federated(spec, fed, superstep=False, **kw),
+                  run_federated(spec, fed, superstep=False, **off, **kw))
+            acfg = AsyncConfig(buffer_k=4)
+            aoff = dict(off, async_cfg=AsyncConfig(buffer_k=4,
+                                                   max_retries=7,
+                                                   retry_backoff=3.0))
+            check(f"{spec} async on {pname}",
+                  run_federated(spec, fed, async_cfg=acfg, **kw),
+                  run_federated(spec, fed, **aoff, **kw))
+
+    attack = "byz:0.25:sign_flip"
+    defenses = ["none", "trimmed_mean:0.25", "krum:0.25", "median"]
+    peracc = jax.jit(jax.vmap(
+        lambda p, x, y: lenet.accuracy(p, {"x": x, "y": y})))
+
+    def honest_acc(h, byz):
+        accs = np.asarray(peracc(h.final_params, fed.x_val, fed.y_val))
+        keep = np.ones(len(accs), bool)
+        keep[list(byz)] = False
+        return float(accs[keep].mean())
+
+    rows = []
+    for spec in specs:
+        kw = dict(fl=fl, seed=seed, system=SYSTEMS["wired"],
+                  placement=HostVmap(), keep_state=True)
+        h_clean = run_federated(spec, fed, **kw)
+        byz = None
+        for defense in defenses:
+            h = run_federated(spec, fed, faults=attack, robust_agg=defense,
+                              **kw)
+            fx = h.extra["faults"]
+            byz = fx["byzantine_clients"]
+            clean_acc = honest_acc(h_clean, byz)
+            acc = honest_acc(h, byz)
+            rows.append({
+                "strategy": spec, "m": fed.m, "rounds": rounds,
+                "faults": fx["faults"], "robust_agg": defense,
+                "byzantine_clients": byz,
+                "clean_honest_acc": clean_acc,
+                "honest_acc": acc,
+                "mean_acc": h.mean_acc[-1],
+                "recovery": acc / clean_acc if clean_acc else None,
+                "quarantined_total": fx["quarantined_total"],
+                "parity": "ok",
+            })
+            print(f"{spec:8s} {defense:18s} honest={acc:.3f} "
+                  f"clean={clean_acc:.3f} recovery={acc / clean_acc:.2f}")
+        by_def = {r["robust_agg"]: r for r in rows
+                  if r["strategy"] == spec}
+        if by_def["none"]["recovery"] >= 0.6:
+            raise RuntimeError(
+                f"§3g attack too weak ({spec}): undefended recovery "
+                f"{by_def['none']['recovery']:.2f} >= 0.6 — the Byzantine "
+                "sweep demonstrates nothing")
+        best = max(by_def[d]["recovery"]
+                   for d in ("trimmed_mean:0.25", "krum:0.25"))
+        if best < 0.9:
+            raise RuntimeError(
+                f"§3g defense too weak ({spec}): best robust recovery "
+                f"{best:.2f} < 0.9")
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_faults.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved", path)
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--group", choices=tuple(ITERATIONS) + ("all",),
@@ -882,6 +1005,11 @@ def main(argv=None):
                         "device links — the §3f hierarchy benchmark (runs "
                         "the flat-parity anchor in-bench, raises on "
                         "divergence)")
+    p.add_argument("--faults", action="store_true",
+                   help="accuracy-under-attack: Byzantine sweep × robust "
+                        "aggregators — the §3g faults benchmark (runs the "
+                        "faults-off parity anchor in-bench on every "
+                        "engine × placement, raises on divergence)")
     args = p.parse_args(argv)
     if args.round_engine:
         round_engine_bench()
@@ -900,6 +1028,9 @@ def main(argv=None):
         return
     if args.hierarchy:
         hierarchy_bench()
+        return
+    if args.faults:
+        faults_bench()
         return
     # dryrun import must precede everything jax-touching (sets XLA_FLAGS)
     from repro.launch.dryrun import run_case

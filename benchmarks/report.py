@@ -282,9 +282,59 @@ def hierarchy_section() -> str:
     return "\n".join(out)
 
 
+def faults_section() -> str:
+    """Accuracy-under-attack: Byzantine sweep × robust aggregators
+    (DESIGN.md §3g; BENCH_faults.json)."""
+    path = os.path.join(RESULTS_DIR, "BENCH_faults.json")
+    if not os.path.exists(path):
+        return ("(BENCH_faults.json not yet produced — run "
+                "`python -m benchmarks.perf_iterations --faults`)")
+    with open(path) as f:
+        rows = json.load(f)
+    out = ["Accuracy under a 25% sign-flip Byzantine attack (−10·Δ, the "
+           "gradient-ascent adversary; static client set drawn from the "
+           "fault seed), per strategy × robust aggregator.  `honest acc` "
+           "is mean final accuracy over the NON-Byzantine clients (the "
+           "Byzantine-FL convention — the adversaries' personal eval is "
+           "excluded since their data legitimately never contributes); "
+           "`recovery` is that accuracy as a fraction of the clean "
+           "(attack-free) run's honest accuracy.  The §3g faults-off "
+           "parity anchor (zero-rate spec + robust_agg=none ≡ the clean "
+           "engine, bit-exact incl. final params, on the fused, eventful "
+           "AND async engines × both placements) ran in-bench before any "
+           "row below was recorded, and the bench refuses to write the "
+           "table unless `none` demonstrably degrades and a robust rule "
+           "recovers ≥90%.", "",
+           "| strategy | defense | honest acc | clean honest acc | "
+           "recovery | quarantined |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['strategy']} | {r['robust_agg']} | "
+            f"{r['honest_acc']:.3f} | {r['clean_honest_acc']:.3f} | "
+            f"{r['recovery']:.2f}× | {r['quarantined_total']} |")
+    by = {(r["strategy"], r["robust_agg"]): r for r in rows}
+    strategies = sorted({r["strategy"] for r in rows})
+    lines = []
+    for s in strategies:
+        none = by.get((s, "none"))
+        best = max((r for r in rows if r["strategy"] == s
+                    and r["robust_agg"] != "none"),
+                   key=lambda r: r["recovery"], default=None)
+        if none and best:
+            lines.append(
+                f"{s}: undefended collapses to {none['recovery']:.2f}× of "
+                f"clean; {best['robust_agg']} recovers "
+                f"{best['recovery']:.2f}×.")
+    if lines:
+        out += ["", " ".join(lines)]
+    return "\n".join(out)
+
+
 MARKERS = {"Paper": paper_section, "Dry-run": dryrun_section,
            "Roofline": roofline_section, "Channel": channel_section,
-           "Serve": serve_section, "Hierarchy": hierarchy_section}
+           "Serve": serve_section, "Hierarchy": hierarchy_section,
+           "Faults": faults_section}
 
 SKELETON = "# EXPERIMENTS\n\n" + "\n".join(
     f"## §{name}\n\n<!-- AUTOGEN {name} -->\n<!-- /AUTOGEN {name} -->\n"

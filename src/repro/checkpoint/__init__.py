@@ -1,8 +1,11 @@
-from repro.checkpoint.checkpoint import (latest_paged_checkpoint, restore,
+from repro.checkpoint.checkpoint import (CheckpointCorruptError,
+                                         latest_paged_checkpoint,
+                                         paged_checkpoints, restore,
                                          restore_paged_state,
                                          restore_train_state, save,
                                          save_paged_state, save_train_state)
 
-__all__ = ["latest_paged_checkpoint", "restore", "restore_paged_state",
+__all__ = ["CheckpointCorruptError", "latest_paged_checkpoint",
+           "paged_checkpoints", "restore", "restore_paged_state",
            "restore_train_state", "save", "save_paged_state",
            "save_train_state"]

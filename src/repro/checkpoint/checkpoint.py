@@ -3,16 +3,34 @@
 Arrays are encoded as {"__nd__": {dtype, shape, data-bytes}}; scalars and
 strings pass through.  NamedTuple leaves (caches) are not checkpointable by
 design — persist params / optimizer state / metadata only.
+
+Writes are atomic AND verified (DESIGN.md §3g): the payload lands in a
+process-unique temp file, is flushed + fsynced, then `os.replace`d into
+place, wrapped in a crc32 envelope checked on every load — a truncated or
+bit-flipped file raises `CheckpointCorruptError` instead of silently
+restoring garbage.  Pre-envelope files (older runs) still load: the
+checksum is simply absent, not wrong.
 """
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+# outer envelope around the encoded tree: {format, crc32, payload}.  The
+# envelope is itself msgpack, so legacy (bare-tree) files are told apart
+# by the format marker, not by parse failure.
+_CKPT_MAGIC = "ckpt-crc32-v1"
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint file failed its integrity check (truncated, bit-rotted
+    or not msgpack at all) — callers fall back to an older snapshot."""
 
 
 def _encode(obj: Any) -> Any:
@@ -42,16 +60,50 @@ def _decode(obj: Any) -> Any:
 
 
 def save(path: str, tree: Any) -> None:
-    tmp = path + ".tmp"
+    """Verified atomic write: crc32 envelope, process-unique temp file,
+    flush + fsync, then `os.replace` — a crash mid-save leaves either the
+    old intact file or the new intact file, never a torn one."""
+    payload = msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True)
+    blob = msgpack.packb({"format": _CKPT_MAGIC,
+                          "crc32": zlib.crc32(payload),
+                          "payload": payload}, use_bin_type=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True))
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
 def restore(path: str) -> Any:
+    """Load + integrity-check a checkpoint.  Raises
+    `CheckpointCorruptError` on a truncated/bit-rotted file; decodes
+    legacy pre-envelope files (no checksum recorded) as-is."""
     with open(path, "rb") as f:
-        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+        blob = f.read()
+    try:
+        outer = msgpack.unpackb(blob, raw=False, strict_map_key=False)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"{path}: not a readable msgpack checkpoint (truncated?): "
+            f"{e}") from e
+    if (isinstance(outer, dict) and outer.get("format") == _CKPT_MAGIC):
+        payload = outer.get("payload")
+        if not isinstance(payload, bytes):
+            raise CheckpointCorruptError(f"{path}: envelope has no payload")
+        crc = zlib.crc32(payload)
+        if crc != outer.get("crc32"):
+            raise CheckpointCorruptError(
+                f"{path}: checksum mismatch (stored {outer.get('crc32')}, "
+                f"computed {crc}) — the file is corrupt")
+        try:
+            tree = msgpack.unpackb(payload, raw=False, strict_map_key=False)
+        except Exception as e:        # crc passed but payload won't parse
+            raise CheckpointCorruptError(
+                f"{path}: payload failed to decode: {e}") from e
+        return _decode(tree)
+    return _decode(outer)       # legacy pre-envelope checkpoint
 
 
 def save_train_state(path: str, step: int, params: Any, opt_state: Any,
@@ -93,18 +145,27 @@ def restore_paged_state(path: str) -> dict:
     return t
 
 
-def latest_paged_checkpoint(directory: str):
-    """Path of the highest-superstep snapshot in ``directory`` (resume
-    entry point), or None when there is nothing to resume from."""
+def paged_checkpoints(directory: str) -> list:
+    """Every superstep snapshot in ``directory``, NEWEST FIRST — the
+    resume fallback chain (DESIGN.md §3g): callers try each in turn,
+    skipping ones that raise `CheckpointCorruptError`, so one torn or
+    bit-rotted latest file costs at most one checkpoint cadence of
+    recompute, never the run."""
     if not os.path.isdir(directory):
-        return None
-    best, best_chunk = None, -1
+        return []
+    found = []
     for name in os.listdir(directory):
         if name.startswith(_PAGED_PREFIX) and name.endswith(".msgpack"):
             try:
                 chunk = int(name[len(_PAGED_PREFIX):-len(".msgpack")])
             except ValueError:
                 continue
-            if chunk > best_chunk:
-                best, best_chunk = os.path.join(directory, name), chunk
-    return best
+            found.append((chunk, os.path.join(directory, name)))
+    return [path for _, path in sorted(found, reverse=True)]
+
+
+def latest_paged_checkpoint(directory: str):
+    """Path of the highest-superstep snapshot in ``directory`` (resume
+    entry point), or None when there is nothing to resume from."""
+    chain = paged_checkpoints(directory)
+    return chain[0] if chain else None

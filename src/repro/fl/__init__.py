@@ -2,6 +2,10 @@ from repro.fl.channel import (Channel, ChannelCost, Codec, LinkProfile,
                               get_codec, get_link_profile, tree_bits)
 from repro.fl.comm import (SYSTEMS, SystemModel, WIRED, WIRELESS_FAST_UL,
                            WIRELESS_SLOW_UL, downlink_cost, harmonic)
+from repro.fl.faults import (FaultConfig, FaultMeter, FaultPlan,
+                             RobustAggregator, get_robust_aggregator,
+                             parse_fault_spec, register_robust,
+                             resolve_fault_plan, resolve_faults)
 from repro.fl.hierarchy import (EdgeAggregator, EdgeMeter, EdgeState,
                                 HierarchyConfig, get_edge_aggregator,
                                 register_edge_aggregator, resolve_hierarchy)
@@ -10,8 +14,8 @@ from repro.fl.population import (ClientStateStore, CohortSchedule,
                                  FixedCohort, PagingConfig, RandomCohorts,
                                  SequentialSweep, run_async_paged, run_paged,
                                  sub_federated)
-from repro.fl.simulator import (FLConfig, History, evaluate, run_federated,
-                                superstep_support)
+from repro.fl.simulator import (FLConfig, History, NonFiniteEvalWarning,
+                                evaluate, run_federated, superstep_support)
 from repro.fl.runtime import AsyncConfig, VirtualClock, run_async
 from repro.fl.serve import DeltaStore, ServeEngine, StoreBits, check_parity
 from repro.fl.stats import full_client_gradients, sigma2_estimates
@@ -31,10 +35,14 @@ __all__ = ["AsyncConfig", "VirtualClock", "run_async",
            "EdgeAggregator", "EdgeMeter", "EdgeState", "HierarchyConfig",
            "get_edge_aggregator", "register_edge_aggregator",
            "resolve_hierarchy",
+           "FaultConfig", "FaultMeter", "FaultPlan", "RobustAggregator",
+           "get_robust_aggregator", "parse_fault_spec", "register_robust",
+           "resolve_fault_plan", "resolve_faults",
            "HostVmap", "MeshShardMap", "Placement",
            "SYSTEMS", "SystemModel", "WIRED", "WIRELESS_FAST_UL",
            "WIRELESS_SLOW_UL", "downlink_cost", "harmonic", "FLConfig",
-           "History", "evaluate", "run_federated", "superstep_support",
+           "History", "NonFiniteEvalWarning", "evaluate", "run_federated",
+           "superstep_support",
            "full_client_gradients",
            "sigma2_estimates", "ClientSampler", "ClusterExtras", "CommCost",
            "FullParticipation", "MixingExtras", "RoundContext", "Strategy",

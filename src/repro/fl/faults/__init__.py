@@ -1,0 +1,26 @@
+"""Fault-injection + resilient-runtime subsystem (DESIGN.md §3g).
+
+Deterministic seeded client/device failure models (crash, NaN, Byzantine
+scaling, bit-rot) injected as pure traced transforms; a screening +
+robust-aggregation defense layer (`none | clip | trimmed_mean | median |
+krum`) routed through quarantine reweighting so every strategy degrades
+gracefully; async retry/backoff with a per-client cap; and run-level
+fault accounting in ``History.extra["faults"]``.
+
+Everything is off by default, and off is bit-identical to the seed
+engines (the faults-off parity anchor, tests/test_faults.py).
+"""
+from repro.fl.faults.config import (FaultConfig, FaultPlan, parse_fault_spec,
+                                    resolve_fault_plan, resolve_faults)
+from repro.fl.faults.defense import (ROBUST_AGGS, RobustAggregator,
+                                     get_robust_aggregator, register_robust,
+                                     screen_and_defend)
+from repro.fl.faults.inject import crash_mask, inject_values
+from repro.fl.faults.runtime import FaultMeter, pop_with_retries
+
+__all__ = ["FaultConfig", "FaultPlan", "parse_fault_spec",
+           "resolve_fault_plan", "resolve_faults",
+           "ROBUST_AGGS", "RobustAggregator", "get_robust_aggregator",
+           "register_robust", "screen_and_defend",
+           "crash_mask", "inject_values",
+           "FaultMeter", "pop_with_retries"]

@@ -1,0 +1,212 @@
+"""Screening + robust aggregation (DESIGN.md §3g).
+
+The defense layer runs between the codec uplink and the strategy's
+aggregation — on the SERVER-side decoded updates, before any mixing:
+
+    screen:  non-finite rows are quarantined (q=0) and their deltas
+             zeroed, so 0·NaN can never poison a personalized stream;
+    robust:  the selected `RobustAggregator` transforms the surviving
+             (m, D) flat deltas — clip | trimmed_mean | median | krum.
+
+The returned quarantine weights ``q`` (1 kept, 0 quarantined) are routed
+through `quarantine_reweight` inside `RoundContext.mix`/`TracedMix`, so
+every registered strategy — including UCFL's personalized mixing
+matrices — renormalizes the surviving mass per row and degrades
+gracefully, with no strategy code changed.
+
+``get_robust_aggregator("none")`` (and None) resolve to None — no screen,
+no transform: byte-for-byte the undefended engine, which is both the
+parity anchor and the bench's "attack demonstrably degrades" baseline.
+
+All transforms are pure jnp on static shapes: they fuse into the PR-5
+superstep unchanged and run under both placements.  Under partial
+participation, non-transmitting rows enter with Δ=0; the order statistics
+(trimmed_mean / median) treat those zeros as data — exact under the full
+participation the anchors pin, a documented approximation under samplers.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+
+from repro.fl.channel import stacked_ravel, stacked_unravel
+
+ROBUST_AGGS: Dict[str, Callable[..., "RobustAggregator"]] = {}
+
+
+def register_robust(name: str):
+    def deco(cls):
+        cls.name = name
+        ROBUST_AGGS[name] = cls
+        return cls
+    return deco
+
+
+class RobustAggregator(abc.ABC):
+    """One robust transform on the (m, D) flat client deltas."""
+
+    name: str
+
+    @property
+    def spec(self) -> str:
+        return self.name
+
+    @abc.abstractmethod
+    def transform(self, delta: jnp.ndarray, keep: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(delta', keep'): ``delta`` is the screened (m, D) update stack
+        (quarantined rows already zeroed), ``keep`` the (m,) float32
+        survival weights.  Selection rules (krum) zero more of ``keep``;
+        value rules (clip/trim/median) reshape ``delta``."""
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.spec!r})"
+
+
+def _nan_where(delta: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Quarantined rows as NaN, so nan-aware order statistics skip them
+    instead of counting their zeroed deltas."""
+    return jnp.where(keep[:, None] > 0, delta, jnp.float32(jnp.nan))
+
+
+@register_robust("clip")
+class Clip(RobustAggregator):
+    """Per-row L2 norm clip at a static bound ``c`` — the cheapest screen
+    against magnitude attacks; direction attacks (sign flip) pass."""
+
+    def __init__(self, c: float = 1.0):
+        if c <= 0:
+            raise ValueError(f"clip bound must be > 0, got {c}")
+        self.c = float(c)
+
+    @property
+    def spec(self) -> str:
+        return f"clip:{self.c:g}"
+
+    def transform(self, delta, keep):
+        norm = jnp.linalg.norm(delta, axis=1, keepdims=True)
+        scale = jnp.minimum(1.0, self.c / jnp.maximum(norm, 1e-12))
+        return delta * scale, keep
+
+
+@register_robust("trimmed_mean")
+class TrimmedMean(RobustAggregator):
+    """Coordinate-wise winsorization at the (f, 1−f) quantiles of the
+    surviving rows: every entry is clamped into the robust interval, so
+    any downstream weighted mean IS a winsorized (trimmed-family) mean —
+    the form that composes with per-client mixing matrices."""
+
+    def __init__(self, f: float = 0.1):
+        if not 0.0 < f < 0.5:
+            raise ValueError("trimmed_mean fraction must be in (0, 0.5), "
+                             f"got {f}")
+        self.f = float(f)
+
+    @property
+    def spec(self) -> str:
+        return f"trimmed_mean:{self.f:g}"
+
+    def transform(self, delta, keep):
+        nan_view = _nan_where(delta, keep)
+        # inner order statistics ("higher"/"lower"), NOT interpolated:
+        # linear interpolation would blend a fraction of an extreme
+        # (possibly adversarial, possibly huge) value into the bound itself
+        lo = jnp.nanquantile(nan_view, self.f, axis=0, method="higher")
+        hi = jnp.nanquantile(nan_view, 1.0 - self.f, axis=0, method="lower")
+        clamped = jnp.clip(delta, lo, hi)
+        # all rows quarantined -> NaN bounds: keep the (zeroed) deltas
+        return jnp.where(jnp.isnan(lo)[None, :], delta, clamped), keep
+
+
+@register_robust("median")
+class Median(RobustAggregator):
+    """Coordinate-wise median of the surviving rows, broadcast to every
+    row: the strongest value defense (breakdown 1/2) but personalization-
+    free — all clients receive the same robust delta."""
+
+    @property
+    def spec(self) -> str:
+        return "median"
+
+    def transform(self, delta, keep):
+        med = jnp.nanmedian(_nan_where(delta, keep), axis=0)
+        med = jnp.where(jnp.isnan(med), 0.0, med)
+        return jnp.broadcast_to(med[None, :], delta.shape), keep
+
+
+@register_robust("krum")
+class Krum(RobustAggregator):
+    """Multi-Krum selection (Blanchard et al. 2017): score each client by
+    the sum of its m−f−2 smallest squared distances to the others and
+    quarantine the f highest-scoring clients (``f = round(frac·m)``
+    assumed adversaries).  A pure selection rule: ``delta`` is untouched,
+    ``keep`` shrinks — the quarantine reweighting renormalizes whatever
+    mixing rule runs downstream."""
+
+    def __init__(self, frac: float = 0.25):
+        if not 0.0 < frac < 0.5:
+            raise ValueError("krum byzantine fraction must be in (0, 0.5), "
+                             f"got {frac}")
+        self.frac = float(frac)
+
+    @property
+    def spec(self) -> str:
+        return f"krum:{self.frac:g}"
+
+    def transform(self, delta, keep):
+        m = delta.shape[0]
+        f = int(round(self.frac * m))
+        if m - f - 2 < 1:       # cohort too small to score: keep everyone
+            return delta, keep
+        sq = jnp.sum((delta[:, None, :] - delta[None, :, :]) ** 2, axis=-1)
+        inf = jnp.float32(jnp.inf)
+        drop = keep <= 0
+        sq = jnp.where(jnp.eye(m, dtype=bool) | drop[None, :]
+                       | drop[:, None], inf, sq)
+        nearest = jnp.sort(sq, axis=1)[:, :m - f - 2]
+        score = jnp.sum(nearest, axis=1)
+        score = jnp.where(drop, inf, score)
+        # keep the m−f lowest-scoring clients (among survivors)
+        cut = jnp.sort(score)[m - f - 1]
+        selected = (score <= cut) & ~drop
+        return delta, keep * selected.astype(keep.dtype)
+
+
+def get_robust_aggregator(spec: Union[str, RobustAggregator, None]
+                          ) -> Optional[RobustAggregator]:
+    """``none | clip:<c> | trimmed_mean:<f> | median | krum:<f>`` ->
+    `RobustAggregator` (None = no defense, the parity path)."""
+    if spec is None or isinstance(spec, RobustAggregator):
+        return spec
+    family, _, param = str(spec).partition(":")
+    if family == "none":
+        if param:
+            raise ValueError(f"robust aggregator 'none' takes no parameter, "
+                             f"got {spec!r}")
+        return None
+    cls = ROBUST_AGGS.get(family)
+    if cls is None:
+        raise ValueError(f"unknown robust aggregator {spec!r}; one of "
+                         f"none | {' | '.join(sorted(ROBUST_AGGS))}")
+    try:
+        return cls(float(param)) if param else cls()
+    except TypeError:
+        raise ValueError(f"robust aggregator {family!r} takes no parameter, "
+                         f"got {spec!r}") from None
+
+
+def screen_and_defend(agg: RobustAggregator, stacked: Any, prev: Any
+                      ) -> Tuple[Any, jnp.ndarray]:
+    """The full defense pipeline on the server-side decoded stack:
+    non-finite screen -> robust transform.  Returns ``(stacked',
+    quarantine)`` where ``quarantine`` is the (m,) float32 survival row
+    (1 kept, 0 quarantined) for `quarantine_reweight`."""
+    flat_prev = stacked_ravel(prev)
+    delta = stacked_ravel(stacked) - flat_prev
+    finite = jnp.all(jnp.isfinite(delta), axis=1)
+    keep = finite.astype(jnp.float32)
+    delta = jnp.where(finite[:, None], delta, 0.0)
+    delta, keep = agg.transform(delta, keep)
+    return stacked_unravel(flat_prev + delta, stacked), keep

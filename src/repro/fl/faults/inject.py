@@ -1,0 +1,79 @@
+"""Deterministic seeded fault injection (DESIGN.md §3g).
+
+Pure traced transforms on the stacked client update — they run unmodified
+inside the PR-5 fused superstep on both placements.  Key derivation: the
+engines hand in ``kfault = fold_in(kround, 3)`` (indices 1 and 2 are the
+strategies' and the codec's derivations); every fault kind folds its own
+constant off ``kfault``, so adding a fault axis never shifts another's
+draws and a zero-rate axis is a compile-time no-op (the trace literally
+does not contain it).
+
+The value path works on the (m, D) flat delta view (`stacked_ravel`):
+Byzantine scaling, NaN rows and bit-rot all corrupt WHAT THE CLIENT
+TRANSMITS (Δ = update − prev), never the client's own resident state —
+crash is the only fault that touches the client row itself (rollback to
+``prev``/``prev_opt``, exactly a sampler no-show).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.channel import stacked_ravel, stacked_unravel
+from repro.fl.faults.config import FaultPlan
+
+
+def crash_mask(plan: Optional[FaultPlan], kfault,
+               m: int) -> Optional[jnp.ndarray]:
+    """(m,) bool — True where the client crashes this round (sync
+    engines; the async runtime draws crashes at the ARRIVAL level via
+    `FaultPlan.arrival_crash` instead).  None when crashes are off."""
+    if plan is None or plan.cfg.crash <= 0.0:
+        return None
+    return jax.random.bernoulli(jax.random.fold_in(kfault, 0),
+                                plan.cfg.crash, (m,))
+
+
+def inject_values(plan: FaultPlan, byz_row: jnp.ndarray, stacked: Any,
+                  prev: Any, kfault,
+                  rows: Optional[jnp.ndarray] = None) -> Any:
+    """Apply the value faults (Byzantine scale/flip, NaN, bit-rot) to the
+    transmitted update.  ``byz_row`` is the plan's (m,)/(k,) static
+    adversary indicator (a traced ``consts`` input, so per-cohort rows
+    never retrace the superstep); ``rows`` optionally restricts every
+    fault to the rows that actually transmit this round (sampler
+    participants / the async fresh cohort)."""
+    if not plan.value_faults:
+        return stacked
+    cfg = plan.cfg
+    flat_prev = stacked_ravel(prev)
+    delta = stacked_ravel(stacked) - flat_prev
+    m = delta.shape[0]
+
+    hit = (jnp.ones((m,), bool) if rows is None
+           else jnp.asarray(rows, bool))
+    byz = (jnp.asarray(byz_row, jnp.float32) > 0.0) & hit
+    factor = jnp.float32(-cfg.byz_scale if cfg.byz_mode == "sign_flip"
+                         else cfg.byz_scale)
+    delta = jnp.where(byz[:, None], factor * delta, delta)
+
+    if cfg.bitrot > 0.0:
+        rot = jax.random.bernoulli(jax.random.fold_in(kfault, 2),
+                                   cfg.bitrot, (m,)) & hit
+        elem = jax.random.bernoulli(jax.random.fold_in(kfault, 3),
+                                    cfg.bitrot_density, delta.shape)
+        bit = jax.random.randint(jax.random.fold_in(kfault, 4),
+                                 delta.shape, 0, 32, dtype=jnp.int32)
+        as_int = jax.lax.bitcast_convert_type(delta, jnp.int32)
+        flipped = jax.lax.bitcast_convert_type(
+            as_int ^ (jnp.int32(1) << bit), jnp.float32)
+        delta = jnp.where(rot[:, None] & elem, flipped, delta)
+
+    if cfg.nan > 0.0:
+        bad = jax.random.bernoulli(jax.random.fold_in(kfault, 1),
+                                   cfg.nan, (m,)) & hit
+        delta = jnp.where(bad[:, None], jnp.float32(jnp.nan), delta)
+
+    return stacked_unravel(flat_prev + delta, stacked)

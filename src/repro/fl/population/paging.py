@@ -39,6 +39,7 @@ async mixes over the full population stack).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Union
@@ -47,12 +48,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import (latest_paged_checkpoint, restore_paged_state,
-                              save_paged_state)
+from repro.checkpoint import (CheckpointCorruptError, paged_checkpoints,
+                              restore_paged_state, save_paged_state)
 from repro.data.federated import FederatedData
 from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
                               round_downlink_time)
 from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.faults import (FaultMeter, get_robust_aggregator,
+                             inject_values, pop_with_retries,
+                             resolve_fault_plan, screen_and_defend)
 from repro.fl.placement import (Placement, reduce_scores, resolve_placement,
                                 stack_params)
 from repro.fl.population.schedule import (CohortSchedule, FixedCohort,
@@ -63,7 +67,8 @@ from repro.fl.simulator import (FLConfig, History, _build_traced_round,
                                 channel_uplink, charge_round,
                                 default_model_init, finalize_history,
                                 init_channel, per_client_uplink_bits,
-                                resolve_strategy, superstep_support)
+                                record_eval, resolve_strategy,
+                                superstep_support)
 from repro.fl.strategies import (ClientSampler, CommCost, RoundContext,
                                  Strategy)
 from repro.models import lenet
@@ -211,11 +216,18 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
               placement: Optional[Placement] = None,
               channel: Union[str, Channel, None] = None,
               keep_state: bool = False,
+              faults: Optional[Any] = None,
+              robust_agg: Optional[str] = None,
+              min_quorum: Optional[int] = None,
               seed: int = 0) -> History:
     """Paged synchronous run: `run_federated` semantics per cohort, the
     population paged through the host-backed store (module docstring).
     Returns History; ``keep_state=True`` attaches the FULL population's
-    final params / opt state (host-backed, as device views)."""
+    final params / opt state (host-backed, as device views).  ``faults``/
+    ``robust_agg``/``min_quorum`` (DESIGN.md §3g) work per cohort: the
+    `FaultPlan` is resolved ONCE at the population size and each cohort's
+    static adversary row is gathered into the superstep ``consts`` — so
+    per-cohort rows never retrace the compiled round."""
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")
@@ -229,6 +241,12 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
             f"but this run cannot fuse: {why}")
 
     n = fed.m
+    plan = resolve_fault_plan(faults, n)
+    defense = get_robust_aggregator(robust_agg)
+    robust_spec = "none" if defense is None else str(robust_agg)
+    fmeter = None
+    if plan is not None or defense is not None or min_quorum is not None:
+        fmeter = FaultMeter(plan, robust_spec, min_quorum)
     sched = paging.resolve_schedule()
     m_c = sched.cohort
     if m_c > n:
@@ -268,9 +286,12 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
     # THE resident engine's compiled superstep — same trace builder, same
     # cache entry (the S3 executable-reuse contract)
     round_fn = _build_traced_round(strategy, sampler, codec, ef_flag,
-                                   placement, update_fn)
+                                   placement, update_fn, fault_plan=plan,
+                                   defense=defense, min_quorum=min_quorum)
     cache = _superstep_cache(placement, strategy, sampler, codec, ef_flag,
-                             update_fn, acc_fn)
+                             update_fn, acc_fn,
+                             fault_cfg=None if plan is None else plan.cfg,
+                             robust_spec=robust_spec, min_quorum=min_quorum)
     eval_fn = lambda st, ed: placement.eval_traced(acc_fn, st, ed[0], ed[1])
 
     def build_setup(idx: np.ndarray):
@@ -279,11 +300,15 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
                            params0=params0, seed=seed, placement=placement,
                            strategy=strategy)
         state = strategy.setup(ctx)
+        consts = strategy.traced_state(state)
+        if plan is not None:
+            # cohort-gathered adversary row, a traced const input (§3g)
+            consts = (consts, jnp.asarray(plan.byz_row(idx)))
         # device_put: the population lives in HOST memory, so place_data
         # yields numpy leaves here — pin them on device once per cohort
         # setup (cached), or every superstep dispatch would re-upload them
         # AND miss the jit fast path on the changed input signature.
-        return (state, strategy.traced_state(state), strategy.comm(state),
+        return (state, consts, strategy.comm(state),
                 strategy.membership(state),
                 jax.device_put(placement.place_data(sub)),
                 (jnp.asarray(sub.x_val), jnp.asarray(sub.y_val)))
@@ -292,25 +317,43 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
     chunks = list(_eval_rounds(fl.rounds, fl.eval_every))
     meta = {"population": n, "cohort": m_c, "schedule": sched.spec,
             "strategy": strategy.spec, "seed": seed, "rounds": fl.rounds,
-            "eval_every": fl.eval_every, "lossy": lossy}
+            "eval_every": fl.eval_every, "lossy": lossy,
+            "faults": "none" if plan is None else plan.cfg.spec,
+            "robust_agg": robust_spec, "min_quorum": min_quorum}
 
     history = History()
     t_accum = 0.0
     start_chunk = 0
     if paging.resume and paging.checkpoint_dir:
-        ck_path = latest_paged_checkpoint(paging.checkpoint_dir)
-        if ck_path is not None:
-            saved = restore_paged_state(ck_path)
-            if saved["meta"] != meta:
+        # fallback chain (DESIGN.md §3g): newest snapshot first, skipping
+        # any that fail the integrity check — one torn/bit-rotted latest
+        # file costs at most one checkpoint cadence of recompute
+        for ck_path in paged_checkpoints(paging.checkpoint_dir):
+            try:
+                saved = restore_paged_state(ck_path)
+            except CheckpointCorruptError as e:
+                warnings.warn(
+                    f"paged checkpoint {ck_path} failed its integrity "
+                    f"check ({e}); falling back to the previous intact "
+                    "snapshot", RuntimeWarning, stacklevel=2)
+                continue
+            saved_meta = dict(saved["meta"])
+            # pre-§3g checkpoints carry no fault keys: they were written
+            # by faults-off runs, so they resume as such
+            saved_meta.setdefault("faults", "none")
+            saved_meta.setdefault("robust_agg", "none")
+            saved_meta.setdefault("min_quorum", None)
+            if saved_meta != meta:
                 raise ValueError(
                     f"checkpoint {ck_path} was written by a different run "
-                    f"configuration: {saved['meta']} != {meta}")
+                    f"configuration: {saved_meta} != {meta}")
             store = ClientStateStore.from_state_dict(
                 saved["store"], directory=paging.store_dir)
             history = _history_from_state(saved["history"])
             t_accum = float(saved["t_accum"])
             key = jnp.asarray(np.asarray(saved["key"], np.uint32))
             start_chunk = int(saved["chunk"]) + 1
+            break
 
     state = None
     staged, staged_for = None, None
@@ -325,22 +368,40 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
         buffer overlaps that compute.  Values and append order are
         exactly the eager loop's (parity-neutral reordering)."""
         nonlocal t_accum
-        p_t, p_nxt, p_idx, p_carry, p_masks, p_accs, p_cost, p_asn, \
+        p_t, p_nxt, p_idx, p_carry, p_outs, p_accs, p_cost, p_asn, \
             p_len, p_key = p
+        p_masks, p_crashes, p_qs = p_outs
         masks_np = (np.asarray(p_masks)
                     if p_masks is not None
-                    and (channel is not None or system is not None)
+                    and (channel is not None or system is not None
+                         or fmeter is not None)
                     else None)
+        crashes_np = None if p_crashes is None else np.asarray(p_crashes)
+        qs_np = None if p_qs is None else np.asarray(p_qs)
         for i in range(p_len):
+            mrow = None if masks_np is None else masks_np[i]
+            crow = None if crashes_np is None else crashes_np[i]
+            eff = mrow
+            if crow is not None:
+                eff = ~crow if eff is None else eff & ~crow
+            n_eff = m_c if eff is None else int(eff.sum())
+            ok_q = min_quorum is None or n_eff >= min_quorum
             t_accum = charge_round(
-                history, p_cost, None if masks_np is None else masks_np[i],
+                history, p_cost if ok_q else CommCost(0, 0), eff,
                 m_c, payload, link, system, channel, t_accum,
-                p_asn, ul_bits_pc)
+                p_asn if ok_q else None, ul_bits_pc)
+            if fmeter is not None:
+                qrow = None if qs_np is None else qs_np[i]
+                rbits = qbits = 0
+                if channel is not None:
+                    rbits = (n_eff * payload if ul_bits_pc is None else
+                             int(np.sum(ul_bits_pc[eff]) if eff is not None
+                                 else np.sum(ul_bits_pc)))
+                    if qrow is not None:
+                        qbits = int(np.sum(qrow <= 0)) * payload
+                fmeter.charge(crow, qrow, ok_q, rbits, qbits)
         mean_acc, worst_acc = reduce_scores(p_accs)
-        history.rounds.append(p_nxt)
-        history.mean_acc.append(mean_acc)
-        history.worst_acc.append(worst_acc)
-        history.time.append(t_accum)
+        record_eval(history, p_nxt, mean_acc, worst_acc, t_accum)
 
         out = {"params": p_carry[1], "opt": p_carry[2]}
         if lossy:
@@ -376,7 +437,7 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
         carry = (key, rows["params"], rows["opt"], rows.get("ef"))
 
         length = nxt - rnd + 1
-        carry, masks, accs = placement.run_supersteps(
+        carry, outs, accs = placement.run_supersteps(
             round_fn, carry, data, consts, length, cache=cache,
             eval_fn=eval_fn, eval_data=eval_data)
         # the key chain continues on device — no host sync between chunks
@@ -395,7 +456,7 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
         # copy program runs before the donation, in dispatch order).
         ck_key = (jnp.array(carry[0], copy=True) if paging.checkpoint_dir
                   else None)
-        pending = (t, nxt, idx, carry, masks, accs, cost, assignment,
+        pending = (t, nxt, idx, carry, outs, accs, cost, assignment,
                    length, ck_key)
         done_chunks += 1
         if (paging.prefetch and t + 1 < len(chunks)
@@ -423,6 +484,8 @@ def run_paged(algorithm: Union[str, Strategy, None] = None,
         "store_bytes": int(store.nbytes),
         "store_dir": paging.store_dir, "chunks": len(chunks),
         "resumed_at": start_chunk if start_chunk else None}
+    if fmeter is not None:
+        history.extra["faults"] = fmeter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history
@@ -445,6 +508,9 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
                     placement: Optional[Placement] = None,
                     channel: Union[str, Channel, None] = None,
                     keep_state: bool = False,
+                    faults: Optional[Any] = None,
+                    robust_agg: Optional[str] = None,
+                    min_quorum: Optional[int] = None,
                     seed: int = 0) -> History:
     """Store-backed buffered-async run: each event's arrival buffer is
     the page request — its rows are gathered, updated, aggregated
@@ -470,6 +536,13 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
     k_buf = min(cfg.buffer_k, n)
     tau = np.inf if cfg.max_staleness is None else float(cfg.max_staleness)
     fed = _host_federated(fed)
+    plan = resolve_fault_plan(faults, n)
+    defense = get_robust_aggregator(robust_agg)
+    robust_spec = "none" if defense is None else str(robust_agg)
+    fmeter = None
+    if plan is not None or defense is not None or min_quorum is not None:
+        fmeter = FaultMeter(plan, robust_spec, min_quorum)
+    attempts: dict = {}         # per-client consecutive-crash counter
 
     key = jax.random.PRNGKey(seed)
     key, kinit = jax.random.split(key)
@@ -522,7 +595,23 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
     state = None
 
     for event in range(fl.rounds):
-        buffered = [clock.pop()[1] for _ in range(k_buf)]
+        # crashed arrivals requeue with backoff (no new compute draw) and
+        # die past max_retries — shared loop with the resident engine
+        buffered = []
+        while len(buffered) < k_buf:
+            nxt_arrival = pop_with_retries(clock, plan, cfg.max_retries,
+                                           cfg.retry_backoff, attempts,
+                                           fmeter)
+            if nxt_arrival is None:
+                break
+            buffered.append(nxt_arrival[1])
+        if not buffered:
+            warnings.warn(
+                f"async paged run ended early at event {event}/"
+                f"{fl.rounds}: every remaining client exhausted its crash "
+                f"retries (dead: {sorted(fmeter.dead) if fmeter else []})",
+                RuntimeWarning, stacklevel=2)
+            break
         idx = np.sort(np.asarray(buffered, dtype=np.int64))
         k = idx.size
         entry = setups.get(idx)
@@ -549,45 +638,83 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
             stacked = placement.select(mask, upd, prev)
             opt_state = placement.select(mask, upd_opt, prev_opt)
 
+        if plan is not None and plan.value_faults:
+            # fault injection (DESIGN.md §3g) on the cohort stack; the
+            # adversary row is the plan's, gathered at the cohort indices
+            stacked = inject_values(plan, jnp.asarray(plan.byz_row(idx)),
+                                    stacked, prev,
+                                    jax.random.fold_in(kround, 3),
+                                    rows=mask)
+
         if lossy:
             stacked, ef = channel_uplink(placement, channel, stacked, prev,
                                          ef, kround, mask)
 
-        ctx.rnd, ctx.key, ctx.participation = \
-            event, jax.random.fold_in(kround, 1), mask
-        ctx.staleness = jnp.asarray(age, jnp.float32) if age.any() else None
-        stacked, state = strategy.aggregate(state, stacked, prev, ctx)
-        entry[0] = state
+        q = None
+        if defense is not None:
+            stacked, q = screen_and_defend(defense, stacked, prev)
+
+        n_fresh = int(fresh.sum())
+        quorum_ok = min_quorum is None or n_fresh >= min_quorum
+        if quorum_ok:
+            ctx.rnd, ctx.key, ctx.participation = \
+                event, jax.random.fold_in(kround, 1), mask
+            ctx.staleness = (jnp.asarray(age, jnp.float32)
+                             if age.any() else None)
+            ctx.quarantine = q
+            stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+            ctx.quarantine = None
+            entry[0] = state
+        else:
+            # below quorum: the event is undone — the cohort's rows stay
+            # at their pre-event state and the uploads are wasted
+            stacked, opt_state = prev, prev_opt
 
         # every cohort row is a buffered client: all of them download the
         # new mix and restart.  The cohort-local strategy already reports
         # cohort-sized costs; cap streams at the cohort like the resident
         # event charging (exact in lockstep, where cohort == population).
-        cost = strategy.comm(state)
-        cost = CommCost(min(cost.n_streams, k), cost.n_unicasts)
+        ul_total = (sum(_ul_bits(c) for c in buffered)
+                    if channel is not None else 0)
+        if quorum_ok:
+            cost = strategy.comm(state)
+            cost = CommCost(min(cost.n_streams, k), cost.n_unicasts)
+        else:
+            cost = CommCost(0, 0)
         history.comm.append(cost)
         if channel is not None:
             history.comm_bits.append(ChannelCost(
                 dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
-                ul_bits=sum(_ul_bits(c) for c in buffered)))
-        if link is not None:
-            # cohort-local membership indexes cohort rows; the link clock
-            # indexes by population id — translate (exact in lockstep,
-            # where the cohort IS the population)
-            memb = strategy.membership(state)
-            if memb is not None:
-                full = np.zeros(n, dtype=np.int64)
-                full[idx] = np.asarray(memb, np.int64)
-                memb = full
-            duration = round_downlink_time(link, cost, payload, buffered,
-                                           memb)
+                ul_bits=ul_total))
+        if quorum_ok:
+            if link is not None:
+                # cohort-local membership indexes cohort rows; the link
+                # clock indexes by population id — translate (exact in
+                # lockstep, where the cohort IS the population)
+                memb = strategy.membership(state)
+                if memb is not None:
+                    full = np.zeros(n, dtype=np.int64)
+                    full[idx] = np.asarray(memb, np.int64)
+                    memb = full
+                duration = round_downlink_time(link, cost, payload,
+                                               buffered, memb)
+            else:
+                duration = cost.n_streams + cost.n_unicasts
+            done = clock.serve(duration, overlap=True)
         else:
-            duration = cost.n_streams + cost.n_unicasts
-        done = clock.serve(duration, overlap=True)
+            done = clock.now
         t_done = max(t_done, done)
         for c in buffered:
             clock.schedule(c, done, ul_bits=_ul_bits(c))
-            version[c] = event + 1
+            if quorum_ok:
+                version[c] = event + 1
+        if fmeter is not None:
+            qrow = None if q is None else np.asarray(q)
+            qbits = 0
+            if channel is not None and qrow is not None and quorum_ok:
+                qbits = int(np.sum(qrow <= 0)) * payload
+            fmeter.charge(None, qrow, quorum_ok,
+                          ul_total if channel is not None else 0, qbits)
 
         out = {"params": stacked, "opt": opt_state}
         if lossy:
@@ -598,10 +725,7 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
             # `stacked` is still device-resident — cohort-local eval, the
             # resident engine's full-population eval in the lockstep anchor
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, sub)
-            history.rounds.append(event)
-            history.mean_acc.append(mean_acc)
-            history.worst_acc.append(worst_acc)
-            history.time.append(t_done)
+            record_eval(history, event, mean_acc, worst_acc, t_done)
 
     if state is None:
         raise ValueError("fl.rounds must be >= 1 for the async runtime")
@@ -614,12 +738,16 @@ def run_async_paged(algorithm: Union[str, Strategy, None] = None,
                               "staleness_schedule": cfg.staleness_schedule,
                               "staleness_discount": cfg.staleness_discount,
                               "staleness_alpha": cfg.staleness_alpha,
+                              "max_retries": cfg.max_retries,
+                              "retry_backoff": cfg.retry_backoff,
                               "events": fl.rounds}
     history.extra["paging"] = {
         "population": n, "cohort": k_buf, "schedule": "arrival-buffer",
         "store_bytes": int(store.nbytes),
         "store_dir": paging.store_dir, "chunks": fl.rounds,
         "resumed_at": None}
+    if fmeter is not None:
+        history.extra["faults"] = fmeter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history

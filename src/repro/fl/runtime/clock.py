@@ -76,6 +76,15 @@ class VirtualClock:
         heapq.heappush(self._heap, (t, int(client)))
         return t
 
+    def requeue(self, client: int, at: float) -> float:
+        """Re-push an already-drawn arrival at ``at`` — NO new compute
+        draw.  The async retry path (DESIGN.md §3g): a crashed arrival is
+        rescheduled with deterministic backoff without shifting the
+        clock's draw sequence, so faults-off runs and the engines' JAX key
+        schedule stay bit-identical."""
+        heapq.heappush(self._heap, (float(at), int(client)))
+        return float(at)
+
     def pop(self) -> Tuple[float, int]:
         """(arrival_time, client) of the earliest pending upload."""
         t, c = heapq.heappop(self._heap)

@@ -32,6 +32,7 @@ Both placements work: `HostVmap` masks cohorts via `placement.select`;
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Union
 
@@ -43,12 +44,16 @@ from repro.data.federated import FederatedData
 from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
                               round_downlink_time)
 from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.faults import (FaultMeter, get_robust_aggregator,
+                             inject_values, pop_with_retries,
+                             screen_and_defend)
 from repro.fl.placement import Placement, resolve_placement
 from repro.fl.runtime.clock import VirtualClock
 from repro.fl.simulator import (FLConfig, History, channel_extra,
                                 channel_uplink, finalize_history,
                                 init_channel, init_run,
-                                per_client_uplink_bits, resolve_strategy)
+                                per_client_uplink_bits, record_eval,
+                                resolve_strategy)
 from repro.fl.strategies import CommCost, Strategy
 from repro.models import lenet
 
@@ -68,16 +73,30 @@ class AsyncConfig:
                         ``(1+age)**-α``, Xie et al. 2019).
     staleness_discount: λ of the ``exp`` schedule (1.0 = no discounting).
     staleness_alpha:    α of the ``poly`` schedule.
+    max_retries:        with a crash fault model (DESIGN.md §3g): a client
+                        whose upload crashes this many CONSECUTIVE times
+                        is dead for the run (0 = first crash kills).
+    retry_backoff:      base of the crashed-arrival reschedule delay,
+                        ``backoff · 2**attempt`` (deterministic
+                        exponential backoff; no new compute draw).
     """
     buffer_k: int = 2
     max_staleness: Optional[float] = None
     staleness_schedule: str = "exp"
     staleness_discount: float = 0.9
     staleness_alpha: float = 0.5
+    max_retries: int = 3
+    retry_backoff: float = 1.0
 
     def __post_init__(self):
         if self.buffer_k < 1:
             raise ValueError(f"buffer_k must be >= 1, got {self.buffer_k}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.retry_backoff <= 0.0:
+            raise ValueError(f"retry_backoff must be > 0, got "
+                             f"{self.retry_backoff}")
         if self.staleness_schedule not in ("exp", "poly"):
             raise ValueError("staleness_schedule must be 'exp' or 'poly', "
                              f"got {self.staleness_schedule!r}")
@@ -106,6 +125,9 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
               keep_state: bool = False,
               paging: Optional[Any] = None,
               hierarchy: Optional[Any] = None,
+              faults: Optional[Any] = None,
+              robust_agg: Optional[str] = None,
+              min_quorum: Optional[int] = None,
               seed: int = 0) -> History:
     """Run `fl.rounds` buffered-async aggregation events; returns History.
 
@@ -134,7 +156,8 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                                loss_fn=loss_fn, acc_fn=acc_fn,
                                system=system, placement=placement,
                                channel=channel, keep_state=keep_state,
-                               seed=seed)
+                               faults=faults, robust_agg=robust_agg,
+                               min_quorum=min_quorum, seed=seed)
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")
@@ -158,7 +181,16 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     # donation — every event rolls in-flight clients back against `prev`
     key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
-                 placement, seed, hierarchy=hierarchy, system=system)
+                 placement, seed, hierarchy=hierarchy, system=system,
+                 faults=faults)
+    plan = ctx.fault_plan
+    defense = get_robust_aggregator(robust_agg)
+    robust_spec = "none" if defense is None else str(robust_agg)
+    byz_row = None if plan is None else jnp.asarray(plan.byz_row())
+    fmeter = None
+    if plan is not None or defense is not None or min_quorum is not None:
+        fmeter = FaultMeter(plan, robust_spec, min_quorum)
+    attempts: dict = {}         # per-client consecutive-crash counter
     meter = None
     if hierarchy is not None:
         from repro.fl.hierarchy import EdgeMeter
@@ -195,7 +227,23 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
     t_done = 0.0
 
     for event in range(fl.rounds):
-        buffered = [clock.pop()[1] for _ in range(k_buf)]
+        # with a crash fault model, arrivals survive a crash coin: crashed
+        # ones requeue with exponential backoff (no new compute draw —
+        # the clock stream never shifts), capped retries kill the client
+        buffered = []
+        while len(buffered) < k_buf:
+            nxt = pop_with_retries(clock, plan, cfg.max_retries,
+                                   cfg.retry_backoff, attempts, fmeter)
+            if nxt is None:
+                break
+            buffered.append(nxt[1])
+        if not buffered:
+            warnings.warn(
+                f"async run ended early at event {event}/{fl.rounds}: "
+                "every remaining client exhausted its crash retries "
+                f"(dead: {sorted(fmeter.dead) if fmeter else []})",
+                RuntimeWarning, stacklevel=2)
+            break
         age = event - version                       # (m,) contributor ages
         fresh_np = np.zeros(m, dtype=bool)
         fresh_np[[c for c in buffered if age[c] <= tau]] = True
@@ -227,6 +275,14 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                     jnp.asarray(fresh_np[buffered]), stacked, opt_state,
                     x, y, n, ckeys)
 
+        if plan is not None and plan.value_faults:
+            # fault injection (DESIGN.md §3g): the fresh cohort's
+            # TRANSMITTED updates are corrupted (arrival crashes were
+            # already decided at the clock, via `pop_with_retries`)
+            stacked = inject_values(plan, byz_row, stacked, prev,
+                                    jax.random.fold_in(kround, 3),
+                                    rows=mask)
+
         if lossy:
             # uplink channel crossing (DESIGN.md §3b): the fresh cohort's
             # updates reach the server through the codec; in-flight /
@@ -235,27 +291,50 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
             stacked, ef = channel_uplink(placement, channel, stacked, prev,
                                          ef, kround, mask)
 
-        ctx.rnd, ctx.key, ctx.participation = \
-            event, jax.random.fold_in(kround, 1), mask
-        ctx.staleness = jnp.asarray(age, jnp.float32) if age.any() else None
-        mixed, state = strategy.aggregate(state, stacked, prev, ctx)
+        q = None
+        if defense is not None:
+            # screening + robust aggregation (DESIGN.md §3g) before mixing
+            stacked, q = screen_and_defend(defense, stacked, prev)
 
-        # the buffered clients (fresh AND stale-dropped) pull the new mix
-        # and restart; everyone else is mid-flight and keeps its model
-        down_np = np.zeros(m, dtype=bool)
-        down_np[buffered] = True
-        if down_np.all():
-            stacked = mixed
+        n_fresh = int(fresh_np.sum())
+        quorum_ok = min_quorum is None or n_fresh >= min_quorum
+        if quorum_ok:
+            ctx.rnd, ctx.key, ctx.participation = \
+                event, jax.random.fold_in(kround, 1), mask
+            ctx.staleness = (jnp.asarray(age, jnp.float32)
+                             if age.any() else None)
+            ctx.quarantine = q
+            mixed, state = strategy.aggregate(state, stacked, prev, ctx)
+            ctx.quarantine = None
+
+            # the buffered clients (fresh AND stale-dropped) pull the new
+            # mix and restart; everyone else is mid-flight, keeps its model
+            down_np = np.zeros(m, dtype=bool)
+            down_np[buffered] = True
+            if down_np.all():
+                stacked = mixed
+            else:
+                stacked = placement.select(jnp.asarray(down_np), mixed,
+                                           stacked)
         else:
-            stacked = placement.select(jnp.asarray(down_np), mixed, stacked)
+            # below quorum: the event is undone — no mix, no downlink, no
+            # version bump; the buffered clients restart from their last
+            # downloaded models and their uploads are wasted (the EF
+            # residuals keep the uplink they actually transmitted)
+            stacked, opt_state = prev, prev_opt
 
         # event-level downlink: only the buffered cohort downloads, so the
         # server transmits at most k_buf distinct broadcast streams and the
         # cohort's share of any per-client unicasts (the strategy reports
         # full-cohort costs; K=m recovers them exactly — lockstep anchor)
-        cost = strategy.comm(state)
-        cost = CommCost(min(cost.n_streams, len(buffered)),
-                        int(round(cost.n_unicasts * len(buffered) / m)))
+        ul_total = (sum(_ul_bits(c) for c in buffered)
+                    if channel is not None else 0)
+        if quorum_ok:
+            cost = strategy.comm(state)
+            cost = CommCost(min(cost.n_streams, len(buffered)),
+                            int(round(cost.n_unicasts * len(buffered) / m)))
+        else:
+            cost = CommCost(0, 0)       # no mix moved: no downlink at all
         history.comm.append(cost)
         if channel is not None:
             # every buffered client uploaded one payload (stale-dropped
@@ -263,38 +342,46 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
             # codec-compressed model per stream (§3b)
             history.comm_bits.append(ChannelCost(
                 dl_bits=(cost.n_streams + cost.n_unicasts) * payload,
-                ul_bits=sum(_ul_bits(c) for c in buffered)))
+                ul_bits=ul_total))
         if meter is not None:
             # the device→user hop's bits for this event's arrivals (their
             # edge TIME is already inside each arrival's clock draw)
             meter.charge_event(buffered)
-        if link is not None:
-            # same charging rule as the sync clock (slowest buffered
-            # subscriber per broadcast, receiver-mean per unicast;
-            # membership-aware when the strategy exposes its stream map)
-            duration = round_downlink_time(link, cost, payload, buffered,
-                                           strategy.membership(state))
+        if quorum_ok:
+            if link is not None:
+                # same charging rule as the sync clock (slowest buffered
+                # subscriber per broadcast, receiver-mean per unicast;
+                # membership-aware when the strategy exposes its stream map)
+                duration = round_downlink_time(link, cost, payload, buffered,
+                                               strategy.membership(state))
+            else:
+                duration = cost.n_streams + cost.n_unicasts
+            # overlap=True: this event's streams run concurrently with any
+            # broadcast still in flight from an earlier event (the
+            # async-aware downlink charging fix) — an exact no-op in
+            # lockstep, where the downlink is always idle by the next event
+            done = clock.serve(duration, overlap=True)
         else:
-            duration = cost.n_streams + cost.n_unicasts
-        # overlap=True: this event's streams run concurrently with any
-        # broadcast still in flight from an earlier event (the async-aware
-        # downlink charging fix) — an exact no-op in lockstep, where the
-        # downlink is always idle by the next event
-        done = clock.serve(duration, overlap=True)
+            done = clock.now            # nothing served; time still passed
         # the reported clock stays monotone even if a later event's shorter
         # broadcast completes before an earlier long one
         t_done = max(t_done, done)
         for c in buffered:
             clock.schedule(c, done, ul_bits=_ul_bits(c),
                            extra=_edge_time(c))
-            version[c] = event + 1
+            if quorum_ok:
+                version[c] = event + 1
+        if fmeter is not None:
+            qrow = None if q is None else np.asarray(q)
+            qbits = 0
+            if channel is not None and qrow is not None and quorum_ok:
+                qbits = int(np.sum(qrow <= 0)) * payload
+            fmeter.charge(None, qrow, quorum_ok,
+                          ul_total if channel is not None else 0, qbits)
 
         if event % fl.eval_every == 0 or event == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
-            history.rounds.append(event)
-            history.mean_acc.append(mean_acc)
-            history.worst_acc.append(worst_acc)
-            history.time.append(t_done)
+            record_eval(history, event, mean_acc, worst_acc, t_done)
 
     history = finalize_history(history, strategy, state, keep_state,
                                stacked, opt_state)
@@ -303,9 +390,13 @@ def run_async(algorithm: Union[str, Strategy, None] = None,
                               "staleness_schedule": cfg.staleness_schedule,
                               "staleness_discount": cfg.staleness_discount,
                               "staleness_alpha": cfg.staleness_alpha,
+                              "max_retries": cfg.max_retries,
+                              "retry_backoff": cfg.retry_backoff,
                               "events": fl.rounds}
     if meter is not None:
         history.extra["hierarchy"] = meter.extra()
+    if fmeter is not None:
+        history.extra["faults"] = fmeter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history

@@ -26,6 +26,7 @@ per-round maximum.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Union
 
@@ -38,6 +39,9 @@ from repro.fl.channel import (Channel, ChannelCost, resolve_channel,
                               round_downlink_time, tree_bits,
                               uplink_roundtrip, zeros_like_stack)
 from repro.fl.comm import SYSTEMS, SystemModel
+from repro.fl.faults import (FaultMeter, crash_mask, get_robust_aggregator,
+                             inject_values, resolve_fault_plan,
+                             resolve_faults, screen_and_defend)
 from repro.fl.placement import (HostVmap, MeshShardMap,  # noqa: F401 (re-export)
                                 Placement, evaluate, make_client_update,
                                 reduce_scores, resolve_placement,
@@ -99,7 +103,8 @@ def init_run(strategy: Strategy, fed: FederatedData, fl: "FLConfig",
              model_init: Optional[Callable], loss_fn: Callable,
              acc_fn: Callable, placement: Placement, seed: int,
              donate: bool = False, hierarchy: Optional[Any] = None,
-             system: Optional[SystemModel] = None):
+             system: Optional[SystemModel] = None,
+             faults: Optional[Any] = None):
     """Shared run prologue for the sync and async engines: PRNG split,
     model init, cached update step, client stack/opt/data placement,
     RoundContext and `strategy.setup`.  Returns
@@ -110,7 +115,12 @@ def init_run(strategy: Strategy, fed: FederatedData, fl: "FLConfig",
     device axis and the opt-state slot carries the `EdgeState`; the
     resolved `FleetPlan` rides on ``ctx.hierarchy_plan`` for the engines'
     `EdgeMeter`.  ``system`` is consumed only there (the edge link
-    resolves against it, like `init_channel`'s link)."""
+    resolves against it, like `init_channel`'s link).  ``faults`` (a
+    `FaultConfig`/spec, DESIGN.md §3g) is resolved ONCE here into the
+    run's `FaultPlan` — static Byzantine set, arrival-crash stream — and
+    rides on ``ctx.fault_plan`` for the engines' injector/meter (the
+    `FleetPlan` pattern; None keeps the plan off and the run on the
+    faults-off parity path)."""
     m = fed.m
     key = jax.random.PRNGKey(seed)
     key, kinit = jax.random.split(key)
@@ -134,6 +144,7 @@ def init_run(strategy: Strategy, fed: FederatedData, fl: "FLConfig",
                        params0=params0, seed=seed, placement=placement,
                        strategy=strategy)
     ctx.hierarchy_plan = plan
+    ctx.fault_plan = resolve_fault_plan(faults, m)
     state = strategy.setup(ctx)
     return key, vmapped_update, stacked, opt_state, data, ctx, state
 
@@ -284,10 +295,16 @@ _SUPERSTEP_CACHE_MAX = 32
 def _superstep_cache(placement: Placement, strategy: Strategy,
                      sampler: Optional[ClientSampler],
                      codec, error_feedback: bool, update_fn: Callable,
-                     acc_fn: Callable) -> Dict[int, Callable]:
+                     acc_fn: Callable, fault_cfg: Optional[Any] = None,
+                     robust_spec: Optional[str] = None,
+                     min_quorum: Optional[int] = None) -> Dict[int, Callable]:
+    # fault/defense/quorum identity is part of the key: the cached jitted
+    # superstep wraps the FIRST round_fn seen for a key, and the fault
+    # injector/defense/quorum gate are traced INTO that round (§3g)
     key = (placement.cache_key(), type(strategy), strategy.spec,
            None if sampler is None else sampler.cache_key,
-           codec, bool(error_feedback), update_fn, acc_fn)
+           codec, bool(error_feedback), update_fn, acc_fn,
+           fault_cfg, robust_spec, min_quorum)
     cache = _SUPERSTEP_FNS.pop(key, None)   # re-insert: LRU, not FIFO
     if cache is None:
         while len(_SUPERSTEP_FNS) >= _SUPERSTEP_CACHE_MAX:
@@ -299,27 +316,43 @@ def _superstep_cache(placement: Placement, strategy: Strategy,
 
 def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
                         codec, error_feedback: bool, placement: Placement,
-                        update_fn: Callable) -> Callable:
-    """The fused round: (local update → sampler select → codec uplink with
-    error feedback → strategy aggregate) as one pure function
+                        update_fn: Callable, fault_plan: Optional[Any] = None,
+                        defense: Optional[Any] = None,
+                        min_quorum: Optional[int] = None) -> Callable:
+    """The fused round: (local update → sampler select → fault injection →
+    codec uplink with error feedback → screening/robust defense →
+    strategy aggregate → quorum gate) as one pure function
 
         round_fn((key, stacked, opt_state, ef), (x, y, n), consts)
-            -> ((key', stacked', opt_state', ef'), mask | None)
+            -> ((key', stacked', opt_state', ef'), (mask, crash, quarantine))
 
     with EXACTLY the eventful engine's key derivation — ``ksample`` split
     first (stochastic samplers only), then ``kround``; per-client batch
     keys are ``split(kround, m)``, the codec key ``fold_in(kround, 2)``
-    (index 1 stays reserved for the strategies' derivation) — so the
-    fused run is bit-identical to the per-round loop.  The client count
-    m comes from the traced data shapes, NOT from the builder: one
-    round_fn (and so one cached superstep) serves every cohort size,
-    which is what lets the paging engine (DESIGN.md §3e) reuse
-    executables across populations."""
+    (index 1 stays reserved for the strategies' derivation, index 3 for
+    the fault injector) — so the fused run is bit-identical to the
+    per-round loop.  The client count m comes from the traced data
+    shapes, NOT from the builder: one round_fn (and so one cached
+    superstep) serves every cohort size, which is what lets the paging
+    engine (DESIGN.md §3e) reuse executables across populations.
+
+    With ``fault_plan`` (DESIGN.md §3g) ``consts`` is the pair
+    ``(strategy_consts, byz_row)`` — the static adversary row rides as a
+    traced input so per-cohort rows never retrace.  Crash rolls the row
+    back exactly like a sampler no-show; the other faults corrupt what
+    the row TRANSMITS.  ``min_quorum`` snapshots the clients' own models
+    before the uplink and discards the mixed result when too few rows
+    participated (the round's uploads are wasted; the server state
+    carries forward).  All three knobs off is byte-for-byte the
+    pre-faults trace — the parity anchor."""
     tmix = TracedMix(placement)
     lossy = codec is not None and not codec.is_identity
     backend = placement.codec_backend
+    faulted = fault_plan is not None
 
     def round_fn(carry, data, consts):
+        if faulted:
+            consts, byz_row = consts
         key, stacked, opt_state, ef = carry
         x, y, n = data
         m = x.shape[0]      # static under trace: the cohort shape
@@ -339,14 +372,43 @@ def _build_traced_round(strategy: Strategy, sampler: Optional[ClientSampler],
             mask = sampler.sample_traced(ksample, m)
             stacked = placement.select(mask, stacked, prev)
             opt_state = placement.select(mask, opt_state, prev_opt)
+        crash = None
+        if faulted:
+            kfault = jax.random.fold_in(kround, 3)
+            if fault_plan.value_faults:
+                stacked = inject_values(fault_plan, byz_row, stacked, prev,
+                                        kfault, rows=mask)
+            crash = crash_mask(fault_plan, kfault, m)
+            if crash is not None:
+                # a crashed client never reports: row rollback, exactly a
+                # sampler no-show
+                stacked = placement.select(~crash, stacked, prev)
+                opt_state = placement.select(~crash, opt_state, prev_opt)
+        part = mask
+        if crash is not None:
+            part = ~crash if part is None else part & ~crash
+        # quorum snapshot: the clients' own post-update models BEFORE the
+        # uplink — on a skipped round each keeps what it computed
+        clients = stacked if min_quorum is not None else None
         if lossy:
             new_stacked, new_ef = uplink_roundtrip(
                 codec, stacked, prev, ef, jax.random.fold_in(kround, 2),
-                mask, backend=backend)
+                part, backend=backend)
             stacked = new_stacked
             ef = new_ef if error_feedback else ef
+        q = None
+        if defense is not None:
+            stacked, q = screen_and_defend(defense, stacked, prev)
+            tmix.quarantine = q
         stacked = strategy.aggregate_traced(consts, stacked, prev, tmix)
-        return (key, stacked, opt_state, ef), mask
+        tmix.quarantine = None
+        if min_quorum is not None:
+            count = (jnp.float32(m) if part is None
+                     else jnp.sum(part.astype(jnp.float32)))
+            ok = count >= jnp.float32(min_quorum)
+            stacked = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(ok, a, b), stacked, clients)
+        return (key, stacked, opt_state, ef), (mask, crash, q)
 
     return round_fn
 
@@ -437,29 +499,68 @@ class History:
     final_opt_state: Any = None
 
 
+class NonFiniteEvalWarning(RuntimeWarning):
+    """A recorded eval score was NaN/Inf — the run diverged."""
+
+
+def record_eval(history: "History", rnd: int, mean_acc: float,
+                worst_acc: float, t_accum: float) -> None:
+    """Shared eval bookkeeping for every engine: appends one eval row and
+    guards the scores — a NaN/Inf accuracy warns `NonFiniteEvalWarning`
+    loudly (so diverged runs fail CI benches instead of silently charting
+    garbage) and is booked under ``History.extra["nonfinite_evals"]``.
+    Undefended NaN fault injection (DESIGN.md §3g) trips this; the
+    screening defense keeps scores finite."""
+    if not (np.isfinite(mean_acc) and np.isfinite(worst_acc)):
+        warnings.warn(
+            f"non-finite eval at round {rnd}: mean_acc={mean_acc}, "
+            f"worst_acc={worst_acc} — the run diverged (NaN/Inf client "
+            "updates reached aggregation; a robust_agg/screening defense "
+            "would quarantine them, DESIGN.md §3g)",
+            NonFiniteEvalWarning, stacklevel=2)
+        history.extra["nonfinite_evals"] = (
+            history.extra.get("nonfinite_evals", 0) + 1)
+    history.rounds.append(rnd)
+    history.mean_acc.append(mean_acc)
+    history.worst_acc.append(worst_acc)
+    history.time.append(t_accum)
+
+
 def _run_superstep(strategy: Strategy, fed: FederatedData, *,
                    sampler: Optional[ClientSampler], fl: "FLConfig",
                    model_init: Optional[Callable], loss_fn: Callable,
                    acc_fn: Callable, system: Optional[SystemModel],
                    placement: Placement, channel: Optional[Channel],
                    keep_state: bool, seed: int,
-                   hierarchy: Optional[Any] = None) -> "History":
+                   hierarchy: Optional[Any] = None,
+                   faults: Optional[Any] = None,
+                   robust_agg: Optional[str] = None,
+                   min_quorum: Optional[int] = None) -> "History":
     """Scan-compiled sync run (DESIGN.md §3c): Python re-enters only at
     eval boundaries; per-round participation masks come back as ONE
     stacked device->host transfer per superstep, the chunk-end eval runs
     INSIDE the compiled superstep (fused onto the end of the scan — no
     separate eval dispatch on the hot path), and the clock/CommCost/
     ChannelCost accounting is replayed host-side in the eventful engine's
-    exact per-round order (bit-identical histories)."""
+    exact per-round order (bit-identical histories).  The fault injector,
+    defense layer and quorum gate (DESIGN.md §3g) trace into the same
+    scan; their per-round crash/quarantine rows ride the superstep outs
+    next to the masks and are replayed into the `FaultMeter` here."""
     m = fed.m
     key, update_fn, stacked, opt_state, data, ctx, state = init_run(
         strategy, fed, fl, model_init, loss_fn, acc_fn, placement, seed,
         donate=False,   # donation happens at the superstep boundary instead
-        hierarchy=hierarchy, system=system)
+        hierarchy=hierarchy, system=system, faults=faults)
+    plan = ctx.fault_plan
+    defense = get_robust_aggregator(robust_agg)
+    robust_spec = "none" if defense is None else str(robust_agg)
     meter = None
     if hierarchy is not None:
         from repro.fl.hierarchy import EdgeMeter
         meter = EdgeMeter(ctx.hierarchy_plan)
+    fmeter = None
+    if plan is not None or defense is not None or min_quorum is not None:
+        fmeter = FaultMeter(plan, robust_spec, min_quorum)
     payload, link, model_bits, ef, channel = init_channel(
         channel, ctx, stacked, system, m)
     lossy = channel is not None and not channel.codec.is_identity
@@ -468,10 +569,16 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
     codec = channel.codec if lossy else None
     ef_flag = channel.error_feedback if lossy else True
     consts = strategy.traced_state(state)
+    if plan is not None:
+        # the static adversary row rides as a traced const input (§3g)
+        consts = (consts, jnp.asarray(plan.byz_row()))
     round_fn = _build_traced_round(strategy, sampler, codec, ef_flag,
-                                   placement, update_fn)
+                                   placement, update_fn, fault_plan=plan,
+                                   defense=defense, min_quorum=min_quorum)
     cache = _superstep_cache(placement, strategy, sampler, codec, ef_flag,
-                             update_fn, acc_fn)
+                             update_fn, acc_fn,
+                             fault_cfg=None if plan is None else plan.cfg,
+                             robust_spec=robust_spec, min_quorum=min_quorum)
     eval_fn = lambda st, ed: placement.eval_traced(acc_fn, st, ed[0], ed[1])
     cost = strategy.comm(state)     # round-constant by the traceability
     history = History()             # contract (state never changes)
@@ -482,32 +589,54 @@ def _run_superstep(strategy: Strategy, fed: FederatedData, *,
 
     for rnd, nxt in _eval_rounds(fl.rounds, fl.eval_every):
         length = nxt - rnd + 1
-        carry, masks, accs = placement.run_supersteps(
+        carry, outs, accs = placement.run_supersteps(
             round_fn, carry, data, consts, length, cache=cache,
             eval_fn=eval_fn, eval_data=(fed.x_val, fed.y_val))
+        masks, crashes, qs = outs
         # the chunk's ONE blocking device->host transfer — and only when a
-        # clock or the bits axis actually consumes the masks
+        # clock, the bits axis or a meter actually consumes the masks
         masks_np = (np.asarray(masks)
                     if masks is not None
                     and (channel is not None or system is not None
-                         or meter is not None)
+                         or meter is not None or fmeter is not None)
                     else None)
+        crashes_np = None if crashes is None else np.asarray(crashes)
+        qs_np = None if qs is None else np.asarray(qs)
         for i in range(length):
+            mrow = None if masks_np is None else masks_np[i]
+            crow = None if crashes_np is None else crashes_np[i]
+            eff = mrow
+            if crow is not None:
+                eff = ~crow if eff is None else eff & ~crow
+            n_eff = m if eff is None else int(eff.sum())
+            ok = min_quorum is None or n_eff >= min_quorum
+            # a quorum-skipped round moves no server model: no downlink
+            # streams, no membership-aware broadcast — but the clients DID
+            # compute and upload (eff mask → compute + uplink time accrue)
             t_accum = charge_round(
-                history, cost, None if masks_np is None else masks_np[i],
-                m, payload, link, system, channel, t_accum,
-                assignment, ul_bits_pc, meter)
+                history, cost if ok else CommCost(0, 0), eff, m, payload,
+                link, system, channel, t_accum,
+                assignment if ok else None, ul_bits_pc, meter)
+            if fmeter is not None:
+                qrow = None if qs_np is None else qs_np[i]
+                rbits = qbits = 0
+                if channel is not None:
+                    rbits = (n_eff * payload if ul_bits_pc is None else
+                             int(np.sum(ul_bits_pc[eff]) if eff is not None
+                                 else np.sum(ul_bits_pc)))
+                    if qrow is not None:
+                        qbits = int(np.sum(qrow <= 0)) * payload
+                fmeter.charge(crow, qrow, ok, rbits, qbits)
         mean_acc, worst_acc = reduce_scores(accs)
-        history.rounds.append(nxt)
-        history.mean_acc.append(mean_acc)
-        history.worst_acc.append(worst_acc)
-        history.time.append(t_accum)
+        record_eval(history, nxt, mean_acc, worst_acc, t_accum)
 
     _, stacked, opt_state, _ = carry
     history = finalize_history(history, strategy, state, keep_state,
                                stacked, opt_state)
     if meter is not None:
         history.extra["hierarchy"] = meter.extra()
+    if fmeter is not None:
+        history.extra["faults"] = fmeter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history
@@ -529,6 +658,9 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                   superstep: Optional[bool] = None,
                   paging: Optional[Any] = None,
                   hierarchy: Optional[Any] = None,
+                  faults: Optional[Any] = None,
+                  robust_agg: Optional[str] = None,
+                  min_quorum: Optional[int] = None,
                   seed: int = 0) -> History:
     """Run one strategy on one scenario; returns accuracy/time history.
 
@@ -555,8 +687,21 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
     DESIGN.md §3f) nests an edge sub-round inside every round: each user
     aggregates its device fleet before the server sees it, both hops are
     charged, and the device→user hop's bits land in
-    ``History.extra["hierarchy"]``.
+    ``History.extra["hierarchy"]``.  ``faults`` (a `FaultConfig` or spec
+    string like ``"crash:0.1,byz:0.25:sign_flip"``, DESIGN.md §3g)
+    injects deterministic seeded client failures; ``robust_agg``
+    (``none | clip:<c> | trimmed_mean:<f> | median | krum:<f>``) screens
+    non-finite uploads and robustifies the aggregation against them;
+    ``min_quorum`` skips aggregation on rounds where fewer clients
+    participate (the server state carries forward).  All three default
+    off and off is bit-identical to the pre-faults engine; the run's
+    fault ledger lands in ``History.extra["faults"]``.
     """
+    if min_quorum is not None:
+        min_quorum = int(min_quorum)
+        if min_quorum < 1:
+            raise ValueError(f"min_quorum must be >= 1, got {min_quorum}")
+    faults = resolve_faults(faults)     # validates the spec once, up front
     if hierarchy is not None:
         from repro.fl.hierarchy import resolve_hierarchy
         hierarchy = resolve_hierarchy(hierarchy)
@@ -573,7 +718,9 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                          loss_fn=loss_fn, acc_fn=acc_fn, system=system,
                          placement=placement, channel=channel,
                          keep_state=keep_state, paging=paging,
-                         hierarchy=hierarchy, seed=seed)
+                         hierarchy=hierarchy, faults=faults,
+                         robust_agg=robust_agg, min_quorum=min_quorum,
+                         seed=seed)
     if paging is not None:
         if hierarchy is not None:
             raise TypeError("the hierarchy tier does not compose with the "
@@ -587,7 +734,9 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                          sampler=sampler, fl=fl, model_init=model_init,
                          loss_fn=loss_fn, acc_fn=acc_fn, system=system,
                          placement=placement, channel=channel,
-                         keep_state=keep_state, seed=seed)
+                         keep_state=keep_state, faults=faults,
+                         robust_agg=robust_agg, min_quorum=min_quorum,
+                         seed=seed)
     strategy = resolve_strategy(algorithm, strategy)
     if fed is None:
         raise TypeError("`fed` is required")
@@ -608,22 +757,35 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
                                   acc_fn=acc_fn, system=system,
                                   placement=placement, channel=channel,
                                   keep_state=keep_state,
-                                  hierarchy=hierarchy, seed=seed)
+                                  hierarchy=hierarchy, faults=faults,
+                                  robust_agg=robust_agg,
+                                  min_quorum=min_quorum, seed=seed)
 
     m = fed.m
+    defense = get_robust_aggregator(robust_agg)
     # When no sampler can roll clients back and the strategy declares it
     # never reads `prev`, the update step may consume (donate) the old
     # stacked/opt buffers — peak memory drops from ~2× params+opt to ~1×.
-    # A lossy codec reads `prev` too (the uplink transmits Δ = new − prev).
-    donate = sampler is None and not strategy.reads_prev and not lossy
+    # A lossy codec reads `prev` too (the uplink transmits Δ = new − prev);
+    # so do the fault injector and the screening defense (both work on
+    # Δ = new − prev).  `min_quorum` alone stays donate-safe: its snapshot
+    # is the post-update clients stack, never `prev`.
+    donate = (sampler is None and not strategy.reads_prev and not lossy
+              and faults is None and defense is None)
     key, vmapped_update, stacked, opt_state, (x, y, n), ctx, state = \
         init_run(strategy, fed, fl, model_init, loss_fn, acc_fn,
                  placement, seed, donate=donate, hierarchy=hierarchy,
-                 system=system)
+                 system=system, faults=faults)
+    plan = ctx.fault_plan
+    robust_spec = "none" if defense is None else str(robust_agg)
+    byz_row = None if plan is None else jnp.asarray(plan.byz_row())
     meter = None
     if hierarchy is not None:
         from repro.fl.hierarchy import EdgeMeter
         meter = EdgeMeter(ctx.hierarchy_plan)
+    fmeter = None
+    if plan is not None or defense is not None or min_quorum is not None:
+        fmeter = FaultMeter(plan, robust_spec, min_quorum)
 
     payload, link, model_bits, ef, channel = init_channel(
         channel, ctx, stacked, system, m)
@@ -650,43 +812,93 @@ def run_federated(algorithm: Union[str, Strategy, None] = None,
             stacked = placement.select(mask, stacked, prev)
             opt_state = placement.select(mask, opt_state, prev_opt)
 
+        crash = None
+        if plan is not None:
+            # fault injection (DESIGN.md §3g): value faults corrupt what
+            # the row transmits; crash rolls the row back like a no-show
+            kfault = jax.random.fold_in(kround, 3)
+            if plan.value_faults:
+                stacked = inject_values(plan, byz_row, stacked, prev,
+                                        kfault, rows=mask)
+            crash = crash_mask(plan, kfault, m)
+            if crash is not None:
+                stacked = placement.select(~crash, stacked, prev)
+                opt_state = placement.select(~crash, opt_state, prev_opt)
+        part = mask
+        if crash is not None:
+            part = ~crash if part is None else part & ~crash
+        # quorum snapshot: the clients' own post-update models BEFORE the
+        # uplink — on a skipped round each keeps what it computed
+        clients_snap = stacked if min_quorum is not None else None
+
         if lossy:
             # uplink channel crossing (DESIGN.md §3b): the server receives
             # the codec's decode(encode(Δ + residual))
             stacked, ef = channel_uplink(placement, channel, stacked, prev,
-                                         ef, kround, mask)
+                                         ef, kround, part)
 
-        # strategies get their own key derivation: kround's raw splits are
-        # already consumed as the per-client minibatch keys
-        ctx.rnd, ctx.key, ctx.participation = \
-            rnd, jax.random.fold_in(kround, 1), mask
-        stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+        q = None
+        if defense is not None:
+            # screening + robust aggregation (DESIGN.md §3g), before the
+            # strategy's mixing — quarantined rows' deltas are zeroed and
+            # their aggregation-weight columns renormalized away
+            stacked, q = screen_and_defend(defense, stacked, prev)
 
         # ONE host sync per round at most (the mask pull), none when no
-        # clock or bits axis consumes it — n_part and the link-clock
+        # clock, bits axis or meter consumes it — n_part and the link-clock
         # participants both come from the same host-side array inside
-        # `charge_round` (shared with the superstep replay)
-        mask_np = (np.asarray(mask)
-                   if mask is not None
-                   and (channel is not None or system is not None
-                        or meter is not None)
-                   else None)
-        t_accum = charge_round(history, strategy.comm(state), mask_np, m,
-                               payload, link, system, channel, t_accum,
-                               strategy.membership(state), ul_bits_pc,
-                               meter)
+        # `charge_round` (shared with the superstep replay).  The quorum
+        # gate always needs the count, so it forces the pull.
+        eff_np = (np.asarray(part)
+                  if part is not None
+                  and (channel is not None or system is not None
+                       or meter is not None or fmeter is not None
+                       or min_quorum is not None)
+                  else None)
+        n_eff = m if eff_np is None else int(eff_np.sum())
+        ok = min_quorum is None or n_eff >= min_quorum
+        if ok:
+            # strategies get their own key derivation: kround's raw splits
+            # are already consumed as the per-client minibatch keys
+            ctx.rnd, ctx.key, ctx.participation = \
+                rnd, jax.random.fold_in(kround, 1), part
+            ctx.quarantine = q
+            stacked, state = strategy.aggregate(state, stacked, prev, ctx)
+            ctx.quarantine = None
+        else:
+            # below quorum: the mixed result never happens — every client
+            # keeps its own pre-uplink model, the server state carries
+            # forward, and the round's uploads are wasted
+            stacked = clients_snap
+
+        t_accum = charge_round(history,
+                               strategy.comm(state) if ok else CommCost(0, 0),
+                               eff_np, m, payload, link, system, channel,
+                               t_accum,
+                               strategy.membership(state) if ok else None,
+                               ul_bits_pc, meter)
+        if fmeter is not None:
+            crow = None if crash is None else np.asarray(crash)
+            qrow = None if q is None else np.asarray(q)
+            rbits = qbits = 0
+            if channel is not None:
+                rbits = (n_eff * payload if ul_bits_pc is None else
+                         int(np.sum(ul_bits_pc[eff_np])
+                             if eff_np is not None else np.sum(ul_bits_pc)))
+                if qrow is not None:
+                    qbits = int(np.sum(qrow <= 0)) * payload
+            fmeter.charge(crow, qrow, ok, rbits, qbits)
 
         if rnd % fl.eval_every == 0 or rnd == fl.rounds - 1:
             mean_acc, worst_acc = placement.evaluate(acc_fn, stacked, fed)
-            history.rounds.append(rnd)
-            history.mean_acc.append(mean_acc)
-            history.worst_acc.append(worst_acc)
-            history.time.append(t_accum)
+            record_eval(history, rnd, mean_acc, worst_acc, t_accum)
 
     history = finalize_history(history, strategy, state, keep_state,
                                stacked, opt_state)
     if meter is not None:
         history.extra["hierarchy"] = meter.extra()
+    if fmeter is not None:
+        history.extra["faults"] = fmeter.extra()
     if channel is not None:
         channel_extra(history, channel, link, model_bits, payload)
     return history

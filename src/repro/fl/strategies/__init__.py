@@ -10,7 +10,8 @@ dispatches on algorithm names.
 """
 from repro.fl.strategies.base import (ClusterExtras, CommCost, MixingExtras,
                                       RoundContext, Strategy, StrategyExtras,
-                                      TracedMix)
+                                      TracedMix, quarantine_reweight,
+                                      staleness_reweight)
 from repro.fl.strategies.registry import (STRATEGIES, available_strategies,
                                           get_strategy, get_strategy_class,
                                           parse_spec, register)
@@ -30,5 +31,5 @@ __all__ = [
     "STRATEGIES", "Strategy", "StrategyExtras", "TracedMix", "UCFL",
     "UniformFraction",
     "available_strategies", "get_strategy", "get_strategy_class",
-    "parse_spec", "register",
+    "parse_spec", "quarantine_reweight", "register", "staleness_reweight",
 ]

@@ -80,6 +80,27 @@ def staleness_reweight(w: jnp.ndarray, staleness: jnp.ndarray,
     return (wd * (mass / jnp.maximum(new_mass, 1e-12))).astype(w.dtype)
 
 
+def quarantine_reweight(w: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Zero quarantined contributor columns of an aggregation-rule matrix
+    and renormalize each row back to its ORIGINAL mass (DESIGN.md §3g).
+
+    ``w`` is any (r, m) weight matrix whose COLUMNS index contributing
+    client models; ``q[j]`` is the defense layer's survival weight of
+    model j (1 kept, 0 quarantined).  The surviving columns absorb the
+    quarantined mass — row-stochastic rules stay row-stochastic, UCFL's
+    personalized rows keep their per-row totals.  A row whose surviving
+    mass is zero falls back to its undefended weights: the screen already
+    zeroed the quarantined DELTAS, so the fallback mixes the previous
+    (finite) models instead of producing an all-zero parameter row.
+    All-ones ``q`` is an exact identity."""
+    qf = q[None, :].astype(w.dtype)
+    wq = w * qf
+    mass = jnp.sum(w, axis=1, keepdims=True)
+    new_mass = jnp.sum(wq, axis=1, keepdims=True)
+    scaled = wq * (mass / jnp.maximum(new_mass, 1e-12))
+    return jnp.where(new_mass > 0, scaled, w).astype(w.dtype)
+
+
 @dataclass
 class RoundContext:
     """Everything a strategy may read about the run; mutated per round by
@@ -102,6 +123,9 @@ class RoundContext:
     staleness_schedule: str = "exp"     # exp | poly (DESIGN.md §3a)
     staleness_alpha: float = 0.5        # poly schedule exponent
     strategy: Optional[Any] = None  # the running Strategy, for `reweight`
+    # defense layer (DESIGN.md §3g): per-contributor survival weights set
+    # by the engine after screening/robust aggregation (None = no defense)
+    quarantine: Optional[jnp.ndarray] = None
 
     @property
     def m(self) -> int:
@@ -115,16 +139,21 @@ class RoundContext:
     # registered strategy picks up staleness discounting unmodified.
 
     def reweighted(self, w: jnp.ndarray) -> jnp.ndarray:
-        """Staleness-discounted view of ``w``, routed through
-        `Strategy.reweight` (whose default is the identity for sync
-        rounds, where ``staleness`` is None)."""
+        """Staleness-discounted + quarantine-renormalized view of ``w``:
+        the strategy's `reweight` hook first (identity for sync rounds,
+        where ``staleness`` is None), then the defense layer's quarantine
+        columns (DESIGN.md §3g) — engine-mandated, after any
+        strategy-specific reweighting."""
         if self.strategy is not None:
-            return self.strategy.reweight(w, self)
-        if self.staleness is None:   # engine-less driving with no strategy
-            return w
-        return staleness_reweight(w, self.staleness, self.staleness_discount,
-                                  schedule=self.staleness_schedule,
-                                  alpha=self.staleness_alpha)
+            w = self.strategy.reweight(w, self)
+        elif self.staleness is not None:  # engine-less driving, no strategy
+            w = staleness_reweight(w, self.staleness,
+                                   self.staleness_discount,
+                                   schedule=self.staleness_schedule,
+                                   alpha=self.staleness_alpha)
+        if self.quarantine is not None:
+            w = quarantine_reweight(w, self.quarantine)
+        return w
 
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
         """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
@@ -136,7 +165,7 @@ class RoundContext:
 
     def mix_plan(self, stacked: Any, plan: Any) -> Any:
         """k-stream aggregation: centroid mix + group broadcast."""
-        if self.staleness is not None:
+        if self.staleness is not None or self.quarantine is not None:
             plan = plan._replace(centroids=self.reweighted(plan.centroids))
         if self.placement is None:
             from repro.core import stream_aggregate
@@ -151,19 +180,32 @@ class TracedMix:
     Same math as `RoundContext.mix` / `mix_plan` for a synchronous round
     (staleness reweighting is async-only and the superstep is sync-only),
     but routed through the placement's trace-safe hooks so no per-call jit
-    dispatch happens inside the fused round."""
+    dispatch happens inside the fused round.
+
+    ``quarantine`` is the defense layer's per-contributor survival row
+    (DESIGN.md §3g), set by the fused round right before dispatching to
+    `Strategy.aggregate_traced` and cleared right after — every traced
+    mixing rule picks up `quarantine_reweight` without strategy changes,
+    exactly like `RoundContext.mix` on the eventful path."""
 
     def __init__(self, placement: Any):
         self.placement = placement
+        self.quarantine: Optional[jnp.ndarray] = None
+
+    def _reweighted(self, w: jnp.ndarray) -> jnp.ndarray:
+        if self.quarantine is None:
+            return w
+        return quarantine_reweight(w, self.quarantine)
 
     def mix(self, stacked: Any, w: jnp.ndarray) -> Any:
         """θ_i ← Σ_j w[i,j] θ_j for a full per-client matrix (m, m)."""
-        return self.placement.mix_traced(stacked, w)
+        return self.placement.mix_traced(stacked, self._reweighted(w))
 
     def mix_plan(self, stacked: Any, centroids: jnp.ndarray,
                  assignment: jnp.ndarray) -> Any:
         """k-stream aggregation: centroid mix + group broadcast."""
-        return self.placement.mix_plan_traced(stacked, centroids, assignment)
+        return self.placement.mix_plan_traced(
+            stacked, self._reweighted(centroids), assignment)
 
 
 @dataclass

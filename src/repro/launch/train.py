@@ -130,6 +130,23 @@ def _validate_specs(p, args):
                                seed=args.seed)
         except (TypeError, ValueError) as e:
             p.error(f"--devices-per-user: {e}")
+    from repro.fl.faults import get_robust_aggregator, parse_fault_spec
+    if args.faults is not None:
+        try:
+            parse_fault_spec(args.faults)
+        except ValueError as e:
+            p.error(f"--faults: {e}")
+    if args.robust_agg is not None:
+        try:
+            get_robust_aggregator(args.robust_agg)
+        except ValueError as e:
+            p.error(f"--robust-agg: {e}")
+    if args.min_quorum is not None and args.min_quorum < 1:
+        p.error(f"--min-quorum: must be >= 1, got {args.min_quorum}")
+    if args.max_retries < 0:
+        p.error(f"--max-retries: must be >= 0, got {args.max_retries}")
+    if args.retry_backoff <= 0:
+        p.error(f"--retry-backoff: must be > 0, got {args.retry_backoff}")
 
 
 def main(argv=None):
@@ -225,6 +242,24 @@ def main(argv=None):
     p.add_argument("--device-dropout", type=float, default=0.0,
                    help="hierarchy: per-round probability each device "
                         "misses its edge sub-round")
+    p.add_argument("--faults", default=None,
+                   help="fault injection (DESIGN.md §3g): comma-joined "
+                        "crash:<p> | nan:<p> | byz:<frac>[:<mode>[:<scale>]]"
+                        " | bitrot:<p>[:<density>] | seed:<int>")
+    p.add_argument("--robust-agg", dest="robust_agg", default=None,
+                   help="defense (DESIGN.md §3g): none | clip:<c> | "
+                        "trimmed_mean:<f> | median | krum:<f>; screens "
+                        "non-finite uploads and quarantines outliers")
+    p.add_argument("--min-quorum", type=int, default=None,
+                   help="skip aggregation on rounds with fewer than this "
+                        "many participating clients (server state carries "
+                        "forward; uploads are wasted)")
+    p.add_argument("--max-retries", type=int, default=3,
+                   help="async+crash faults: consecutive crashes before a "
+                        "client is dead for the run")
+    p.add_argument("--retry-backoff", type=float, default=1.0,
+                   help="async+crash faults: base of the backoff*2**attempt"
+                        " reschedule delay")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
     if args.steps < 1:
@@ -259,7 +294,9 @@ def main(argv=None):
                                 max_staleness=args.max_staleness,
                                 staleness_schedule=args.staleness_schedule,
                                 staleness_discount=args.staleness_discount,
-                                staleness_alpha=args.staleness_alpha)
+                                staleness_alpha=args.staleness_alpha,
+                                max_retries=args.max_retries,
+                                retry_backoff=args.retry_backoff)
     sampler = (UniformFraction(args.participation)
                if args.participation < 1.0 else None)
     paging = None
@@ -294,7 +331,10 @@ def main(argv=None):
           + (f" async={async_cfg}" if async_cfg else "")
           + (f" paging={paging}" if paging else "")
           + (f" channel={channel}" if channel else "")
-          + (f" hierarchy={hierarchy}" if hierarchy else ""))
+          + (f" hierarchy={hierarchy}" if hierarchy else "")
+          + (f" faults={args.faults}" if args.faults else "")
+          + (f" robust_agg={args.robust_agg}" if args.robust_agg else "")
+          + (f" min_quorum={args.min_quorum}" if args.min_quorum else ""))
     t0 = time.time()
     history = run_federated(
         strategy=strategy, fed=fed, fl=fl, sampler=sampler,
@@ -303,7 +343,8 @@ def main(argv=None):
         placement=placement, channel=channel,
         keep_state=bool(args.checkpoint),
         async_cfg=async_cfg, paging=paging, hierarchy=hierarchy,
-        seed=args.seed)
+        faults=args.faults, robust_agg=args.robust_agg,
+        min_quorum=args.min_quorum, seed=args.seed)
     if paging is not None:
         pg = history.extra["paging"]
         print(f"paging: population={pg['population']} cohort={pg['cohort']} "
@@ -343,6 +384,16 @@ def main(argv=None):
               f"agg={hx['edge_aggregator']} link={hx['edge_link']} | "
               f"edge downlink {hx['edge_dl_bits_total']/1e6:.1f} Mbit, "
               f"edge uplink {hx['edge_ul_bits_total']/1e6:.1f} Mbit")
+    if "faults" in history.extra:
+        fx = history.extra["faults"]
+        print(f"faults: spec={fx['faults']} robust_agg={fx['robust_agg']} "
+              f"byzantine={fx['byzantine_clients']} "
+              f"min_quorum={fx['min_quorum']} | "
+              f"crashed {fx['crashed_total']}, "
+              f"quarantined {fx['quarantined_total']}, "
+              f"skipped rounds {fx['skipped_rounds']}, "
+              f"retries {fx['retries']}, dead {fx['dead_clients']}, "
+              f"wasted uplink {fx['wasted_ul_bits']/1e6:.2f} Mbit")
 
     if args.checkpoint:
         save_train_state(args.checkpoint, args.steps,

@@ -1,0 +1,474 @@
+"""Fault-injection + resilient-runtime subsystem (DESIGN.md §3g).
+
+What is pinned here:
+  * spec grammar — `parse_fault_spec` roundtrips and dies with pointed
+    errors; `resolve_fault_plan` draws the same static Byzantine set for
+    the same seed and normalizes all-zero rates to None
+  * faults-off parity — faults=None / zero-rate specs / robust_agg="none"
+    are BITWISE identical to the clean engines, on the fused superstep,
+    the eventful loop, the async runtime and the paging engine
+  * fused == eventful bitwise with faults ON (same key derivation)
+  * crash semantics — crash:1.0 leaves the global model at init
+  * screening — NaN uploads warn (`NonFiniteEvalWarning`) undefended and
+    stay finite + quarantined under a defense
+  * robust aggregators — unit transforms on hand-built delta stacks plus
+    end-to-end Byzantine recovery (honest-client accuracy)
+  * quorum — below-quorum rounds move no downlink and book skipped_rounds
+  * async retries — deterministic backoff, dead clients, early-end warning
+  * verified checkpoints — crc32 envelope catches truncation and
+    bit-flips, legacy pre-envelope files still load, and a paged run
+    whose newest snapshot is corrupt resumes from the previous intact
+    one bit-identically
+"""
+import os
+import pathlib
+import warnings
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, paged_checkpoints,
+                              restore, save)
+from repro.data.federated import scenario_label_shift
+from repro.fl import (AsyncConfig, FLConfig, FaultConfig, FixedCohort,
+                      HostVmap, PagingConfig, SYSTEMS, parse_fault_spec,
+                      resolve_fault_plan, run_federated)
+from repro.fl.faults import get_robust_aggregator
+from repro.fl.faults.defense import screen_and_defend
+from repro.fl.faults.runtime import FaultMeter, pop_with_retries
+from repro.fl.simulator import NonFiniteEvalWarning, default_model_init
+from repro.fl.strategies import quarantine_reweight
+from repro.models import lenet
+from test_population import assert_history_equal, assert_params_equal
+
+KEY = jax.random.PRNGKey(0)
+FL = FLConfig(rounds=5, local_steps=2, batch_size=16, eval_every=2)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return scenario_label_shift(KEY, n=400, m=8)
+
+
+@pytest.fixture(scope="module")
+def model_init(fed):
+    return default_model_init(fed)
+
+
+def run(fed, model_init, spec="fedavg", fl=FL, **kw):
+    return run_federated(spec, fed, fl=fl, model_init=model_init,
+                         system=SYSTEMS["wired"], placement=HostVmap(),
+                         keep_state=True, seed=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + plan resolution
+
+
+def test_fault_spec_roundtrip():
+    cfg = parse_fault_spec("crash:0.1,nan:0.05,byz:0.25:scale:5,"
+                           "bitrot:0.2:0.001,seed:7")
+    assert cfg == FaultConfig(crash=0.1, nan=0.05, byz=0.25,
+                              byz_mode="scale", byz_scale=5.0, bitrot=0.2,
+                              bitrot_density=0.001, seed=7)
+    assert parse_fault_spec(cfg.spec) == cfg
+    assert parse_fault_spec("none") == FaultConfig()
+    assert FaultConfig().spec == "none"
+
+
+@pytest.mark.parametrize("bad", ["crash", "crash:2.0", "byz:0.2:evil",
+                                 "byz:0.2:scale:0", "gamma:0.1",
+                                 "bitrot:0.1:0", "seed:x"])
+def test_fault_spec_errors(bad):
+    with pytest.raises(ValueError):
+        resolve_fault_plan(bad, 8)
+
+
+def test_fault_plan_resolution():
+    assert resolve_fault_plan(None, 8) is None
+    assert resolve_fault_plan("crash:0.0,byz:0", 8) is None
+    a = resolve_fault_plan("byz:0.25,seed:3", 8)
+    b = resolve_fault_plan("byz:0.25,seed:3", 8)
+    assert a.byz_mask.sum() == 2          # round(0.25 * 8)
+    assert (a.byz_mask == b.byz_mask).all()
+    c = resolve_fault_plan("byz:0.25,seed:4", 8)
+    assert a.cfg != c.cfg
+    # cohort gather of the static adversary row
+    idx = np.array([1, 0, 3])
+    assert (a.byz_row(idx) == a.byz_mask[idx].astype(np.float32)).all()
+
+
+def test_robust_agg_registry():
+    assert get_robust_aggregator(None) is None
+    assert get_robust_aggregator("none") is None
+    assert get_robust_aggregator("clip:2.5").c == 2.5
+    assert get_robust_aggregator("trimmed_mean:0.2").f == 0.2
+    assert get_robust_aggregator("krum:0.3").frac == 0.3
+    assert get_robust_aggregator("median").spec == "median"
+    for bad in ["huber", "median:0.2", "trimmed_mean:0.7", "clip:-1",
+                "none:1"]:
+        with pytest.raises(ValueError):
+            get_robust_aggregator(bad)
+
+
+# ---------------------------------------------------------------------------
+# defense unit tests on hand-built stacks
+
+
+def _stack(delta):
+    """(m, d) delta matrix -> (stacked, prev) param-shaped pytrees."""
+    delta = jnp.asarray(delta, jnp.float32)
+    prev = {"w": jnp.zeros_like(delta)}
+    return {"w": delta}, prev
+
+
+def test_screen_quarantines_nonfinite():
+    stacked, prev = _stack([[1., 1.], [jnp.nan, 1.], [1., jnp.inf],
+                            [2., 2.]])
+    out, keep = screen_and_defend(get_robust_aggregator("median"),
+                                  stacked, prev)
+    assert np.asarray(keep).tolist() == [1.0, 0.0, 0.0, 1.0]
+    assert np.isfinite(np.asarray(out["w"])).all()
+    # nan-aware median of the two survivors
+    assert np.allclose(np.asarray(out["w"]), 1.5)
+
+
+def test_clip_bounds_row_norms():
+    stacked, prev = _stack([[3., 4.], [0.3, 0.4]])
+    out, keep = screen_and_defend(get_robust_aggregator("clip:1"),
+                                  stacked, prev)
+    norms = np.linalg.norm(np.asarray(out["w"]), axis=1)
+    assert np.allclose(norms, [1.0, 0.5])        # clipped / untouched
+    assert np.asarray(keep).tolist() == [1.0, 1.0]
+
+
+def test_trimmed_mean_clamps_outliers():
+    honest = np.ones((6, 3), np.float32) + 0.1 * np.arange(6)[:, None]
+    delta = np.concatenate([honest, [[-50.] * 3], [[80.] * 3]])
+    stacked, prev = _stack(delta)
+    out, _ = screen_and_defend(get_robust_aggregator("trimmed_mean:0.25"),
+                               stacked, prev)
+    w = np.asarray(out["w"])
+    assert w.min() >= honest.min() and w.max() <= honest.max()
+    # defended mean lands inside the honest range
+    assert honest.min() <= w.mean() <= honest.max()
+
+
+def test_krum_quarantines_outlier():
+    honest = np.random.default_rng(0).normal(1.0, 0.05, (7, 4))
+    delta = np.concatenate([honest[:3], [[-40.] * 4], honest[3:]])
+    stacked, prev = _stack(delta)
+    out, keep = screen_and_defend(get_robust_aggregator("krum:0.2"),
+                                  stacked, prev)
+    keep = np.asarray(keep)
+    # multi-Krum quarantines f = round(0.2 * 8) = 2 rows, the planted
+    # outlier among them; the deltas themselves are untouched
+    assert keep[3] == 0.0 and keep.sum() == 6.0
+    assert np.allclose(np.asarray(out["w"]), delta)
+
+
+def test_quarantine_reweight_preserves_mass():
+    w = jnp.asarray([[0.5, 0.3, 0.2], [0.2, 0.2, 0.6]], jnp.float32)
+    q = jnp.asarray([1.0, 0.0, 1.0])
+    rw = np.asarray(quarantine_reweight(w, q))
+    assert np.allclose(rw[:, 1], 0.0)
+    assert np.allclose(rw.sum(axis=1), np.asarray(w).sum(axis=1))
+    # all mass quarantined: fall back to the undefended row
+    q0 = jnp.zeros(3)
+    assert np.allclose(np.asarray(quarantine_reweight(w, q0)), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# faults-off parity: the knobs' None/zero path is the clean engine, bitwise
+
+
+def test_faults_off_parity_fused(fed, model_init):
+    h0 = run(fed, model_init)
+    h1 = run(fed, model_init, faults=None, robust_agg="none",
+             min_quorum=None)
+    h2 = run(fed, model_init, faults="crash:0.0,byz:0,nan:0")
+    for h in (h1, h2):
+        assert_history_equal(h0, h)
+        assert_params_equal(h0.final_params, h.final_params)
+    assert "faults" not in h1.extra
+
+
+def test_faults_off_parity_eventful_and_async(fed, model_init):
+    e0 = run(fed, model_init, superstep=False)
+    e1 = run(fed, model_init, superstep=False, faults="none",
+             robust_agg=None)
+    assert_history_equal(e0, e1)
+    assert_params_equal(e0.final_params, e1.final_params)
+    a0 = run(fed, model_init, async_cfg=AsyncConfig(buffer_k=4))
+    a1 = run(fed, model_init, async_cfg=AsyncConfig(
+        buffer_k=4, max_retries=7, retry_backoff=3.0), faults=None)
+    assert_history_equal(a0, a1)
+    assert_params_equal(a0.final_params, a1.final_params)
+
+
+def test_faults_off_parity_paged(fed, model_init):
+    pg = PagingConfig(cohort=4, schedule=FixedCohort(list(range(4))))
+    p0 = run(fed, model_init, paging=pg)
+    p1 = run(fed, model_init, paging=pg, faults="crash:0", robust_agg="none")
+    assert_history_equal(p0, p1)
+    assert_params_equal(p0.final_params, p1.final_params)
+
+
+# ---------------------------------------------------------------------------
+# engine agreement with faults ON: the fused superstep replays the
+# eventful loop's exact key chain, so histories match bitwise
+
+
+@pytest.mark.parametrize("kw", [
+    dict(faults="byz:0.25:sign_flip", robust_agg="trimmed_mean:0.25"),
+    dict(faults="crash:0.3,nan:0.2", robust_agg="median"),
+    dict(faults="crash:0.5", min_quorum=6),
+    dict(faults="bitrot:0.3,seed:2", robust_agg="krum:0.25"),
+])
+def test_fused_matches_eventful_with_faults(fed, model_init, kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        a = run(fed, model_init, superstep=True, **kw)
+        b = run(fed, model_init, superstep=False, **kw)
+    assert_history_equal(a, b)
+    assert_params_equal(a.final_params, b.final_params)
+    assert a.extra["faults"] == b.extra["faults"]
+
+
+# ---------------------------------------------------------------------------
+# crash semantics: everyone crashing every round = nothing ever learns
+
+
+def test_all_crash_keeps_init_params(fed, model_init):
+    h = run(fed, model_init, faults="crash:1.0")
+    assert h.extra["faults"]["crashed_total"] == fed.m * FL.rounds
+    _, kinit = jax.random.split(jax.random.PRNGKey(0))
+    p0 = model_init(kinit)
+    rows = jax.tree_util.tree_leaves(h.final_params)
+    init = jax.tree_util.tree_leaves(p0)
+    for got, want in zip(rows, init):
+        # every round every row rolls back to prev; re-mixing identical
+        # rows is an identity up to float reassociation (~1 ulp/round)
+        assert np.allclose(np.asarray(got), np.asarray(want)[None],
+                           rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# screening: NaN uploads poison the run undefended, warn at eval, and are
+# quarantined + kept finite under any defense
+
+
+def test_nan_warns_undefended_and_screened_defended(fed, model_init):
+    # argmax-accuracy maps NaN logits to a finite score, so score the
+    # model by negative loss instead — THAT goes NaN when the aggregated
+    # params do, which is exactly what the eval guard must catch
+    def neg_loss(params, batch):
+        return -lenet.loss_fn(params, batch)[0]
+
+    with pytest.warns(NonFiniteEvalWarning):
+        bad = run(fed, model_init, faults="nan:1.0", acc_fn=neg_loss)
+    assert bad.extra["nonfinite_evals"] > 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", NonFiniteEvalWarning)
+        ok = run(fed, model_init, faults="nan:1.0", robust_agg="median",
+                 acc_fn=neg_loss)
+    assert np.isfinite(ok.mean_acc).all()
+    assert ok.extra["faults"]["quarantined_total"] == fed.m * FL.rounds
+    assert "nonfinite_evals" not in ok.extra
+
+
+# ---------------------------------------------------------------------------
+# Byzantine recovery: sign-flip adversaries wreck the undefended run;
+# trimmed_mean / krum recover honest-client accuracy
+
+
+@pytest.mark.parametrize("spec", ["fedavg", "ucfl_k2"])
+def test_byzantine_defense_recovers(fed, model_init, spec):
+    fl = FLConfig(rounds=8, local_steps=2, batch_size=16, eval_every=4)
+    peracc = jax.jit(jax.vmap(
+        lambda p, x, y: lenet.accuracy(p, {"x": x, "y": y})))
+
+    def honest_acc(h, byz):
+        accs = np.asarray(peracc(h.final_params, fed.x_val, fed.y_val))
+        keep = np.ones(len(accs), bool)
+        keep[list(byz)] = False
+        return float(accs[keep].mean())
+
+    clean = run(fed, model_init, spec, fl=fl)
+    atk = run(fed, model_init, spec, fl=fl, faults="byz:0.25:sign_flip")
+    byz = atk.extra["faults"]["byzantine_clients"]
+    assert len(byz) == 2
+    defended = run(fed, model_init, spec, fl=fl,
+                   faults="byz:0.25:sign_flip", robust_agg="krum:0.25")
+    c, n, d = (honest_acc(clean, byz), honest_acc(atk, byz),
+               honest_acc(defended, byz))
+    assert n < 0.6 * c          # the attack demonstrably degrades
+    assert d >= 0.9 * c         # the defense recovers
+
+
+# ---------------------------------------------------------------------------
+# quorum: below-quorum rounds move no downlink, book skipped_rounds, and
+# the model carries forward
+
+
+def test_min_quorum_skips_rounds(fed, model_init):
+    h = run(fed, model_init, faults="crash:1.0", min_quorum=1)
+    fx = h.extra["faults"]
+    assert fx["skipped_rounds"] == FL.rounds
+    assert all(c.n_streams == 0 and c.n_unicasts == 0 for c in h.comm)
+    ok = run(fed, model_init, min_quorum=fed.m)       # always met
+    base = run(fed, model_init)
+    assert_history_equal(ok, base)
+
+
+def test_min_quorum_validation(fed, model_init):
+    with pytest.raises(ValueError, match="min_quorum"):
+        run(fed, model_init, min_quorum=0)
+
+
+# ---------------------------------------------------------------------------
+# async retries: deterministic backoff, booked retries, dead clients and
+# the early-end warning when every client exhausts its cap
+
+
+def test_async_crash_retry_deterministic(fed, model_init):
+    acfg = AsyncConfig(buffer_k=4, max_retries=3, retry_backoff=0.5)
+    a = run(fed, model_init, async_cfg=acfg, faults="crash:0.3")
+    b = run(fed, model_init, async_cfg=acfg, faults="crash:0.3")
+    assert_history_equal(a, b)
+    assert_params_equal(a.final_params, b.final_params)
+    assert a.extra["faults"]["retries"] > 0
+    assert a.extra["async"]["max_retries"] == 3
+
+
+def test_async_all_crash_ends_early(fed, model_init):
+    acfg = AsyncConfig(buffer_k=4, max_retries=0)
+    with pytest.warns(RuntimeWarning, match="exhausted its crash retries"):
+        h = run(fed, model_init, async_cfg=acfg, faults="crash:1.0")
+    assert h.extra["faults"]["dead_clients"] == list(range(fed.m))
+    assert len(h.comm) == 0
+
+
+def test_pop_with_retries_backoff_ladder():
+    class FakeClock:
+        def __init__(self):
+            self.heap = [(1.0, 5)]
+            self.requeued = []
+
+        def __len__(self):
+            return len(self.heap)
+
+        def pop(self):
+            return self.heap.pop(0)
+
+        def requeue(self, c, at):
+            self.requeued.append((c, at))
+            self.heap.append((at, c))
+
+    class AlwaysCrash:
+        cfg = type("C", (), {"crash": 1.0})()
+
+        def arrival_crash(self):
+            return True
+
+    clock, meter = FakeClock(), FaultMeter(None, "none", None)
+    out = pop_with_retries(clock, AlwaysCrash(), 2, 1.0, {}, meter)
+    assert out is None                      # cap exhausted -> heap drained
+    # backoff ladder: t+1·2^0, then t'+1·2^1
+    assert clock.requeued == [(5, 2.0), (5, 4.0)]
+    assert meter.retries == 2 and meter.dead == {5}
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        AsyncConfig(max_retries=-1)
+    with pytest.raises(ValueError, match="retry_backoff"):
+        AsyncConfig(retry_backoff=0.0)
+
+
+# ---------------------------------------------------------------------------
+# verified checkpoints: crc32 envelope + atomic replace
+
+
+def test_checkpoint_roundtrip_and_corruption(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "step": 3, "name": "x"}
+    save(path, tree)
+    assert not [p for p in os.listdir(tmp_path) if ".tmp." in p]
+    out = restore(path)
+    assert out["step"] == 3 and out["name"] == "x"
+    assert np.asarray(out["w"] == tree["w"]).all()
+
+    blob = pathlib.Path(path).read_bytes()
+    # truncation
+    pathlib.Path(path).write_bytes(blob[: len(blob) // 2])
+    with pytest.raises(CheckpointCorruptError):
+        restore(path)
+    # single bit flip in the payload
+    flipped = bytearray(blob)
+    flipped[len(flipped) // 2] ^= 0x10
+    pathlib.Path(path).write_bytes(bytes(flipped))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        restore(path)
+
+
+def test_checkpoint_legacy_pre_envelope_load(tmp_path):
+    # a pre-PR9 checkpoint: the bare encoded tree, no envelope
+    path = str(tmp_path / "old.msgpack")
+    legacy = {"step": 7, "w": {"__nd__": {
+        "dtype": "float32", "shape": [2],
+        "data": np.asarray([1.5, 2.5], np.float32).tobytes()}}}
+    pathlib.Path(path).write_bytes(msgpack.packb(legacy, use_bin_type=True))
+    out = restore(path)
+    assert out["step"] == 7
+    assert np.allclose(np.asarray(out["w"]), [1.5, 2.5])
+
+
+def test_paged_resume_falls_back_past_corrupt_checkpoint(fed, model_init,
+                                                         tmp_path):
+    ck, st = str(tmp_path / "ck"), str(tmp_path / "store")
+    base = dict(cohort=4, schedule="sweep", checkpoint_dir=ck, store_dir=st)
+    kw = dict(fl=FL, model_init=model_init, system=SYSTEMS["wired"],
+              keep_state=True)
+    h_full = run_federated("fedavg", fed,
+                           paging=PagingConfig(cohort=4, schedule="sweep"),
+                           **kw)
+    run_federated("fedavg", fed, paging=PagingConfig(max_chunks=2, **base),
+                  **kw)
+    chain = paged_checkpoints(ck)
+    assert len(chain) == 2
+    # tear the NEWEST snapshot; resume must fall back to the previous one
+    with open(chain[0], "r+b") as f:
+        f.truncate(os.path.getsize(chain[0]) // 3)
+    with pytest.warns(RuntimeWarning, match="failed its integrity check"):
+        h_res = run_federated("fedavg", fed,
+                              paging=PagingConfig(resume=True, **base), **kw)
+    assert h_res.extra["paging"]["resumed_at"] == 1
+    assert_history_equal(h_res, h_full)
+    assert_params_equal(h_res.final_params, h_full.final_params)
+
+
+# ---------------------------------------------------------------------------
+# CLI validation: typos die at parse time with pointed errors
+
+
+@pytest.mark.parametrize("argv", [
+    ["--faults", "crash:2.0"],
+    ["--faults", "gamma:0.1"],
+    ["--robust-agg", "huber"],
+    ["--robust-agg", "trimmed_mean:0.9"],
+    ["--min-quorum", "0"],
+    ["--max-retries", "-1"],
+    ["--retry-backoff", "0"],
+])
+def test_train_cli_rejects_bad_fault_flags(argv, capsys):
+    from repro.launch.train import main
+    with pytest.raises(SystemExit) as e:
+        main(argv)
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert argv[0] in err

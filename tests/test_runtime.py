@@ -127,6 +127,7 @@ def test_async_records_event_metadata(fed):
                                 "staleness_schedule": "exp",
                                 "staleness_discount": 0.8,
                                 "staleness_alpha": 0.5,
+                                "max_retries": 3, "retry_backoff": 1.0,
                                 "events": SMALL.rounds}
 
 
